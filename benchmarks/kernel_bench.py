@@ -1,0 +1,41 @@
+"""Pallas kernel micro-benchmarks (interpret mode — semantics timing only;
+the derived column reports the oracle-match rate which is the real check)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.util import row, time_fn
+from repro.core import ftree
+from repro.kernels.ftree_sample import ftree_sample
+from repro.kernels.ftree_sample.ref import ftree_sample_ref
+from repro.kernels.lda_scores import lda_scores_draw
+from repro.kernels.lda_scores.ref import lda_scores_draw_ref
+
+
+def run(T: int = 1024, n: int = 4096) -> list[str]:
+    rng = np.random.default_rng(0)
+    p = jnp.asarray(rng.random(T).astype(np.float32) + 0.01)
+    F = ftree.build(p)
+    u = jnp.asarray(rng.random(n).astype(np.float32))
+
+    z_k = ftree_sample(F, u)
+    z_r = ftree_sample_ref(F, u)
+    match = float((np.asarray(z_k) == np.asarray(z_r)).mean())
+    t = time_fn(lambda: ftree_sample(F, u), warmup=1, iters=3)
+    out = [row("kernels/ftree_sample", t * 1e6 / n,
+               f"oracle_match={match:.4f}")]
+
+    ntd = jnp.asarray(rng.integers(0, 8, (n, T)).astype(np.int32))
+    nwt = jnp.asarray(rng.integers(0, 20, (n, T)).astype(np.int32))
+    nt = jnp.asarray(rng.integers(20, 500, T).astype(np.int32))
+    kw = dict(alpha=0.05, beta=0.01, beta_bar=51.2)
+    zk, nk = lda_scores_draw(ntd, nwt, nt, u, **kw)
+    zr, nr = lda_scores_draw_ref(ntd, nwt, nt, u, **kw)
+    match = float((np.asarray(zk) == np.asarray(zr)).mean())
+    t = time_fn(lambda: lda_scores_draw(ntd, nwt, nt, u, **kw),
+                warmup=1, iters=3)
+    out.append(row("kernels/lda_scores_fused", t * 1e6 / n,
+                   f"oracle_match={match:.4f}"))
+    return out

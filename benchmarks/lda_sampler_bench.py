@@ -1,0 +1,60 @@
+"""Paper Table 2 / Fig. 4c-d: per-token LDA sampling cost by method.
+
+Runs one sweep of each LDA sampler on the same synthetic corpus and reports
+µs/token plus the speedup over the naive dense reference (Fig. 4's y-axis
+is 'speedup over the normal LDA implementation which takes O(T) time')."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.util import row, time_fn
+from repro.core import cgs
+from repro.core.alias_lda import sweep_alias_lda
+from repro.core.sparse_lda import sweep_sparse_lda
+from repro.data import synthetic
+
+
+def run(T: int = 64, num_docs: int = 300, seed: int = 0) -> list[str]:
+    corpus, _, _ = synthetic.make_corpus(
+        num_docs=num_docs, vocab_size=512, num_topics=T,
+        mean_doc_len=50.0, seed=seed)
+    alpha, beta = 50.0 / T, 0.01
+    doc_ids = jnp.asarray(corpus.doc_ids)
+    word_ids = jnp.asarray(corpus.word_ids)
+    N = corpus.num_tokens
+
+    dorder_np = corpus.doc_order()
+    dorder = jnp.asarray(dorder_np)
+    dbound = jnp.asarray(np.concatenate(
+        [[True], corpus.doc_ids[dorder_np][1:]
+         != corpus.doc_ids[dorder_np][:-1]]))
+    worder_np = corpus.word_order()
+    worder = jnp.asarray(worder_np)
+    wbound = jnp.asarray(corpus.word_boundary(worder_np))
+
+    state0 = cgs.init_state(corpus, T, jax.random.key(0))
+
+    sweeps = {
+        "reference_dense": jax.jit(lambda s: cgs.sweep_reference(
+            s, doc_ids, word_ids, dorder, alpha, beta)),
+        "fplda_word": jax.jit(lambda s: cgs.sweep_fplda_word(
+            s, doc_ids, word_ids, worder, wbound, alpha, beta)),
+        "fplda_doc": jax.jit(lambda s: cgs.sweep_fplda_doc(
+            s, doc_ids, word_ids, dorder, dbound, alpha, beta)),
+        "sparse_lda": jax.jit(lambda s: sweep_sparse_lda(
+            s, doc_ids, word_ids, dorder, alpha, beta)),
+        "alias_lda": jax.jit(lambda s: sweep_alias_lda(
+            s, doc_ids, word_ids, dorder, alpha, beta)),
+    }
+
+    out = []
+    base = None
+    for name, fn in sweeps.items():
+        t = time_fn(fn, state0, warmup=1, iters=3) / N
+        if name == "reference_dense":
+            base = t
+        out.append(row(f"table2/{name}", t * 1e6,
+                       f"speedup_vs_dense={base / t:.2f}x"))
+    return out

@@ -1,0 +1,42 @@
+"""Roofline table from the dry-run reports (spec: ROOFLINE ANALYSIS).
+
+Reads reports/dryrun/*.json, prints the three terms per (arch × shape ×
+mesh), the dominant bottleneck, MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D
+(MoE), and the useful-compute ratio MODEL_FLOPS / (chips × HLO_FLOPs)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.util import row
+from repro.roofline.analysis import model_flops
+
+REPORTS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "reports", "dryrun")
+
+
+def run() -> list[str]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(REPORTS, "*.json"))):
+        rep = json.load(open(path))
+        tag = f"{rep['arch']}__{rep['shape']}__{rep['mesh']}"
+        if "error" in rep:
+            out.append(row(f"roofline/{tag}", -1.0, "ERROR"))
+            continue
+        if "skipped" in rep:
+            out.append(row(f"roofline/{tag}", 0.0,
+                           "SKIP:" + rep["skipped"][:60]))
+            continue
+        terms = rep["roofline_seconds"]
+        mf = model_flops(rep["arch"], rep["shape"])
+        hlo_global = rep["hlo_flops_per_device"] * rep["chips"]
+        ratio = mf / hlo_global if hlo_global else 0.0
+        dominant = rep["bottleneck"]
+        out.append(row(
+            f"roofline/{tag}", terms[dominant] * 1e6,
+            f"bottleneck={dominant};compute={terms['compute']:.2e}s;"
+            f"memory={terms['memory']:.2e}s;"
+            f"collective={terms['collective']:.2e}s;"
+            f"useful_flops_ratio={ratio:.2f}"))
+    return out

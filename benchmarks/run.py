@@ -1,0 +1,51 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Sections:
+    table1/…   sampler complexity (paper Table 1)
+    table2/…   LDA per-token cost by method (paper Table 2, Fig 4c-d)
+    fig4/…     convergence per sampler (paper Fig 4a-b)
+    fig5/…     multicore nomad scaling (paper Fig 5)
+    kernels/…  Pallas kernel oracle checks
+    roofline/… (arch × shape × mesh) roofline terms from the dry-run
+
+Env: REPRO_BENCH_FAST=1 skips the slow multi-device section.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import traceback
+
+
+def main() -> None:
+    sections = []
+    from benchmarks import (bucket_bench, convergence_bench, kernel_bench,
+                            lda_sampler_bench, roofline_bench,
+                            sampler_bench)
+    sections = [
+        ("table1", sampler_bench.run),
+        ("table2", lda_sampler_bench.run),
+        ("fig4", convergence_bench.run),
+        ("sec3.3", bucket_bench.run),
+        ("kernels", kernel_bench.run),
+        ("roofline", roofline_bench.run),
+    ]
+    if not os.environ.get("REPRO_BENCH_FAST"):
+        from benchmarks import scaling_bench
+        sections.append(("fig5", scaling_bench.run))
+
+    print("name,us_per_call,derived")
+    ok = True
+    for name, fn in sections:
+        try:
+            for line in fn():
+                print(line, flush=True)
+        except Exception:  # noqa: BLE001
+            ok = False
+            print(f"{name}/ERROR,-1,{traceback.format_exc(limit=2)!r}",
+                  flush=True)
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

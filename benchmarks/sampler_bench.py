@@ -1,0 +1,72 @@
+"""Paper Table 1: multinomial sampler complexity comparison.
+
+Measures µs/op for init / generation / parameter-update of the four
+samplers across a T sweep, and verifies the asymptotic *shape*: F+tree
+update cost must stay flat-ish (log T) while BSearch/Alias updates grow
+linearly.  Derived column reports the T=4096/T=256 cost ratio — ~1 for
+log-time ops, ~16 for linear ones.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.util import row, time_fn
+from repro.core import samplers
+
+T_SWEEP = [256, 1024, 4096]
+N_DRAWS = 4096
+
+
+def _mk_p(T):
+    return jnp.asarray(np.random.default_rng(T).random(T).astype(np.float32)
+                       + 0.01)
+
+
+def run() -> list[str]:
+    out = []
+    results = {}
+    for T in T_SWEEP:
+        p = _mk_p(T)
+        u = jnp.asarray(np.random.default_rng(1).random(N_DRAWS)
+                        .astype(np.float32))
+        ts = jnp.asarray(np.random.default_rng(2).integers(0, T, N_DRAWS)
+                         .astype(np.int32))
+        ds = jnp.asarray((np.random.default_rng(3).random(N_DRAWS) * 0.1)
+                         .astype(np.float32))
+
+        for name, (init, draw, update) in samplers.SAMPLERS.items():
+            init_j = jax.jit(init)
+            state = jax.block_until_ready(init_j(p))
+            t_init = time_fn(init_j, p)
+
+            draw_j = jax.jit(lambda st, uu: jax.vmap(
+                lambda x: draw(st, x))(uu))
+            t_draw = time_fn(draw_j, state, u) / N_DRAWS
+
+            if name == "alias":
+                # Θ(T) rebuild is the update (paper Table 1)
+                upd_j = jax.jit(lambda pp: init(pp))
+                t_upd = time_fn(upd_j, p)
+            else:
+                def many(st, ts, ds):
+                    def body(st, td):
+                        return update(st, td[0], td[1]), None
+                    return jax.lax.scan(body, st, (ts, ds))[0]
+                upd_j = jax.jit(many)
+                t_upd = time_fn(upd_j, state, ts, ds) / N_DRAWS
+
+            results[(name, T, "init")] = t_init
+            results[(name, T, "draw")] = t_draw
+            results[(name, T, "update")] = t_upd
+
+    lo, hi = T_SWEEP[0], T_SWEEP[-1]
+    for name in samplers.SAMPLERS:
+        for op in ("init", "draw", "update"):
+            us = results[(name, hi, op)] * 1e6
+            ratio = results[(name, hi, op)] / max(results[(name, lo, op)],
+                                                  1e-12)
+            out.append(row(f"table1/{name}/{op}/T{hi}", us,
+                           f"T{hi}/T{lo}_ratio={ratio:.2f}"))
+    return out

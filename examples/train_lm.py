@@ -1,0 +1,60 @@
+"""Train a small LM with the framework's neural substrate.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200]
+Uses a reduced qwen3-family config (~15M params) on synthetic token data;
+demonstrates the train_step / optimizer / checkpoint path the dry-run
+lowers at production scale.  Loss must decrease.
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.train import checkpoint
+from repro.train.train_step import init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt", default="/tmp/repro_lm_ckpt.npz")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).smoke()
+    cfg = dataclasses.replace(cfg, num_layers=4, d_model=256, d_ff=1024,
+                              vocab_size=2048)
+    state = init_train_state(cfg, jax.random.key(0))
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(state.params))
+    print(f"arch {cfg.name}: {n_params / 1e6:.1f}M params")
+
+    step = jax.jit(make_train_step(cfg, lr=3e-4, remat=False))
+
+    # synthetic data with learnable structure (bigram-ish chains)
+    key = jax.random.key(1)
+    t0 = time.time()
+    first = last = None
+    for it in range(args.steps):
+        key, k1 = jax.random.split(key)
+        start = jax.random.randint(k1, (args.batch, 1), 0, cfg.vocab_size)
+        ramp = (start + jnp.arange(args.seq)[None, :] * 7) % cfg.vocab_size
+        state, metrics = step(state, {"tokens": ramp})
+        if first is None:
+            first = float(metrics["loss"])
+        last = float(metrics["loss"])
+        if (it + 1) % 25 == 0:
+            print(f"step {it + 1:4d}  loss {last:.4f}  "
+                  f"gnorm {float(metrics['grad_norm']):.2f}")
+    print(f"loss {first:.3f} -> {last:.3f} in {time.time() - t0:.0f}s")
+    checkpoint.save(args.ckpt, state.params)
+    print(f"checkpoint at {args.ckpt}")
+    assert last < first, "training must reduce loss"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Core: the paper's contribution — F+tree sampling and Nomad-distributed CGS."""
+from repro.core import ftree  # noqa: F401
+from repro.core.cgs import (  # noqa: F401
+    LDAState, counts_from_assignments, init_state,
+    sweep_fplda_doc, sweep_fplda_word, sweep_reference,
+)
+from repro.core.likelihood import log_likelihood, per_token_ll  # noqa: F401

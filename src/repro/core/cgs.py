@@ -1,0 +1,275 @@
+"""Collapsed Gibbs Sampling for LDA (paper §2.1, §3.2).
+
+State layout (the paper's count tables, eq. (1)):
+
+    z     (N,)   int32  current topic assignment per occurrence
+    n_td  (I,T)  int32  doc-topic counts        (paper n_{t,d,*}; node d_i)
+    n_wt  (J,T)  int32  word-topic counts       (paper n_{t,*,w}; node w_j)
+    n_t   (T,)   int32  global topic counts     (paper n_{t,*,*}; node s)
+
+Sweeps (all exact CGS — they sample from the same conditional (2)):
+
+    sweep_reference   dense vectorized conditional, any token order — the
+                      oracle every other implementation is tested against.
+    sweep_fplda_word  Algorithm 3: word-by-word order, p = α·q + r with
+                      q_t=(n_wt+β)/(n_t+β̄) kept in an F+tree (O(log T)
+                      maintenance) and r_t=n_td·q_t drawn by BSearch.
+    sweep_fplda_doc   the doc-by-doc twin (decomposition (4)).
+
+All sweeps run as a single ``lax.scan`` over occurrences inside jit: the
+Gibbs chain is honoured exactly (each step sees all previous updates).
+
+TPU adaptation note (DESIGN.md §3): the r-term and boundary rebuilds are
+computed as dense length-T vector ops (VPU-friendly); the O(log T) F+tree
+path operations are kept for the q-term exactly as in Alg. 3, and the
+abstract op-count accounting (what Table 1/2 claim) is reported by
+``benchmarks/sampler_bench.py``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import ftree
+from repro.data.corpus import Corpus
+
+__all__ = [
+    "LDAState", "init_state", "counts_from_assignments", "check_invariants",
+    "sweep_reference", "sweep_fplda_word", "sweep_fplda_doc",
+    "conditional_probs",
+]
+
+
+class LDAState(NamedTuple):
+    z: jax.Array       # (N,)  int32
+    n_td: jax.Array    # (I,T) int32
+    n_wt: jax.Array    # (J,T) int32
+    n_t: jax.Array     # (T,)  int32
+    key: jax.Array     # PRNG key for the chain
+
+
+def counts_from_assignments(doc_ids, word_ids, z, I, J, T):
+    """Rebuild the three count tables from z (Θ(N) segment sums)."""
+    z = z.astype(jnp.int32)
+    n_td = jnp.zeros((I, T), jnp.int32).at[doc_ids, z].add(1)
+    n_wt = jnp.zeros((J, T), jnp.int32).at[word_ids, z].add(1)
+    n_t = jnp.zeros((T,), jnp.int32).at[z].add(1)
+    return n_td, n_wt, n_t
+
+
+def init_state(corpus: Corpus, T: int, key: jax.Array) -> LDAState:
+    """Random uniform topic init — the standard CGS start."""
+    key, sub = jax.random.split(key)
+    z = jax.random.randint(sub, (corpus.num_tokens,), 0, T, dtype=jnp.int32)
+    doc_ids = jnp.asarray(corpus.doc_ids)
+    word_ids = jnp.asarray(corpus.word_ids)
+    n_td, n_wt, n_t = counts_from_assignments(
+        doc_ids, word_ids, z, corpus.num_docs, corpus.num_words, T)
+    return LDAState(z=z, n_td=n_td, n_wt=n_wt, n_t=n_t, key=key)
+
+
+def check_invariants(state: LDAState, corpus: Corpus) -> dict:
+    """Count-table consistency (DESIGN.md §8). Returns violation counts."""
+    I, T = state.n_td.shape
+    J = state.n_wt.shape[0]
+    n_td, n_wt, n_t = counts_from_assignments(
+        jnp.asarray(corpus.doc_ids), jnp.asarray(corpus.word_ids),
+        state.z, I, J, T)
+    return {
+        "n_td_mismatch": int(jnp.abs(n_td - state.n_td).sum()),
+        "n_wt_mismatch": int(jnp.abs(n_wt - state.n_wt).sum()),
+        "n_t_mismatch": int(jnp.abs(n_t - state.n_t).sum()),
+        "negatives": int((state.n_td < 0).sum() + (state.n_wt < 0).sum()
+                         + (state.n_t < 0).sum()),
+        "z_range": int(((state.z < 0) | (state.z >= T)).sum()),
+    }
+
+
+def conditional_probs(n_td_row, n_wt_row, n_t, alpha, beta, beta_bar):
+    """Unnormalized CGS conditional p_t (paper eq. (2)/(4))."""
+    return ((n_td_row.astype(jnp.float32) + alpha)
+            * (n_wt_row.astype(jnp.float32) + beta)
+            / (n_t.astype(jnp.float32) + beta_bar))
+
+
+def _inverse_cdf_draw(p: jax.Array, u01: jax.Array) -> jax.Array:
+    """z = min{t : cumsum(p)_t > u01 * Σp} — the LSearch/BSearch reference."""
+    c = jnp.cumsum(p)
+    u = u01 * c[-1]
+    return jnp.sum(c <= u).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Reference sweep — dense conditional, exact chain, any order.
+# ---------------------------------------------------------------------------
+def sweep_reference(state: LDAState, doc_ids, word_ids, order,
+                    alpha: float, beta: float) -> LDAState:
+    """One full Gibbs sweep over `order`; the pure-jnp oracle (Θ(N·T))."""
+    T = state.n_t.shape[0]
+    beta_bar = beta * state.n_wt.shape[0]
+    key, sweep_key = jax.random.split(state.key)
+    u = jax.random.uniform(sweep_key, (order.shape[0],))
+
+    def step(carry, inp):
+        z, n_td, n_wt, n_t = carry
+        k, u01 = inp
+        d, w, t_old = doc_ids[k], word_ids[k], z[k]
+        n_td = n_td.at[d, t_old].add(-1)
+        n_wt = n_wt.at[w, t_old].add(-1)
+        n_t = n_t.at[t_old].add(-1)
+        p = conditional_probs(n_td[d], n_wt[w], n_t, alpha, beta, beta_bar)
+        t_new = _inverse_cdf_draw(p, u01)
+        n_td = n_td.at[d, t_new].add(1)
+        n_wt = n_wt.at[w, t_new].add(1)
+        n_t = n_t.at[t_new].add(1)
+        z = z.at[k].set(t_new)
+        return (z, n_td, n_wt, n_t), None
+
+    (z, n_td, n_wt, n_t), _ = lax.scan(
+        step, (state.z, state.n_td, state.n_wt, state.n_t), (order, u))
+    return LDAState(z=z, n_td=n_td, n_wt=n_wt, n_t=n_t, key=key)
+
+
+# ---------------------------------------------------------------------------
+# F+LDA word-by-word — Algorithm 3.
+# ---------------------------------------------------------------------------
+def sweep_fplda_word(state: LDAState, doc_ids, word_ids, order, boundary,
+                     alpha: float, beta: float) -> LDAState:
+    """Paper Algorithm 3.  Tokens arrive sorted by word; ``boundary[k]`` marks
+    the first occurrence of a new vocabulary item.
+
+    Decomposition (5): p_t = α·q_t + r_t,  q_t=(n_wt+β)/(n_t+β̄),  r_t=n_td·q_t.
+    The F+tree carries q; per-token maintenance is two O(log T) ``set_leaf``
+    calls (the Alg. 3 F.update lines).  At a word boundary the tree is rebuilt
+    for the incoming word — the dense-vectorized form of the paper's
+    ``F.update(t, ±n_tw/(n_t+β̄)) ∀t∈T_w`` enter/exit updates (equal result;
+    DESIGN.md §3 explains the VPU trade).
+    """
+    T = state.n_t.shape[0]
+    Tp = 1 << (T - 1).bit_length()
+    if Tp != T:
+        raise ValueError("T must be a power of two for the F+tree sweep")
+    beta_bar = beta * state.n_wt.shape[0]
+    key, sweep_key = jax.random.split(state.key)
+    u = jax.random.uniform(sweep_key, (order.shape[0],))
+
+    f32 = jnp.float32
+
+    def q_dense(n_wt_row, n_t):
+        return (n_wt_row.astype(f32) + beta) / (n_t.astype(f32) + beta_bar)
+
+    F0 = ftree.build(q_dense(state.n_wt[word_ids[order[0]]], state.n_t))
+
+    def step(carry, inp):
+        z, n_td, n_wt, n_t, F = carry
+        k, u01, is_boundary = inp
+        d, w, t_old = doc_ids[k], word_ids[k], z[k]
+
+        # Word boundary: rebuild the tree for the incoming word's q vector.
+        F = lax.cond(is_boundary,
+                     lambda: ftree.build(q_dense(n_wt[w], n_t)),
+                     lambda: F)
+
+        # --- decrement (Alg. 3 inner loop) --------------------------------
+        n_td = n_td.at[d, t_old].add(-1)
+        n_wt = n_wt.at[w, t_old].add(-1)
+        n_t = n_t.at[t_old].add(-1)
+        F = ftree.set_leaf(F, t_old,
+                           (n_wt[w, t_old].astype(f32) + beta)
+                           / (n_t[t_old].astype(f32) + beta_bar))
+
+        # --- two-level draw (6): p = α·q + r -------------------------------
+        q = ftree.leaves(F)
+        r = n_td[d].astype(f32) * q          # |T_d|-sparse in exact arithmetic
+        c = jnp.cumsum(r)
+        r_mass = c[-1]
+        norm = alpha * ftree.total(F) + r_mass
+        u_scaled = u01 * norm
+        in_r = u_scaled < r_mass
+        t_r = jnp.sum(c <= u_scaled).astype(jnp.int32)      # BSearch on r
+        t_q = ftree.sample(F, jnp.clip((u_scaled - r_mass)
+                                       / (alpha * ftree.total(F)),
+                                       0.0, 1.0 - 1e-7))     # F.sample on q
+        t_new = jnp.where(in_r, t_r, t_q)
+
+        # --- increment ------------------------------------------------------
+        n_td = n_td.at[d, t_new].add(1)
+        n_wt = n_wt.at[w, t_new].add(1)
+        n_t = n_t.at[t_new].add(1)
+        F = ftree.set_leaf(F, t_new,
+                           (n_wt[w, t_new].astype(f32) + beta)
+                           / (n_t[t_new].astype(f32) + beta_bar))
+        z = z.at[k].set(t_new)
+        return (z, n_td, n_wt, n_t, F), None
+
+    carry0 = (state.z, state.n_td, state.n_wt, state.n_t, F0)
+    (z, n_td, n_wt, n_t, _), _ = lax.scan(
+        step, carry0, (order, u, boundary))
+    return LDAState(z=z, n_td=n_td, n_wt=n_wt, n_t=n_t, key=key)
+
+
+# ---------------------------------------------------------------------------
+# F+LDA doc-by-doc — decomposition (4).
+# ---------------------------------------------------------------------------
+def sweep_fplda_doc(state: LDAState, doc_ids, word_ids, order, boundary,
+                    alpha: float, beta: float) -> LDAState:
+    """Doc-by-doc F+LDA: p_t = β·q_t + r_t with q_t=(n_td+α)/(n_t+β̄) in the
+    F+tree and r_t = n_wt·q_t drawn by BSearch.  ``boundary`` marks the first
+    token of each document."""
+    T = state.n_t.shape[0]
+    beta_bar = beta * state.n_wt.shape[0]
+    key, sweep_key = jax.random.split(state.key)
+    u = jax.random.uniform(sweep_key, (order.shape[0],))
+    f32 = jnp.float32
+
+    def q_dense(n_td_row, n_t):
+        return (n_td_row.astype(f32) + alpha) / (n_t.astype(f32) + beta_bar)
+
+    F0 = ftree.build(q_dense(state.n_td[doc_ids[order[0]]], state.n_t))
+
+    def step(carry, inp):
+        z, n_td, n_wt, n_t, F = carry
+        k, u01, is_boundary = inp
+        d, w, t_old = doc_ids[k], word_ids[k], z[k]
+
+        F = lax.cond(is_boundary,
+                     lambda: ftree.build(q_dense(n_td[d], n_t)),
+                     lambda: F)
+
+        n_td = n_td.at[d, t_old].add(-1)
+        n_wt = n_wt.at[w, t_old].add(-1)
+        n_t = n_t.at[t_old].add(-1)
+        F = ftree.set_leaf(F, t_old,
+                           (n_td[d, t_old].astype(f32) + alpha)
+                           / (n_t[t_old].astype(f32) + beta_bar))
+
+        q = ftree.leaves(F)
+        r = n_wt[w].astype(f32) * q
+        c = jnp.cumsum(r)
+        r_mass = c[-1]
+        norm = beta * ftree.total(F) + r_mass
+        u_scaled = u01 * norm
+        in_r = u_scaled < r_mass
+        t_r = jnp.sum(c <= u_scaled).astype(jnp.int32)
+        t_q = ftree.sample(F, jnp.clip((u_scaled - r_mass)
+                                       / (beta * ftree.total(F)),
+                                       0.0, 1.0 - 1e-7))
+        t_new = jnp.where(in_r, t_r, t_q)
+
+        n_td = n_td.at[d, t_new].add(1)
+        n_wt = n_wt.at[w, t_new].add(1)
+        n_t = n_t.at[t_new].add(1)
+        F = ftree.set_leaf(F, t_new,
+                           (n_td[d, t_new].astype(f32) + alpha)
+                           / (n_t[t_new].astype(f32) + beta_bar))
+        z = z.at[k].set(t_new)
+        return (z, n_td, n_wt, n_t, F), None
+
+    carry0 = (state.z, state.n_td, state.n_wt, state.n_t, F0)
+    (z, n_td, n_wt, n_t, _), _ = lax.scan(
+        step, carry0, (order, u, boundary))
+    return LDAState(z=z, n_td=n_td, n_wt=n_wt, n_t=n_t, key=key)

@@ -1,0 +1,100 @@
+"""Held-out evaluation: document-completion perplexity.
+
+The paper evaluates training log-likelihood (§5, following Yahoo!LDA); the
+standard complementary check in the LDA literature is document completion:
+hold out a set of documents, estimate each held-out document's θ from the
+first half of its tokens (Gibbs with the trained φ frozen), then score the
+second half:
+
+    perplexity = exp( − Σ log p(w | θ̂, φ̂) / N_second_half )
+
+φ̂ is the posterior mean from the trained counts:
+    φ̂_tw = (n_wt + β) / (n_t + Jβ)
+θ̂ from the fold-in counts:  θ̂_dt = (n_td + α) / (n_d + Tα).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.data.corpus import Corpus
+
+__all__ = ["document_completion_perplexity", "fold_in"]
+
+
+def _phi_hat(n_wt, n_t, beta):
+    J = n_wt.shape[0]
+    return ((n_wt.astype(jnp.float32) + beta)
+            / (n_t.astype(jnp.float32)[None, :] + J * beta))  # (J,T)
+
+
+def fold_in(word_ids, doc_ids, num_docs, phi, alpha, key, sweeps: int = 20):
+    """Gibbs fold-in with φ frozen: sample z for held-out tokens, return
+    per-doc topic counts.  word_ids/doc_ids: (N,) held-out first halves."""
+    N = word_ids.shape[0]
+    T = phi.shape[1]
+    key, sub = jax.random.split(key)
+    z = jax.random.randint(sub, (N,), 0, T, dtype=jnp.int32)
+    n_td = jnp.zeros((num_docs, T), jnp.int32).at[doc_ids, z].add(1)
+
+    def sweep(carry, k):
+        z, n_td = carry
+        u = jax.random.uniform(jax.random.fold_in(key, k), (N,))
+
+        def step(c, inp):
+            z, n_td = c
+            i, u01 = inp
+            d, w, t_old = doc_ids[i], word_ids[i], z[i]
+            n_td = n_td.at[d, t_old].add(-1)
+            p = (n_td[d].astype(jnp.float32) + alpha) * phi[w]
+            cdf = jnp.cumsum(p)
+            t_new = jnp.sum(cdf <= u01 * cdf[-1]).astype(jnp.int32)
+            t_new = jnp.clip(t_new, 0, T - 1)
+            n_td = n_td.at[d, t_new].add(1)
+            z = z.at[i].set(t_new)
+            return (z, n_td), None
+
+        (z, n_td), _ = lax.scan(step, (z, n_td),
+                                (jnp.arange(N, dtype=jnp.int32), u))
+        return (z, n_td), None
+
+    (z, n_td), _ = lax.scan(sweep, (z, n_td),
+                            jnp.arange(sweeps, dtype=jnp.int32))
+    return n_td
+
+
+def document_completion_perplexity(
+        heldout: Corpus, n_wt, n_t, *, alpha: float, beta: float,
+        key=None, fold_sweeps: int = 20) -> float:
+    """Split each held-out doc's tokens in half (alternating positions),
+    fold in on the first half, score the second half."""
+    key = jax.random.key(0) if key is None else key
+    phi = _phi_hat(jnp.asarray(n_wt), jnp.asarray(n_t), beta)   # (J,T)
+    T = phi.shape[1]
+
+    order = heldout.doc_order()
+    doc_sorted = heldout.doc_ids[order]
+    # alternate within each document: even position → estimation half
+    pos_in_doc = np.zeros_like(order)
+    counts: dict[int, int] = {}
+    for idx, d in enumerate(doc_sorted):
+        c = counts.get(d, 0)
+        pos_in_doc[idx] = c
+        counts[d] = c + 1
+    first = (pos_in_doc % 2 == 0)
+    est_idx, score_idx = order[first], order[~first]
+
+    n_td = fold_in(jnp.asarray(heldout.word_ids[est_idx]),
+                   jnp.asarray(heldout.doc_ids[est_idx]),
+                   heldout.num_docs, phi, alpha, key, fold_sweeps)
+    n_d = n_td.sum(1, keepdims=True)
+    theta = ((n_td.astype(jnp.float32) + alpha)
+             / (n_d.astype(jnp.float32) + T * alpha))           # (I,T)
+
+    w = jnp.asarray(heldout.word_ids[score_idx])
+    d = jnp.asarray(heldout.doc_ids[score_idx])
+    p_tok = jnp.einsum("nt,nt->n", theta[d], phi[w])
+    ll = jnp.log(jnp.maximum(p_tok, 1e-30)).sum()
+    return float(jnp.exp(-ll / max(len(score_idx), 1)))

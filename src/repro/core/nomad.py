@@ -1,0 +1,395 @@
+"""Nomad-distributed F+LDA on a JAX device mesh (paper §4).
+
+The paper's nomadic framework, mapped to SPMD TPU semantics (DESIGN.md §3):
+
+* **Word tokens** τ_j: the word-topic count blocks ``n_wt[b]`` are the
+  nomadic payloads.  ``W`` workers form a flat ring over the whole mesh;
+  blocks hop one position per round via ``lax.ppermute``.  In round ``r``
+  worker ``w`` owns block ``(w + r) % B`` and performs the unit subtasks
+  (all occurrences of that block's words in its document shard) with the
+  word counts **always exact and conflict-free** — the paper's key invariant.
+
+* **The s token** τ_s: the only globally shared state is ``s = n_t`` (size
+  T).  Three synchronization modes:
+
+    - ``"stoken"``   (paper-faithful): one authoritative ``s`` vector rides
+      the same ring; each worker keeps a working copy ``s_l`` and folds its
+      accumulated delta in when the token passes (Alg. 4: s += s_l − s̄).
+      Staleness ≤ W−1 rounds, exactly the paper's bound.
+    - ``"stale"``    (AD-LDA-like): no intra-sweep sync; deltas psum at
+      sweep end.  Staleness = 1 sweep.
+    - ``"allreduce"``(beyond-paper): psum the cumulative deltas every round.
+      Staleness ≤ 1 round; costs one (T,) all-reduce per round — cheap on
+      ICI, impossible on the paper's commodity cluster.
+
+  Every mode finishes the sweep with an **exact** ``n_t`` (additivity of
+  s — the paper's observation), so count invariants hold at sweep
+  boundaries regardless of mode.
+
+* **Documents** never move (paper: "keep the ownership of d_i").
+  ``n_td`` is sharded by worker; ``z`` is sharded with its token cells.
+
+The per-round compute is the word-by-word F+LDA cell sweep (Alg. 3) over the
+padded cell, with the same F+tree q-term maintenance as the serial version.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax import shard_map
+
+from repro.core import ftree
+from repro.data.sharding import NomadLayout
+
+__all__ = ["NomadLDA", "nomad_sweep_fn"]
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Ring topology helpers (flat ring over possibly-multiple mesh axes).
+# ---------------------------------------------------------------------------
+def _flat_index(axes: Sequence[str], sizes: Sequence[int]):
+    idx = jnp.zeros((), jnp.int32)
+    for ax, sz in zip(axes, sizes):
+        idx = idx * sz + lax.axis_index(ax)
+    return idx
+
+
+def _ring_shift_down(x, axes: Sequence[str], sizes: Sequence[int]):
+    """Move value from flat-ring position i+1 to position i (blocks travel
+    toward lower worker index, so worker w picks up block w+r+1 next round).
+
+    For a single axis this is one ppermute; with a leading 'pod' axis the
+    wrap-around element additionally hops across pods (DESIGN.md §4).
+    """
+    inner = axes[-1]
+    n_inner = sizes[-1]
+    perm = [(i, (i - 1) % n_inner) for i in range(n_inner)]
+    x_w = lax.ppermute(x, inner, perm)
+    if len(axes) == 1:
+        return x_w
+    # multi-axis: the element that wrapped within the pod actually belongs
+    # to the previous pod's boundary worker — fix it with a pod-axis hop.
+    outer = axes[0]
+    n_outer = sizes[0]
+    perm_o = [(p, (p - 1) % n_outer) for p in range(n_outer)]
+    x_pw = lax.ppermute(x_w, outer, perm_o)
+    at_boundary = lax.axis_index(inner) == n_inner - 1
+    return jax.tree_util.tree_map(
+        lambda a, b: jnp.where(at_boundary, b, a), x_w, x_pw)
+
+
+# ---------------------------------------------------------------------------
+# Per-cell word-by-word F+LDA sweep (Alg. 3 with masking + local indices).
+# ---------------------------------------------------------------------------
+def _cell_sweep(tok_doc, tok_wrd, tok_valid, tok_bound, z_cell,
+                n_td, n_wt, n_t, u, alpha, beta, beta_bar):
+    """Exact CGS over one padded cell.
+
+    tok_* / z_cell / u: (L,); n_td: (I,T) int32 (local docs); n_wt: (J,T)
+    int32 (current block, local words); n_t: (T,) int32 (worker's working
+    copy — possibly stale).  Returns updated (z_cell, n_td, n_wt, n_t).
+    """
+    T = n_t.shape[-1]
+
+    def q_of(n_wt_row, n_t):
+        return (n_wt_row.astype(F32) + beta) / (n_t.astype(F32) + beta_bar)
+
+    def q_at(n_wt, n_t, w, t):
+        return ((n_wt[w, t].astype(F32) + beta)
+                / (n_t[t].astype(F32) + beta_bar))
+
+    F0 = jnp.zeros((2 * T,), F32)  # rebuilt at the first boundary token
+
+    def step(carry, inp):
+        z_cell, n_td, n_wt, n_t, F = carry
+        k, u01 = inp
+        d, w = tok_doc[k], tok_wrd[k]
+        valid, boundary = tok_valid[k], tok_bound[k]
+        t_old = z_cell[k]
+        one = valid.astype(jnp.int32)
+
+        F = lax.cond(boundary, lambda: ftree.build(q_of(n_wt[w], n_t)),
+                     lambda: F)
+
+        # decrement (masked)
+        n_td = n_td.at[d, t_old].add(-one)
+        n_wt = n_wt.at[w, t_old].add(-one)
+        n_t = n_t.at[t_old].add(-one)
+        new_leaf = q_at(n_wt, n_t, w, t_old)
+        F = ftree.set_leaf(F, t_old, jnp.where(valid, new_leaf, F[T + t_old]))
+
+        # two-level draw p = α·q + r (eq. (6))
+        q = ftree.leaves(F)
+        r = n_td[d].astype(F32) * q
+        c = jnp.cumsum(r)
+        r_mass = c[-1]
+        q_total = ftree.total(F)
+        norm = alpha * q_total + r_mass
+        u_val = u01 * norm
+        in_r = u_val < r_mass
+        t_r = jnp.clip(jnp.sum(c <= u_val), 0, T - 1).astype(jnp.int32)
+        t_q = ftree.sample(F, jnp.clip((u_val - r_mass)
+                                       / jnp.maximum(alpha * q_total, 1e-30),
+                                       0.0, 1.0 - 1e-7))
+        t_new = jnp.where(valid, jnp.where(in_r, t_r, t_q), t_old)
+
+        # increment (masked)
+        n_td = n_td.at[d, t_new].add(one)
+        n_wt = n_wt.at[w, t_new].add(one)
+        n_t = n_t.at[t_new].add(one)
+        new_leaf2 = q_at(n_wt, n_t, w, t_new)
+        F = ftree.set_leaf(F, t_new,
+                           jnp.where(valid, new_leaf2, F[T + t_new]))
+        z_cell = z_cell.at[k].set(t_new)
+        return (z_cell, n_td, n_wt, n_t, F), None
+
+    L = tok_doc.shape[0]
+    (z_cell, n_td, n_wt, n_t, _), _ = lax.scan(
+        step, (z_cell, n_td, n_wt, n_t, F0),
+        (jnp.arange(L, dtype=jnp.int32), u))
+    return z_cell, n_td, n_wt, n_t
+
+
+def _cell_sweep_vectorized(tok_doc, tok_wrd, tok_valid, tok_bound, z_cell,
+                           n_td, n_wt, n_t, u, alpha, beta, beta_bar):
+    """Beyond-paper TPU mode (DESIGN §3 last row): the whole cell is sampled
+    in one batched pass against counts frozen at cell start (minus each
+    token's own contribution — the standard delayed/minibatch CGS, AD-LDA
+    style *within* a cell), then the count deltas are applied exactly.
+
+    Trades the paper's per-token exact chain for full 8×128-lane VPU
+    utilization — the dense conditional here is exactly what the
+    ``lda_scores`` Pallas kernel computes per tile.  Staleness ≤ one cell;
+    cross-cell/nomad semantics unchanged.
+    """
+    L = tok_doc.shape[0]
+    T = n_t.shape[-1]
+    one = tok_valid.astype(jnp.int32)
+    z_oh = jax.nn.one_hot(z_cell, T, dtype=jnp.int32) * one[:, None]
+
+    ntd_rows = n_td[tok_doc] - z_oh                    # (L,T) self-excluded
+    nwt_rows = n_wt[tok_wrd] - z_oh
+    nt_rows = n_t[None, :] - z_oh
+
+    p = ((ntd_rows.astype(F32) + alpha)
+         * (nwt_rows.astype(F32) + beta)
+         / (nt_rows.astype(F32) + beta_bar))
+    c = jnp.cumsum(p, axis=-1)
+    draw = jnp.sum(c <= (u * c[:, -1])[:, None], axis=-1).astype(jnp.int32)
+    z_new = jnp.where(tok_valid, jnp.clip(draw, 0, T - 1), z_cell)
+
+    # exact delta application (batched scatter-add, duplicates accumulate)
+    n_td = n_td.at[tok_doc, z_cell].add(-one).at[tok_doc, z_new].add(one)
+    n_wt = n_wt.at[tok_wrd, z_cell].add(-one).at[tok_wrd, z_new].add(one)
+    n_t = n_t.at[z_cell].add(-one).at[z_new].add(one)
+    return z_new, n_td, n_wt, n_t
+
+
+# ---------------------------------------------------------------------------
+# The distributed sweep.
+# ---------------------------------------------------------------------------
+def nomad_sweep_fn(mesh: Mesh, ring_axes: Sequence[str], *,
+                   B: int, T: int, alpha: float, beta: float,
+                   beta_bar: float, sync_mode: str = "stoken",
+                   inner_mode: str = "scan"):
+    """Build the jittable distributed sweep for ``mesh``.
+
+    Ring spans the product of ``ring_axes`` (e.g. ('worker',) or
+    ('pod', 'worker')).  Returns ``sweep(tok_*, z, n_td, n_wt, n_t, seed)``
+    operating on global arrays sharded as documented in NomadLayout.
+
+    inner_mode: "scan" = exact per-token chain (paper Alg. 3);
+    "vectorized" = beyond-paper batched cell pass (see
+    :func:`_cell_sweep_vectorized`).
+    """
+    sizes = tuple(int(mesh.shape[ax]) for ax in ring_axes)
+    W = int(np.prod(sizes))
+    if sync_mode not in ("stoken", "stale", "allreduce"):
+        raise ValueError(sync_mode)
+    if inner_mode not in ("scan", "vectorized"):
+        raise ValueError(inner_mode)
+    cell_fn = _cell_sweep if inner_mode == "scan" else _cell_sweep_vectorized
+
+    ring = P(tuple(ring_axes))
+    spec_tok = P(tuple(ring_axes), None, None)
+    spec_td = P(tuple(ring_axes), None, None)
+    spec_wt = P(tuple(ring_axes), None, None)
+    spec_rep = P()
+
+    def worker_fn(tok_doc, tok_wrd, tok_valid, tok_bound,
+                  z, n_td, n_wt_blk, n_t, seed):
+        # local shapes: tok_* (1,B,L); n_td (1,I,T); n_wt_blk (1,J,T);
+        # n_t (T,) replicated; seed () replicated.
+        w_flat = _flat_index(ring_axes, sizes)
+        key = jax.random.fold_in(jax.random.key(seed), w_flat)
+        L = tok_doc.shape[-1]
+
+        n_t_start = n_t
+        s_tok = n_t                       # authoritative s payload (holder 0)
+        delta_folded = jnp.zeros_like(n_t)
+
+        def round_body(carry, r):
+            z, n_td, n_wt_blk, n_t_local, delta_mine, s_tok, delta_folded = carry
+            b = (w_flat + r) % B
+            cell = lambda a: lax.dynamic_index_in_dim(a[0], b, axis=0,
+                                                      keepdims=False)
+            u = jax.random.uniform(jax.random.fold_in(key, r), (L,))
+            n_t_before = n_t_local
+            z_cell, n_td0, n_wt0, n_t_local = cell_fn(
+                cell(tok_doc), cell(tok_wrd), cell(tok_valid),
+                cell(tok_bound), cell(z), n_td[0], n_wt_blk[0], n_t_local,
+                u, alpha, beta, beta_bar)
+            n_td = n_td0[None]
+            n_wt_blk = n_wt0[None]
+            z = lax.dynamic_update_index_in_dim(z, z_cell[None], b, axis=1)
+            delta_mine = delta_mine + (n_t_local - n_t_before)
+
+            # --- s synchronization ---------------------------------------
+            if sync_mode == "allreduce":
+                n_t_local = n_t_start + lax.psum(delta_mine, tuple(ring_axes))
+            elif sync_mode == "stoken":
+                has_token = ((w_flat + r) % W) == 0
+                fold = delta_mine - delta_folded
+                s_new = s_tok + fold
+                s_tok = jnp.where(has_token, s_new, s_tok)
+                n_t_local = jnp.where(has_token, s_new, n_t_local)
+                delta_folded = jnp.where(has_token, delta_mine, delta_folded)
+            # "stale": nothing until sweep end.
+
+            # --- rotate nomadic payloads ----------------------------------
+            n_wt_blk, s_tok = _ring_shift_down((n_wt_blk, s_tok),
+                                               ring_axes, sizes)
+            return (z, n_td, n_wt_blk, n_t_local, delta_mine, s_tok,
+                    delta_folded), None
+
+        carry0 = (z, n_td, n_wt_blk, n_t, jnp.zeros_like(n_t), s_tok,
+                  delta_folded)
+        (z, n_td, n_wt_blk, _, delta_mine, _, _), _ = lax.scan(
+            round_body, carry0, jnp.arange(B, dtype=jnp.int32))
+
+        # exact sweep-end resync (additivity of s)
+        n_t_out = n_t_start + lax.psum(delta_mine, tuple(ring_axes))
+        return z, n_td, n_wt_blk, n_t_out
+
+    fn = shard_map(
+        worker_fn, mesh=mesh,
+        in_specs=(spec_tok, spec_tok, spec_tok, spec_tok,
+                  spec_tok, spec_td, spec_wt, spec_rep, spec_rep),
+        out_specs=(spec_tok, spec_td, spec_wt, spec_rep),
+        check_vma=False)
+    return jax.jit(fn)
+
+
+# ---------------------------------------------------------------------------
+# Driver.
+# ---------------------------------------------------------------------------
+@dataclass
+class NomadLDA:
+    """End-to-end distributed LDA trainer (the paper's F+Nomad LDA)."""
+    mesh: Mesh
+    ring_axes: tuple
+    layout: NomadLayout
+    alpha: float
+    beta: float
+    sync_mode: str = "stoken"
+    inner_mode: str = "scan"
+
+    def __post_init__(self):
+        lay = self.layout
+        self.beta_bar = self.beta * lay.num_words
+        self._sweep = nomad_sweep_fn(
+            self.mesh, self.ring_axes, B=lay.B, T=lay.T,
+            alpha=self.alpha, beta=self.beta, beta_bar=self.beta_bar,
+            sync_mode=self.sync_mode, inner_mode=self.inner_mode)
+        ring = tuple(self.ring_axes)
+        self._sh_tok = NamedSharding(self.mesh, P(ring, None, None))
+        self._sh_rep = NamedSharding(self.mesh, P())
+
+    # -- state construction --------------------------------------------------
+    def init_arrays(self, seed: int = 0):
+        lay = self.layout
+        rng = np.random.default_rng(seed)
+        z = np.where(lay.tok_valid,
+                     rng.integers(0, lay.T, lay.tok_valid.shape),
+                     0).astype(np.int32)
+        n_td = np.zeros((lay.W, lay.I_max, lay.T), np.int32)
+        n_wt = np.zeros((lay.B, lay.J_max, lay.T), np.int32)
+        n_t = np.zeros((lay.T,), np.int64)
+        w_idx, b_idx, l_idx = np.nonzero(lay.tok_valid)
+        zz = z[w_idx, b_idx, l_idx]
+        np.add.at(n_td, (w_idx, lay.tok_doc[w_idx, b_idx, l_idx], zz), 1)
+        np.add.at(n_wt, (b_idx, lay.tok_wrd[w_idx, b_idx, l_idx], zz), 1)
+        np.add.at(n_t, zz, 1)
+
+        put = lambda a, sh: jax.device_put(a, sh)
+        arrays = dict(
+            tok_doc=put(lay.tok_doc, self._sh_tok),
+            tok_wrd=put(lay.tok_wrd, self._sh_tok),
+            tok_valid=put(lay.tok_valid, self._sh_tok),
+            tok_bound=put(lay.tok_bound, self._sh_tok),
+            z=put(z, self._sh_tok),
+            n_td=put(n_td, self._sh_tok),
+            n_wt=put(n_wt, self._sh_tok),
+            n_t=put(n_t.astype(np.int32), self._sh_rep),
+        )
+        return arrays
+
+    def sweep(self, arrays: dict, seed: int) -> dict:
+        z, n_td, n_wt, n_t = self._sweep(
+            arrays["tok_doc"], arrays["tok_wrd"], arrays["tok_valid"],
+            arrays["tok_bound"], arrays["z"], arrays["n_td"],
+            arrays["n_wt"], arrays["n_t"], jnp.int32(seed))
+        out = dict(arrays)
+        out.update(z=z, n_td=n_td, n_wt=n_wt, n_t=n_t)
+        return out
+
+    # -- evaluation -----------------------------------------------------------
+    def log_likelihood(self, arrays: dict) -> float:
+        """Joint LL from the padded sharded tables (pad rows contribute 0)."""
+        from jax.scipy.special import gammaln
+        lay = self.layout
+        T, J = lay.T, lay.num_words
+        alpha, beta = self.alpha, self.beta
+        n_td = arrays["n_td"].astype(F32)            # (W,I_max,T) padded
+        n_wt = arrays["n_wt"].astype(F32)            # (B,J_max,T) padded
+        n_t = arrays["n_t"].astype(F32)
+        n_i = n_td.sum(axis=2)                       # (W,I_max)
+        is_doc = jnp.asarray(self.layout.doc_of_worker >= 0)
+        I = int(is_doc.sum())
+        doc_part = (I * (gammaln(T * alpha) - T * gammaln(alpha))
+                    - jnp.where(is_doc, gammaln(T * alpha + n_i), 0.0).sum()
+                    + gammaln(alpha + n_td).sum()
+                    - (~is_doc).sum() * T * gammaln(jnp.float32(alpha)))
+        topic_part = (T * (gammaln(J * beta) - J * gammaln(beta))
+                      - gammaln(J * beta + n_t).sum()
+                      + gammaln(beta + n_wt).sum()
+                      - (lay.B * lay.J_max - J) * T * gammaln(jnp.float32(beta)))
+        return float(doc_part + topic_part)
+
+    def global_counts(self, arrays: dict):
+        """Gather compact global (n_td, n_wt, n_t) for validation."""
+        lay = self.layout
+        n_td_p = np.asarray(arrays["n_td"])
+        n_wt_p = np.asarray(arrays["n_wt"])
+        I = int((lay.doc_of_worker >= 0).sum())
+        J = lay.num_words
+        n_td = np.zeros((I, lay.T), np.int64)
+        for w in range(lay.W):
+            ids = lay.doc_of_worker[w]
+            m = ids >= 0
+            n_td[ids[m]] = n_td_p[w, m]
+        n_wt = np.zeros((J, lay.T), np.int64)
+        for b in range(lay.B):
+            ids = lay.word_of_block[b]
+            m = ids >= 0
+            n_wt[ids[m]] = n_wt_p[b, m]
+        return n_td, n_wt, np.asarray(arrays["n_t"], np.int64)

@@ -1,0 +1,195 @@
+"""Multinomial samplers compared in paper Table 1.
+
+Four ways to draw ``z`` with ``Pr(z=t) ∝ p_t`` from unnormalized ``p``:
+
+    =============  ==========  ============  ================
+    sampler        init        generation    parameter update
+    =============  ==========  ============  ================
+    LSearch        Θ(T)        Θ(T)          Θ(1)
+    BSearch        Θ(T)        Θ(log T)      Θ(T)   (rebuild)
+    Alias          Θ(T)        Θ(1)          Θ(T)   (rebuild)
+    F+tree         Θ(T)        Θ(log T)      Θ(log T)
+    =============  ==========  ============  ================
+
+All samplers share the same functional API so the LDA inner loops and the
+Table-1 benchmark can swap them: ``init(p) -> state``, ``draw(state, u01) ->
+t``, ``update(state, t, delta) -> state``.  States are pytrees; every function
+is jit/vmap friendly.  ``u01`` is a uniform in [0, 1).
+
+The Alias table is built with Vose's algorithm (ref. [18] in the paper)
+expressed as a bounded ``lax.while_loop`` over explicit small/large stacks, so
+it runs inside jit.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import ftree
+
+__all__ = [
+    "AliasState", "BSearchState", "FTreeState", "LSearchState",
+    "alias_draw", "alias_init", "alias_update",
+    "bsearch_draw", "bsearch_init", "bsearch_update",
+    "ftree_draw", "ftree_init", "ftree_update",
+    "lsearch_draw", "lsearch_init", "lsearch_update",
+    "SAMPLERS",
+]
+
+
+# --------------------------------------------------------------------------
+# LSearch — linear search on p; only the normalizer is cached.
+# --------------------------------------------------------------------------
+class LSearchState(NamedTuple):
+    p: jax.Array       # (T,) unnormalized parameters
+    c_T: jax.Array     # () normalizer Σ p
+
+
+def lsearch_init(p: jax.Array) -> LSearchState:
+    return LSearchState(p=p, c_T=p.sum())
+
+
+def lsearch_draw(state: LSearchState, u01: jax.Array) -> jax.Array:
+    u = u01 * state.c_T
+    c = jnp.cumsum(state.p)
+    # z = min{t : c_t > u}; vectorized linear search (Θ(T) work).
+    return jnp.sum(c <= u).astype(jnp.int32)
+
+
+def lsearch_update(state: LSearchState, t: jax.Array,
+                   delta: jax.Array) -> LSearchState:
+    # Θ(1) bookkeeping: only the normalizer needs adjusting (plus the raw p_t).
+    return LSearchState(p=state.p.at[t].add(delta), c_T=state.c_T + delta)
+
+
+# --------------------------------------------------------------------------
+# BSearch — binary search on the cached cumulative sums.
+# --------------------------------------------------------------------------
+class BSearchState(NamedTuple):
+    c: jax.Array       # (T,) cumsum(p)
+
+
+def bsearch_init(p: jax.Array) -> BSearchState:
+    return BSearchState(c=jnp.cumsum(p))
+
+
+def bsearch_draw(state: BSearchState, u01: jax.Array) -> jax.Array:
+    u = u01 * state.c[-1]
+    return jnp.searchsorted(state.c, u, side="right").astype(jnp.int32)
+
+
+def bsearch_update(state: BSearchState, t: jax.Array,
+                   delta: jax.Array) -> BSearchState:
+    # Θ(T): every cumsum entry at or after t shifts — full rebuild semantics.
+    T = state.c.shape[-1]
+    bump = jnp.where(jnp.arange(T) >= t, delta, 0.0).astype(state.c.dtype)
+    return BSearchState(c=state.c + bump)
+
+
+# --------------------------------------------------------------------------
+# Alias method — Walker/Vose table; Θ(1) generation, Θ(T) (re)build.
+# --------------------------------------------------------------------------
+class AliasState(NamedTuple):
+    prob: jax.Array    # (T,) acceptance probability per bucket
+    alias: jax.Array   # (T,) alias index per bucket
+    c_T: jax.Array     # () normalizer Σ p
+
+
+def alias_init(p: jax.Array) -> AliasState:
+    """Vose's linear-time construction as a bounded while_loop.
+
+    Buckets with scaled mass < 1 go on the small stack, ≥ 1 on the large
+    stack; each pairing finalizes one small bucket.  At most T pairings.
+    """
+    T = p.shape[-1]
+    c_T = p.sum()
+    scaled = jnp.where(c_T > 0, p * (T / c_T), jnp.ones_like(p))
+
+    idx = jnp.arange(T, dtype=jnp.int32)
+    is_small = scaled < 1.0
+    # Stable partition into stacks (order irrelevant for correctness).
+    order_small = jnp.argsort(~is_small, stable=True).astype(jnp.int32)
+    n_small = is_small.sum().astype(jnp.int32)
+    order_large = jnp.argsort(is_small, stable=True).astype(jnp.int32)
+    n_large = (T - n_small).astype(jnp.int32)
+
+    prob0 = jnp.ones((T,), dtype=scaled.dtype)
+    alias0 = idx
+
+    def cond(carry):
+        _, _, _, n_s, _, n_l, _ = carry
+        return (n_s > 0) & (n_l > 0)
+
+    def body(carry):
+        scaled, prob, alias, n_s, small, n_l, large = carry
+        s = small[n_s - 1]
+        l = large[n_l - 1]
+        n_s = n_s - 1
+        prob = prob.at[s].set(scaled[s])
+        alias = alias.at[s].set(l)
+        new_l = scaled[l] - (1.0 - scaled[s])
+        scaled = scaled.at[l].set(new_l)
+        # Re-file the large bucket depending on its remaining mass.
+        goes_small = new_l < 1.0
+        small = lax.cond(goes_small,
+                         lambda: small.at[n_s].set(l),
+                         lambda: small)
+        n_s = n_s + goes_small.astype(n_s.dtype)
+        # If it stays large it remains at position n_l-1 of `large`.
+        n_l = n_l - goes_small.astype(n_l.dtype)
+        return scaled, prob, alias, n_s, small, n_l, large
+
+    carry = (scaled, prob0, alias0, n_small, order_small, n_large, order_large)
+    scaled, prob, alias, n_s, small, n_l, large = lax.while_loop(
+        cond, body, carry)
+    # Leftovers (numerical residue) get probability 1, alias to self.
+    return AliasState(prob=prob, alias=alias, c_T=c_T)
+
+
+def alias_draw(state: AliasState, u01: jax.Array) -> jax.Array:
+    T = state.prob.shape[-1]
+    u = u01 * T
+    j = jnp.clip(jnp.floor(u).astype(jnp.int32), 0, T - 1)
+    frac = u - j
+    return jnp.where(frac < state.prob[j], j, state.alias[j]).astype(jnp.int32)
+
+
+def alias_update(state: AliasState, t: jax.Array, delta: jax.Array,
+                 p: jax.Array | None = None) -> AliasState:
+    """Θ(T): the alias table cannot absorb a single-parameter change — full
+    rebuild from the (caller-maintained) parameter vector."""
+    if p is None:
+        raise ValueError("alias_update needs the full parameter vector p "
+                         "(the table is rebuilt — paper Table 1, Θ(T)).")
+    return alias_init(p.at[t].add(delta) if t is not None else p)
+
+
+# --------------------------------------------------------------------------
+# F+tree — paper §3.1.
+# --------------------------------------------------------------------------
+class FTreeState(NamedTuple):
+    F: jax.Array       # (2T,) heap array
+
+
+def ftree_init(p: jax.Array) -> FTreeState:
+    return FTreeState(F=ftree.build(p))
+
+
+def ftree_draw(state: FTreeState, u01: jax.Array) -> jax.Array:
+    return ftree.sample(state.F, u01)
+
+
+def ftree_update(state: FTreeState, t: jax.Array,
+                 delta: jax.Array) -> FTreeState:
+    return FTreeState(F=ftree.update(state.F, t, delta))
+
+
+SAMPLERS = {
+    "lsearch": (lsearch_init, lsearch_draw, lsearch_update),
+    "bsearch": (bsearch_init, bsearch_draw, bsearch_update),
+    "alias": (alias_init, alias_draw, None),   # update needs full p
+    "ftree": (ftree_init, ftree_draw, ftree_update),
+}

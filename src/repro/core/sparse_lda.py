@@ -1,0 +1,79 @@
+"""SparseLDA baseline (Yao, Mimno, McCallum — paper §3.3).
+
+Three-term decomposition of the CGS conditional, doc-by-doc order:
+
+    p_t = αβ/(n_t+β̄)  +  β·n_td/(n_t+β̄)  +  n_wt·(n_td+α)/(n_t+β̄)
+          └─ smoothing ─┘  └─ doc-sparse ──┘  └──── word-sparse ─────┘
+
+LSearch is used for all three buckets (as in Mallet / Yahoo!LDA): draw
+u ~ U[0, s+r+q_mass); if u lands in the word bucket walk the |T_w| nonzeros,
+else the |T_d| nonzeros, else the dense smoothing term.
+
+Exact sampler — same conditional as the reference sweep; implemented as a
+scan with dense vector arithmetic (see DESIGN.md §3 on the VPU trade), with
+the bucket logic preserved so the benchmark can count bucket hit rates (the
+paper's argument for why LSearch suffices rests on the word bucket absorbing
+most of the mass).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.cgs import LDAState
+
+__all__ = ["sweep_sparse_lda"]
+
+
+def sweep_sparse_lda(state: LDAState, doc_ids, word_ids, order,
+                     alpha: float, beta: float,
+                     return_bucket_stats: bool = False):
+    """One exact doc-by-doc SparseLDA sweep. Optionally returns per-token
+    bucket choice (0=smoothing, 1=doc, 2=word) for Table-2 style analysis."""
+    T = state.n_t.shape[0]
+    beta_bar = beta * state.n_wt.shape[0]
+    key, sweep_key = jax.random.split(state.key)
+    u = jax.random.uniform(sweep_key, (order.shape[0],))
+    f32 = jnp.float32
+
+    def step(carry, inp):
+        z, n_td, n_wt, n_t = carry
+        k, u01 = inp
+        d, w, t_old = doc_ids[k], word_ids[k], z[k]
+        n_td = n_td.at[d, t_old].add(-1)
+        n_wt = n_wt.at[w, t_old].add(-1)
+        n_t = n_t.at[t_old].add(-1)
+
+        denom = n_t.astype(f32) + beta_bar
+        s_vec = (alpha * beta) / denom                     # dense smoothing
+        r_vec = beta * n_td[d].astype(f32) / denom         # |T_d|-sparse
+        q_vec = (n_wt[w].astype(f32)
+                 * (n_td[d].astype(f32) + alpha) / denom)  # |T_w|-sparse
+        s_mass, r_mass, q_mass = s_vec.sum(), r_vec.sum(), q_vec.sum()
+        u_val = u01 * (s_mass + r_mass + q_mass)
+
+        # Bucket dispatch (SparseLDA order: word bucket checked first).
+        in_q = u_val < q_mass
+        in_r = (~in_q) & (u_val < q_mass + r_mass)
+        # LSearch within each bucket.
+        t_from = lambda vec, uu: jnp.sum(jnp.cumsum(vec) <= uu).astype(jnp.int32)
+        t_new = jnp.where(
+            in_q, t_from(q_vec, u_val),
+            jnp.where(in_r, t_from(r_vec, u_val - q_mass),
+                      t_from(s_vec, u_val - q_mass - r_mass)))
+        t_new = jnp.clip(t_new, 0, T - 1)
+        bucket = jnp.where(in_q, 2, jnp.where(in_r, 1, 0)).astype(jnp.int32)
+
+        n_td = n_td.at[d, t_new].add(1)
+        n_wt = n_wt.at[w, t_new].add(1)
+        n_t = n_t.at[t_new].add(1)
+        z = z.at[k].set(t_new)
+        return (z, n_td, n_wt, n_t), bucket
+
+    (z, n_td, n_wt, n_t), buckets = lax.scan(
+        step, (state.z, state.n_td, state.n_wt, state.n_t), (order, u))
+    new = LDAState(z=z, n_td=n_td, n_wt=n_wt, n_t=n_t, key=key)
+    if return_bucket_stats:
+        return new, buckets
+    return new

@@ -1,0 +1,1 @@
+from repro.data.corpus import Corpus  # noqa: F401

@@ -1,0 +1,171 @@
+"""Data partition and subtask split for Nomad LDA (paper §4.1, Fig. 2b).
+
+The corpus grid: documents are partitioned into ``W`` worker shards (block
+rows of Fig. 2b) and the vocabulary into ``B`` word blocks (the nomadic
+tokens).  Cell ``(w, b)`` holds every occurrence of a block-``b`` word inside
+a worker-``w`` document, sorted by word id — the "unit subtask" t_j of the
+paper, batched per block.
+
+Load balance (DESIGN.md §3): the paper relies on asynchrony to absorb the
+power-law skew of word frequencies; on a lock-step TPU mesh we instead
+balance statically — greedy LPT bin-packing of documents by length and of
+words by corpus frequency — and measure the residual imbalance.
+
+All outputs are dense, padded numpy arrays ready to become sharded
+``jax.Array``s:
+
+    tok_doc   (W, B, L) int32   local doc index (within worker shard)
+    tok_wrd   (W, B, L) int32   local word index (within block)
+    tok_gwrd  (W, B, L) int32   global word id (diagnostics)
+    tok_valid (W, B, L) bool    padding mask
+    tok_bound (W, B, L) bool    first occurrence of a word within the cell
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.data.corpus import Corpus
+
+__all__ = ["NomadLayout", "lpt_assign", "build_layout"]
+
+
+def lpt_assign(weights: np.ndarray, n_bins: int,
+               balance: bool = True) -> np.ndarray:
+    """Assign items to bins. ``balance=True``: greedy LPT (largest first to
+    lightest bin); else contiguous equal-count chunks (the naive split)."""
+    n = weights.shape[0]
+    if not balance:
+        return (np.arange(n) * n_bins // max(n, 1)).astype(np.int32)
+    order = np.argsort(-weights, kind="stable")
+    loads = np.zeros(n_bins, dtype=np.int64)
+    out = np.zeros(n, dtype=np.int32)
+    # heap-free LPT: argmin over n_bins each step (n_bins is small)
+    import heapq
+    heap = [(0, b) for b in range(n_bins)]
+    heapq.heapify(heap)
+    for i in order:
+        load, b = heapq.heappop(heap)
+        out[i] = b
+        heapq.heappush(heap, (load + int(weights[i]), b))
+        loads[b] += weights[i]
+    return out
+
+
+@dataclass
+class NomadLayout:
+    """Padded cell grid + count-table geometry for a nomad run."""
+    W: int                       # workers (ring length)
+    B: int                       # word blocks (== W in the standard setup)
+    L: int                       # padded cell length
+    T: int                       # topics
+    num_words: int               # true vocabulary size J (for β̄)
+    tok_doc: np.ndarray          # (W,B,L) int32 local doc index
+    tok_wrd: np.ndarray          # (W,B,L) int32 local word index in block
+    tok_gwrd: np.ndarray         # (W,B,L) int32 global word id
+    tok_valid: np.ndarray        # (W,B,L) bool
+    tok_bound: np.ndarray        # (W,B,L) bool
+    doc_of_worker: np.ndarray    # (W, I_max) int32 global doc id (-1 pad)
+    word_of_block: np.ndarray    # (B, J_max) int32 global word id (-1 pad)
+    I_max: int                   # padded docs per worker
+    J_max: int                   # padded words per block
+    doc_assign: np.ndarray       # (I,) worker of each document
+    word_assign: np.ndarray      # (J,) block of each word
+    cell_sizes: np.ndarray       # (W,B) true token counts (imbalance stats)
+
+    @property
+    def pad_fraction(self) -> float:
+        return 1.0 - self.cell_sizes.sum() / (self.W * self.B * self.L)
+
+    @property
+    def round_imbalance(self) -> float:
+        """max/mean token count over the W cells active in a round, worst
+        round — the 'last reducer' exposure of the static schedule."""
+        worst = 0.0
+        for r in range(self.B):
+            active = self.cell_sizes[np.arange(self.W), (np.arange(self.W) + r) % self.B]
+            if active.mean() > 0:
+                worst = max(worst, active.max() / active.mean())
+        return float(worst)
+
+
+def build_layout(corpus: Corpus, *, n_workers: int, T: int,
+                 n_blocks: int | None = None,
+                 balance: bool = True, seed: int = 0) -> NomadLayout:
+    B = n_workers if n_blocks is None else n_blocks
+    W = n_workers
+    doc_assign = lpt_assign(corpus.doc_lengths(), W, balance)
+    word_assign = lpt_assign(corpus.word_freqs(), B, balance)
+
+    # Local doc / word index maps.
+    I_counts = np.bincount(doc_assign, minlength=W)
+    J_counts = np.bincount(word_assign, minlength=B)
+    I_max, J_max = int(I_counts.max()), int(J_counts.max())
+    doc_of_worker = np.full((W, I_max), -1, np.int32)
+    doc_local = np.zeros(corpus.num_docs, np.int32)
+    for w in range(W):
+        ids = np.nonzero(doc_assign == w)[0]
+        doc_of_worker[w, :len(ids)] = ids
+        doc_local[ids] = np.arange(len(ids))
+    word_of_block = np.full((B, J_max), -1, np.int32)
+    word_local = np.zeros(corpus.num_words, np.int32)
+    for b in range(B):
+        ids = np.nonzero(word_assign == b)[0]
+        word_of_block[b, :len(ids)] = ids
+        word_local[ids] = np.arange(len(ids))
+
+    # Cell grid: sort tokens by (worker, block, word id).
+    tw = doc_assign[corpus.doc_ids]
+    tb = word_assign[corpus.word_ids]
+    order = np.lexsort((corpus.word_ids, tb, tw)).astype(np.int64)
+    sw, sb = tw[order], tb[order]
+    sdoc, swrd = corpus.doc_ids[order], corpus.word_ids[order]
+
+    cell_sizes = np.zeros((W, B), np.int64)
+    np.add.at(cell_sizes, (sw, sb), 1)
+    L = max(int(cell_sizes.max()), 1)
+
+    tok_doc = np.zeros((W, B, L), np.int32)
+    tok_wrd = np.zeros((W, B, L), np.int32)
+    tok_gwrd = np.zeros((W, B, L), np.int32)
+    tok_valid = np.zeros((W, B, L), bool)
+    tok_bound = np.zeros((W, B, L), bool)
+
+    # slot index of each token within its cell
+    flat_cell = sw.astype(np.int64) * B + sb
+    # stable running count per cell
+    slot = _running_count(flat_cell)
+    tok_doc[sw, sb, slot] = doc_local[sdoc]
+    tok_wrd[sw, sb, slot] = word_local[swrd]
+    tok_gwrd[sw, sb, slot] = swrd
+    tok_valid[sw, sb, slot] = True
+    # word boundary within cell: first slot, or word differs from previous
+    prev_same_cell = np.zeros_like(flat_cell, bool)
+    prev_same_cell[1:] = flat_cell[1:] == flat_cell[:-1]
+    prev_same_word = np.zeros_like(flat_cell, bool)
+    prev_same_word[1:] = swrd[1:] == swrd[:-1]
+    bound = ~(prev_same_cell & prev_same_word)
+    tok_bound[sw, sb, slot] = bound
+    # padding slots: mark as boundary=False, doc/wrd 0 (masked in the sweep)
+
+    return NomadLayout(
+        W=W, B=B, L=L, T=T, num_words=corpus.num_words,
+        tok_doc=tok_doc, tok_wrd=tok_wrd, tok_gwrd=tok_gwrd,
+        tok_valid=tok_valid, tok_bound=tok_bound,
+        doc_of_worker=doc_of_worker, word_of_block=word_of_block,
+        I_max=I_max, J_max=J_max,
+        doc_assign=doc_assign, word_assign=word_assign,
+        cell_sizes=cell_sizes)
+
+
+def _running_count(groups: np.ndarray) -> np.ndarray:
+    """For a sorted group array, the 0-based occurrence index within group."""
+    n = groups.shape[0]
+    if n == 0:
+        return np.zeros(0, np.int64)
+    starts = np.ones(n, bool)
+    starts[1:] = groups[1:] != groups[:-1]
+    idx = np.arange(n)
+    start_idx = np.maximum.accumulate(np.where(starts, idx, 0))
+    return idx - start_idx

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the paper's compute hot spot: the per-token sampler.
+
+Each kernel package ships three modules:
+    <name>.py — pl.pallas_call + BlockSpec VMEM tiling (TPU target)
+    ops.py    — jit'd public wrapper (padding, dtype plumbing, interpret flag)
+    ref.py    — pure-jnp oracle used by the allclose test sweeps
+"""

@@ -1,0 +1,1 @@
+from repro.kernels.ftree_sample.ops import ftree_sample  # noqa: F401

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the ftree_sample kernel."""
+import jax
+
+from repro.core import ftree
+
+
+def ftree_sample_ref(F: jax.Array, u01: jax.Array) -> jax.Array:
+    return ftree.sample_batch(F, u01)

@@ -1,0 +1,1 @@
+from repro.kernels.ftree_update.ops import ftree_update_batch  # noqa: F401

@@ -1,0 +1,15 @@
+"""Public wrapper for the batched F+tree update kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ftree_update.ftree_update import ftree_update_pallas
+
+
+def ftree_update_batch(F: jax.Array, ts: jax.Array, deltas: jax.Array, *,
+                       interpret: bool = True) -> jax.Array:
+    """F+tree after p[ts[k]] += deltas[k] for all k (duplicates accumulate)."""
+    return ftree_update_pallas(
+        F.astype(jnp.float32), ts.astype(jnp.int32),
+        deltas.astype(jnp.float32), interpret=interpret)

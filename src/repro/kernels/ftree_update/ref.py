@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the ftree_update kernel."""
+import jax
+
+from repro.core import ftree
+
+
+def ftree_update_ref(F: jax.Array, ts: jax.Array,
+                     deltas: jax.Array) -> jax.Array:
+    return ftree.update_batch(F, ts, deltas)

@@ -1,0 +1,1 @@
+from repro.kernels.lda_scores.ops import lda_scores_draw  # noqa: F401

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the fused CGS conditional + draw kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def lda_scores_draw_ref(n_td_rows, n_wt_rows, n_t, u01, *,
+                        alpha, beta, beta_bar):
+    p = ((n_td_rows.astype(jnp.float32) + alpha)
+         * (n_wt_rows.astype(jnp.float32) + beta)
+         / (n_t.astype(jnp.float32)[None, :] + beta_bar))
+    c = jnp.cumsum(p, axis=-1)
+    norm = c[:, -1]
+    u = u01 * norm
+    z = jnp.sum(c <= u[:, None], axis=-1).astype(jnp.int32)
+    return z, norm

@@ -1,0 +1,64 @@
+"""Expert-parallel execution context for MoE layers.
+
+Installs :func:`repro.models.moe.moe_forward_ep` under ``shard_map``:
+experts sharded over 'model', tokens chunked over 'model' along the
+sequence axis, two all-to-alls per layer (dispatch + return) — the
+owner-computes pattern of the paper's nomadic word tokens (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models import moe as moe_mod
+from repro.launch.sharding_rules import batch_axes
+
+__all__ = ["make_ep_ctx"]
+
+
+def make_ep_ctx(mesh: Mesh, cfg, *, capacity_factor: float = 1.25):
+    """Returns ep_ctx(moe_params, x) -> (y, aux) or None if EP not viable."""
+    if "model" not in mesh.axis_names:
+        return None
+    M = int(mesh.shape["model"])
+    if M == 1 or not cfg.num_experts or cfg.num_experts % M != 0:
+        return None
+    baxes = batch_axes(mesh)
+
+    def ep_ctx(moe_params, x):
+        S = x.shape[1]
+        if S % M != 0:
+            # decode shapes: fall back to the single-program path (GSPMD)
+            return moe_mod.moe_forward(moe_params, cfg, x,
+                                       capacity_factor=capacity_factor)
+
+        in_specs = (
+            {
+                "router": P(None, None),                 # replicated
+                "w_gate": P("model", None, None),        # experts sharded
+                "w_up": P("model", None, None),
+                "w_down": P("model", None, None),
+                **({"shared": {"w_gate": P(None, None),
+                               "w_up": P(None, None),
+                               "w_down": P(None, None)}}
+                   if cfg.num_shared_experts else {}),
+            },
+            P(baxes, "model", None),                     # x: tokens chunked
+        )
+        out_specs = (P(baxes, "model", None), P(baxes))
+
+        def body(p_local, x_local):
+            y, aux = moe_mod.moe_forward_ep(
+                p_local, cfg, x_local, model_axis="model", model_size=M,
+                capacity_factor=capacity_factor)
+            aux_vec = jnp.broadcast_to(aux, (x_local.shape[0],))
+            return y, aux_vec
+
+        f = shard_map(body, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_vma=False)
+        y, aux_vec = f(moe_params, x)
+        return y, aux_vec.mean()
+
+    return ep_ctx

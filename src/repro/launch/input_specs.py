@@ -1,0 +1,43 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run, no allocation).
+
+``input_specs(cfg, shape_name)`` returns the abstract batch for the step
+kind of that shape (train / prefill / decode); ``make_step_fn`` returns the
+matching step callable so the dry-run lowers exactly what production runs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import INPUT_SHAPES
+from repro.models.config import ModelConfig
+
+__all__ = ["input_specs", "abstract_batch"]
+
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+def abstract_batch(cfg: ModelConfig, *, batch: int, seq: int,
+                   kind: str) -> dict:
+    """Abstract (ShapeDtypeStruct) inputs for one step of ``kind``."""
+    sds = jax.ShapeDtypeStruct
+    if kind == "decode":
+        return {"tokens": sds((batch, 1), I32), "pos": sds((batch,), I32)}
+    if cfg.modality == "audio_frames":
+        out = {"frames": sds((batch, seq, cfg.frontend_dim), F32)}
+        if kind == "train":
+            out["labels"] = sds((batch, seq), I32)
+        return out
+    if cfg.modality == "image_patches":
+        text = seq - cfg.frontend_tokens
+        return {"tokens": sds((batch, text), I32),
+                "patches": sds((batch, cfg.frontend_tokens,
+                                cfg.frontend_dim), F32)}
+    return {"tokens": sds((batch, seq), I32)}
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    spec = INPUT_SHAPES[shape_name]
+    return abstract_batch(cfg, batch=spec["global_batch"],
+                          seq=spec["seq_len"], kind=spec["kind"])

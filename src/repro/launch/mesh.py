@@ -1,0 +1,48 @@
+"""Production mesh construction (spec: MULTI-POD DRY-RUN step 1).
+
+Target hardware: TPU v5e pods — 197 bf16 TFLOP/s, 16 GiB HBM @ 819 GB/s per
+chip, ~50 GB/s/link ICI.  Single pod = 16×16 = 256 chips; two pods = 512.
+
+Functions, not module-level constants: importing this module never touches
+jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_lda_mesh", "HW"]
+
+
+class HW:
+    """TPU v5e hardware constants used by the roofline analysis."""
+    PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+    HBM_BW = 819e9               # bytes/s per chip
+    ICI_BW = 50e9                # bytes/s per link
+    HBM_BYTES = 16 * 2**30       # per chip
+
+
+def _mesh(shape, axes):
+    import numpy as np
+    n = int(np.prod(shape))
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(jax.devices())} "
+            "(dry-run must set XLA_FLAGS=--xla_force_host_platform_"
+            "device_count before importing jax)")
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mesh(shape, axes)
+
+
+def make_lda_mesh(*, multi_pod: bool = False):
+    """Flat worker ring for Nomad LDA (DESIGN.md §4): the ring spans the
+    whole mesh; the pod axis is kept so the cross-pod boundary hop of the
+    ring is explicit in the collective schedule."""
+    if multi_pod:
+        return _mesh((2, 256), ("pod", "worker"))
+    return _mesh((256,), ("worker",))

@@ -1,0 +1,121 @@
+"""Production launcher.
+
+LDA (the paper):
+    python -m repro.launch.train lda --devices 8 --sweeps 40 [--multi-pod]
+Neural archs (substrate):
+    python -m repro.launch.train lm --arch qwen3-8b --steps 100 --smoke
+
+The LDA path fakes the device count (training actually executes); the LM
+path runs the reduced config on the host devices.  Production-mesh lowering
+is exercised by ``repro.launch.dryrun`` (this container has one real core).
+"""
+import argparse
+import os
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("mode", choices=["lda", "lm"])
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--devices", type=int, default=8)
+    ap.add_argument("--sweeps", type=int, default=40)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--topics", type=int, default=64)
+    ap.add_argument("--docs", type=int, default=1000)
+    ap.add_argument("--sync", default="stoken",
+                    choices=["stoken", "stale", "allreduce"])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt.npz")
+    args = ap.parse_args()
+
+    if args.mode == "lda":
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices} "
+            + os.environ.get("XLA_FLAGS", ""))
+        _run_lda(args)
+    else:
+        _run_lm(args)
+
+
+def _run_lda(args):
+    import time
+
+    import jax
+
+    from repro.core.nomad import NomadLDA
+    from repro.data import synthetic
+    from repro.data.sharding import build_layout
+    from repro.train import checkpoint
+
+    T = args.topics
+    corpus, _, _ = synthetic.make_corpus(
+        num_docs=args.docs, vocab_size=4096, num_topics=T,
+        mean_doc_len=80.0, seed=0)
+    n_dev = len(jax.devices())
+    if args.multi_pod and n_dev % 2 == 0:
+        mesh = jax.make_mesh((2, n_dev // 2), ("pod", "worker"))
+        ring = ("pod", "worker")
+    else:
+        mesh = jax.make_mesh((n_dev,), ("worker",))
+        ring = ("worker",)
+    layout = build_layout(corpus, n_workers=n_dev, T=T)
+    lda = NomadLDA(mesh=mesh, ring_axes=ring, layout=layout,
+                   alpha=50.0 / T, beta=0.01, sync_mode=args.sync)
+    arrays = lda.init_arrays(seed=0)
+    print(f"[lda] {corpus.num_tokens:,} tokens, {n_dev} workers "
+          f"({'x'.join(map(str, mesh.devices.shape))} mesh), "
+          f"sync={args.sync}")
+    t0 = time.time()
+    for it in range(args.sweeps):
+        arrays = lda.sweep(arrays, seed=it)
+        if (it + 1) % 10 == 0 or it == args.sweeps - 1:
+            jax.block_until_ready(arrays["n_t"])
+            ll = lda.log_likelihood(arrays)
+            print(f"[lda] sweep {it + 1:4d} ll {ll:,.0f} "
+                  f"({corpus.num_tokens * (it + 1) / (time.time() - t0):,.0f}"
+                  f" tok/s)")
+    checkpoint.save(args.ckpt, {k: arrays[k]
+                                for k in ("z", "n_td", "n_wt", "n_t")})
+    print(f"[lda] checkpoint: {args.ckpt}")
+
+
+def _run_lm(args):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.train.train_step import init_train_state, make_train_step
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    state = init_train_state(cfg, jax.random.key(0))
+    n = sum(x.size for x in jax.tree_util.tree_leaves(state.params))
+    print(f"[lm] {cfg.name}: {n / 1e6:.1f}M params")
+    step = jax.jit(make_train_step(cfg, lr=3e-4, remat=False))
+    key = jax.random.key(1)
+    B, S = 4, 128
+    for it in range(args.steps):
+        key, k1 = jax.random.split(key)
+        if cfg.modality == "audio_frames":
+            batch = {"frames": jax.random.normal(k1, (B, S, cfg.frontend_dim)),
+                     "labels": jax.random.randint(k1, (B, S), 0,
+                                                  cfg.vocab_size)}
+        elif cfg.modality == "image_patches":
+            batch = {"tokens": jax.random.randint(k1, (B, S), 0,
+                                                  cfg.vocab_size),
+                     "patches": jax.random.normal(
+                         k1, (B, cfg.frontend_tokens, cfg.frontend_dim))}
+        else:
+            start = jax.random.randint(k1, (B, 1), 0, cfg.vocab_size)
+            batch = {"tokens": (start + jnp.arange(S)[None, :] * 7)
+                     % cfg.vocab_size}
+        state, metrics = step(state, batch)
+        if (it + 1) % 20 == 0:
+            print(f"[lm] step {it + 1:4d} loss {float(metrics['loss']):.4f}")
+
+
+if __name__ == "__main__":
+    main()

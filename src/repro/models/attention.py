@@ -1,0 +1,214 @@
+"""Grouped-query attention with RoPE, qk-norm, soft-capping, sliding window.
+
+Covers the attention flavours of the assigned archs: GQA (all), qk_norm
+(qwen3), logit softcap + local/global alternation (gemma2), bidirectional
+(hubert encoder), sliding-window long-context variant (DESIGN §5).
+
+Memory discipline: queries are processed in chunks of ``Q_CHUNK`` via
+``lax.scan`` so the (Sq, Sk) score matrix never materializes beyond one
+chunk — pure-JAX flash-style attention, good enough for the 32k prefill
+shapes (the paper's hot spot is the LDA sampler, not attention — no Pallas
+kernel here by design, DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import dense_init, rmsnorm, softcap
+
+Q_CHUNK = 1024
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) or (S,)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq      # (B,S,half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]                                     # (B,S,1,half)
+    sin = sin[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+def attn_init(key, cfg, dtype=jnp.float32) -> dict:
+    d, hq, hkv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, hq * dh, dtype),
+        "wk": dense_init(ks[1], d, hkv * dh, dtype),
+        "wv": dense_init(ks[2], d, hkv * dh, dtype),
+        "wo": dense_init(ks[3], hq * dh, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((dh,), dtype)
+        p["k_norm"] = jnp.zeros((dh,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Core scaled-dot-product with masking options (chunked over queries).
+# ---------------------------------------------------------------------------
+def _sdpa(q, k, v, *, causal: bool, window: int, q_offset,
+          logit_cap: float, kv_len=None, kpos=None):
+    """q: (B,Sq,Hq,D); k,v: (B,Sk,Hkv,D); GQA broadcast; returns (B,Sq,Hq,D).
+
+    q_offset: global position of q[0] (decode: the cache length).
+    kv_len: number of valid cache entries (decode with preallocated cache).
+    kpos: explicit absolute key positions (B,Sk) — ring-buffer caches where
+          slot order ≠ position order (entries < 0 are invalid).
+    """
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = D ** -0.5
+    qg = q.reshape(B, Sq, Hkv, G, D) * scale
+
+    if kpos is None:
+        kpos_b = jnp.broadcast_to(jnp.arange(Sk)[None, :], (1, Sk))
+        valid_k = (kpos_b < kv_len[:, None]) if kv_len is not None \
+            else jnp.ones((1, Sk), bool)
+    else:
+        kpos_b = kpos
+        valid_k = kpos_b >= 0
+
+    def chunk_attn(q_chunk, qpos):
+        # q_chunk: (B,C,Hkv,G,D); qpos: (B,C); scores (B,C,Hkv,G,Sk)
+        s = jnp.einsum("bchgd,bkhd->bchgk", q_chunk.astype(jnp.float32),
+                       k.astype(jnp.float32))
+        s = softcap(s, logit_cap)
+        mask = jnp.broadcast_to(valid_k[:, None, :],
+                                (valid_k.shape[0], qpos.shape[1], Sk))
+        if causal:
+            mask = mask & (kpos_b[:, None, :] <= qpos[:, :, None])
+        if window is not None:
+            # window may be a traced per-layer value; 0 disables the band.
+            win = jnp.asarray(window)
+            mask = mask & ((win <= 0)
+                           | (kpos_b[:, None, :] > (qpos[:, :, None] - win)))
+        s = jnp.where(mask[:, :, None, None, :], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bchgk,bkhd->bchgd", p,
+                          v.astype(jnp.float32)).astype(q.dtype)
+
+    q_offset = jnp.broadcast_to(q_offset, (B,))
+    if Sq <= Q_CHUNK:
+        qpos = q_offset[:, None] + jnp.arange(Sq)[None, :]
+        out = chunk_attn(qg, qpos)
+    else:
+        n_chunks = Sq // Q_CHUNK
+        assert Sq % Q_CHUNK == 0, "pad sequence to the query chunk size"
+        qc = qg.reshape(B, n_chunks, Q_CHUNK, Hkv, G, D)
+
+        def body(_, qi):
+            q_chunk, ci = qi
+            qpos = (q_offset[:, None] + ci * Q_CHUNK
+                    + jnp.arange(Q_CHUNK)[None, :])
+            return None, chunk_attn(q_chunk, qpos)
+
+        _, out = lax.scan(body, None,
+                          (jnp.moveaxis(qc, 1, 0),
+                           jnp.arange(n_chunks)))
+        out = jnp.moveaxis(out, 0, 1).reshape(B, Sq, Hkv, G, D)
+    return out.reshape(B, Sq, Hq, D)
+
+
+# ---------------------------------------------------------------------------
+# Full block forward (projections + rope + cache handling).
+# ---------------------------------------------------------------------------
+def attn_forward(p: dict, cfg, x: jax.Array, *, local,
+                 positions: jax.Array, cache: dict | None = None,
+                 norm_eps: float = 1e-6):
+    """x: (B,S,d).  cache: {"k","v": (B,S_max,Hkv,D), "len": (B,)} for decode.
+
+    ``local``: sliding-window size for this layer (0/False = global; may be
+    a traced per-layer value from a scanned flag array).
+
+    Returns (y, new_cache).  Training/prefill: cache=None, positions (S,).
+    Decode: S==1, positions (B,1) = current index, cache updated in place.
+    """
+    B, S, d = x.shape
+    hq, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, hq, dh)
+    k = (x @ p["wk"]).reshape(B, S, hkv, dh)
+    v = (x @ p["wv"]).reshape(B, S, hkv, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], norm_eps)
+        k = rmsnorm(k, p["k_norm"], norm_eps)
+    pos_b = positions if positions.ndim == 2 else positions[None, :]
+    q = rope(q, pos_b, cfg.rope_theta)
+    k = rope(k, pos_b, cfg.rope_theta)
+
+    window = jnp.asarray(0 if local is False or local is None else local,
+                         jnp.int32)
+    new_cache = None
+    if cache is None:
+        off = positions[0] if positions.ndim == 1 else positions[:, 0]
+        out = _sdpa(q, k, v, causal=cfg.causal, window=window,
+                    q_offset=off, logit_cap=cfg.attn_logit_softcap)
+    elif "slot_pos" in cache:
+        # ring buffer (sliding-window archs): slot = pos % cache size.
+        # Keys are cached post-RoPE; slot_pos holds absolute positions so
+        # the causal/window masks survive wrap-around.  S must be 1.
+        S_cache = cache["k"].shape[1]
+        idx = cache["len"]                                   # (B,) abs pos
+        slot = idx % S_cache
+        k_cache = _batch_update(cache["k"], k, slot)
+        v_cache = _batch_update(cache["v"], v, slot)
+        slot_pos = jax.vmap(
+            lambda sp, s_, i_: sp.at[s_].set(i_))(
+                cache["slot_pos"], slot, idx.astype(jnp.int32))
+        out = _sdpa(q, k_cache, v_cache, causal=cfg.causal, window=window,
+                    q_offset=idx, logit_cap=cfg.attn_logit_softcap,
+                    kpos=slot_pos)
+        new_cache = {"k": k_cache, "v": v_cache, "len": idx + S,
+                     "slot_pos": slot_pos}
+    else:
+        # decode: append this step's k/v at index cache["len"]
+        idx = cache["len"]                                   # (B,)
+        k_cache = _batch_update(cache["k"], k, idx)
+        v_cache = _batch_update(cache["v"], v, idx)
+        new_len = idx + S
+        out = _sdpa(q, k_cache, v_cache, causal=cfg.causal, window=window,
+                    q_offset=idx, logit_cap=cfg.attn_logit_softcap,
+                    kv_len=new_len)
+        new_cache = {"k": k_cache, "v": v_cache, "len": new_len}
+    y = out.reshape(B, S, hq * dh) @ p["wo"]
+    return y, new_cache
+
+
+def _batch_update(cache: jax.Array, new: jax.Array,
+                  idx: jax.Array) -> jax.Array:
+    """Write new (B,S,...) into cache (B,S_max,...) at per-batch offset idx."""
+    B, S = new.shape[0], new.shape[1]
+
+    def upd(c, n, i):
+        return lax.dynamic_update_slice(c, n.astype(c.dtype),
+                                        (i,) + (0,) * (c.ndim - 1))
+    return jax.vmap(upd)(cache, new, idx)
+
+
+def init_attn_cache(cfg, B: int, S_max: int, dtype=jnp.float32,
+                    ring: bool = False) -> dict:
+    """ring=True (sliding-window archs): cache holds only ``window`` slots —
+    the long_500k memory-term optimization (§Perf)."""
+    S_cache = min(S_max, cfg.sliding_window) if ring and cfg.sliding_window \
+        else S_max
+    out = {
+        "k": jnp.zeros((B, S_cache, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((B, S_cache, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "len": jnp.zeros((B,), jnp.int32),
+    }
+    if ring and cfg.sliding_window and S_cache < S_max:
+        out["slot_pos"] = jnp.full((B, S_cache), -1, jnp.int32)
+    return out

@@ -1,0 +1,57 @@
+"""Shared neural building blocks (pure-functional, param dicts)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rmsnorm", "softcap", "dense_init", "mlp_init", "mlp_forward",
+           "embed_init"]
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    """Gemma2 logit soft-capping: cap·tanh(x/cap)."""
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32) -> jax.Array:
+    scale = 1.0 / jnp.sqrt(d_in)
+    return (jax.random.truncated_normal(key, -2, 2, (d_in, d_out),
+                                        jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.truncated_normal(key, -2, 2, (vocab, d), jnp.float32)
+            ).astype(dtype)
+
+
+def mlp_init(key, d: int, d_ff: int, activation: str, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    gated = activation in ("swiglu", "geglu")
+    p = {"w_up": dense_init(k1, d, d_ff, dtype),
+         "w_down": dense_init(k2, d_ff, d, dtype)}
+    if gated:
+        p["w_gate"] = dense_init(k3, d, d_ff, dtype)
+    return p
+
+
+def _act(x: jax.Array, activation: str) -> jax.Array:
+    if activation in ("swiglu", "silu"):
+        return jax.nn.silu(x)
+    return jax.nn.gelu(x)
+
+
+def mlp_forward(p: dict, x: jax.Array, activation: str) -> jax.Array:
+    up = x @ p["w_up"]
+    if "w_gate" in p:
+        up = _act(x @ p["w_gate"], activation) * up
+    else:
+        up = _act(up, activation)
+    return up @ p["w_down"]

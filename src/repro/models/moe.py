@@ -1,0 +1,190 @@
+"""Mixture-of-Experts block (deepseek-moe fine-grained, kimi-k2 scale).
+
+Capacity-based top-k routing with bucket dispatch (GShard/Switch family):
+
+    router → top-k (weights, expert ids) per token
+    dispatch: scatter tokens into per-expert capacity buckets (overflow drops)
+    expert FFN: one batched einsum over the expert axis (MXU-friendly)
+    combine: gather back, weight, sum over the k choices
+
+Two execution paths share the dispatch/combine helpers:
+
+* ``moe_forward`` — single-program; the expert axis is left to GSPMD (used
+  by smoke tests and as the pjit fallback).
+* ``moe_forward_ep`` — explicit expert parallelism under ``shard_map``:
+  experts sharded over the 'model' axis, tokens chunked over the same axis,
+  exchanged with two ``lax.all_to_all``s (dispatch + return).  Structurally
+  the owner-computes pattern of the paper's nomad tokens (DESIGN.md §5):
+  each expert's parameters are touched by exactly one device, and token
+  activations travel to the owner.
+
+Aux loss: the standard load-balance term (fraction-of-tokens ×
+mean-router-prob × E), the MoE analogue of the paper's word-frequency
+balancing concern.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import dense_init
+
+__all__ = ["moe_init", "moe_forward", "moe_forward_ep", "dispatch_indices"]
+
+
+def moe_init(key, cfg, dtype=jnp.float32) -> dict:
+    d, f, E = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    ks = jax.random.split(key, 5)
+    scale = 1.0 / jnp.sqrt(d)
+    fscale = 1.0 / jnp.sqrt(f)
+    p = {
+        "router": dense_init(ks[0], d, E, dtype),
+        "w_gate": (jax.random.normal(ks[1], (E, d, f)) * scale).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (E, d, f)) * scale).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (E, f, d)) * fscale).astype(dtype),
+    }
+    if cfg.num_shared_experts:
+        fs = f * cfg.num_shared_experts
+        k1, k2, k3 = jax.random.split(ks[4], 3)
+        p["shared"] = {"w_gate": dense_init(k1, d, fs, dtype),
+                       "w_up": dense_init(k2, d, fs, dtype),
+                       "w_down": dense_init(k3, fs, d, dtype)}
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Dispatch helpers (shared by both paths).
+# ---------------------------------------------------------------------------
+def dispatch_indices(experts: jax.Array, E: int, cap: int):
+    """experts: (n, k) top-k ids.  Returns (dest, rank, keep):
+    dest (n*k,) expert id (E for dropped), rank (n*k,) slot within expert.
+    Rank = arrival order within each expert (stable), capacity-clipped."""
+    flat = experts.reshape(-1)
+    nk = flat.shape[0]
+    order = jnp.argsort(flat, stable=True)
+    sorted_e = flat[order]
+    first = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    rank_sorted = jnp.arange(nk) - first
+    rank = jnp.zeros((nk,), jnp.int32).at[order].set(
+        rank_sorted.astype(jnp.int32))
+    keep = rank < cap
+    dest = jnp.where(keep, flat, E).astype(jnp.int32)
+    return dest, jnp.minimum(rank, cap - 1), keep
+
+
+def _router(p, cfg, x_flat):
+    logits = x_flat @ p["router"]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    weights, experts = lax.top_k(probs, cfg.experts_per_token)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    # load-balance auxiliary (Switch eq. 4-6)
+    E = cfg.num_experts
+    frac = jnp.zeros((E,)).at[experts.reshape(-1)].add(1.0) / experts.size
+    mean_p = probs.mean(0)
+    aux = E * jnp.sum(frac * mean_p)
+    return weights, experts, aux
+
+
+def _expert_ffn(bucket, p):
+    """bucket: (E, C, d) → (E, C, d) through each expert's gated FFN."""
+    h = jnp.einsum("ecd,edf->ecf", bucket, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", bucket, p["w_up"])
+    h = jax.nn.silu(h) * u
+    return jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+
+
+def _shared_ffn(x, p):
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+def _dispatch_combine(p, cfg, x_flat, cap, ffn):
+    """Route x_flat (n, d) through capacity buckets; ffn maps (E,C,d)→(E,C,d)."""
+    n, d = x_flat.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    weights, experts, aux = _router(p, cfg, x_flat)
+    dest, rank, keep = dispatch_indices(experts, E, cap)
+    tok_idx = jnp.repeat(jnp.arange(n), k)
+    bucket = jnp.zeros((E + 1, cap, d), x_flat.dtype)
+    bucket = bucket.at[dest, rank].set(x_flat[tok_idx])
+    y_bucket = ffn(bucket[:E])
+    y_choice = y_bucket[jnp.minimum(dest, E - 1), rank]       # (n*k, d)
+    y_choice = jnp.where(keep[:, None], y_choice, 0.0)
+    y = jnp.zeros_like(x_flat).at[tok_idx].add(
+        y_choice * weights.reshape(-1)[:, None])
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# Path 1: single-program (GSPMD handles any sharding).
+# ---------------------------------------------------------------------------
+def moe_forward(p: dict, cfg, x: jax.Array, *, capacity_factor: float = 1.25):
+    """x: (B,S,d) → (y, aux_loss)."""
+    B, S, d = x.shape
+    n = B * S
+    x_flat = x.reshape(n, d)
+    cap = _capacity(n, cfg, capacity_factor)
+    y, aux = _dispatch_combine(p, cfg, x_flat, cap, lambda b: _expert_ffn(b, p))
+    if cfg.num_shared_experts:
+        y = y + _shared_ffn(x_flat, p["shared"])
+    return y.reshape(B, S, d), aux
+
+
+def _capacity(n: int, cfg, factor: float) -> int:
+    cap = int(n * cfg.experts_per_token / max(cfg.num_experts, 1) * factor)
+    return max(8, min(cap, n))
+
+
+# ---------------------------------------------------------------------------
+# Path 2: explicit expert parallelism (inside shard_map over 'model').
+# ---------------------------------------------------------------------------
+def moe_forward_ep(p_local: dict, cfg, x_local: jax.Array, *,
+                   model_axis: str, model_size: int,
+                   capacity_factor: float = 1.25):
+    """shard_map body.  x_local: (B_loc, S_loc, d) — tokens already chunked
+    over the model axis; p_local experts sharded: w_* (E_loc, d, f).
+
+    dispatch → all_to_all to expert owners → batched FFN → all_to_all back
+    → combine.  Router weights are replicated.
+    """
+    B, S, d = x_local.shape
+    n = B * S
+    M = model_size
+    E = cfg.num_experts
+    E_loc = E // M
+    x_flat = x_local.reshape(n, d)
+    cap = _capacity(n, cfg, capacity_factor)
+    cap = max(8, -(-cap // M) * M)  # divisible by M for even a2a splits
+
+    weights, experts, aux = _router(
+        {"router": p_local["router"]}, cfg, x_flat)
+    dest, rank, keep = dispatch_indices(experts, E, cap)
+    k = cfg.experts_per_token
+    tok_idx = jnp.repeat(jnp.arange(n), k)
+    bucket = jnp.zeros((E + 1, cap, d), x_flat.dtype)
+    bucket = bucket.at[dest, rank].set(x_flat[tok_idx])
+    bucket = bucket[:E].reshape(M, E_loc, cap, d)
+
+    # ship token buckets to expert owners; receive (peer, E_loc, cap, d)
+    recv = lax.all_to_all(bucket, model_axis, split_axis=0, concat_axis=0,
+                          tiled=False)
+    recv = recv.reshape(M, E_loc, cap, d).transpose(1, 0, 2, 3)
+    recv = recv.reshape(E_loc, M * cap, d)
+
+    y_loc = _expert_ffn(recv, {k_: p_local[k_]
+                               for k_ in ("w_gate", "w_up", "w_down")})
+
+    y_loc = y_loc.reshape(E_loc, M, cap, d).transpose(1, 0, 2, 3)
+    back = lax.all_to_all(y_loc, model_axis, split_axis=0, concat_axis=0,
+                          tiled=False)
+    y_bucket = back.reshape(E, cap, d)
+
+    y_choice = y_bucket[jnp.minimum(dest, E - 1), rank]
+    y_choice = jnp.where(keep[:, None], y_choice, 0.0)
+    y = jnp.zeros_like(x_flat).at[tok_idx].add(
+        y_choice * weights.reshape(-1)[:, None])
+    if cfg.num_shared_experts:
+        y = y + _shared_ffn(x_flat, p_local["shared"])
+    aux = lax.pmean(aux, model_axis)
+    return y.reshape(B, S, d), aux

@@ -1,0 +1,164 @@
+"""Mamba2 / SSD mixer (state-space duality, arXiv:2405.21060).
+
+Chunked SSD algorithm: within a chunk of length Q the recurrence
+
+    h_t = a_t · h_{t-1} + Δt_t · B_t ⊗ x_t,     y_t = C_t · h_t + D · x_t
+
+is evaluated as a (masked, decay-weighted) attention-like quadratic form;
+across chunks only the (H, P, N) state is carried by a ``lax.scan``.  This
+is the memory-bounded formulation the Mamba2 paper uses on hardware —
+(B, S, H, P, N) tensors never materialize.
+
+Decode: single-step recurrence with an explicit (conv, ssm) state cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import dense_init, rmsnorm
+
+CHUNK = 256
+
+
+def ssm_init(key, cfg, dtype=jnp.float32) -> dict:
+    d, di, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * N
+    ks = jax.random.split(key, 4)
+    return {
+        # in_proj packs [z (di), xBC (di+2N), dt (H)]
+        "in_proj": dense_init(ks[0], d, 2 * di + 2 * N + H, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv_width, conv_dim),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),          # A = -exp(A_log)
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),   # softplus ≈ 0.12
+        "D": jnp.ones((H,), jnp.float32),
+        "gate_norm": jnp.zeros((di,), dtype),
+        "out_proj": dense_init(ks[2], di, d, dtype),
+    }
+
+
+def _split_proj(cfg, proj):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xBC = proj[..., di:2 * di + 2 * N]
+    dt = proj[..., 2 * di + 2 * N:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv along S. xBC: (B,S,C); w: (W,C)."""
+    W = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1], :] * w[i] for i in range(W))
+    return jax.nn.silu(out + b)
+
+
+def _segsum_decay(log_a):
+    """log_a: (..., Q).  L[i, j] = sum_{j < s <= i} log_a_s  (i >= j)."""
+    Q = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    L = cs[..., :, None] - cs[..., None, :]              # (.., i, j)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, L, -jnp.inf)
+
+
+def ssm_forward(p: dict, cfg, x: jax.Array, cache: dict | None = None):
+    """x: (B,S,d) → (B,S,d).  cache = {"conv": (B,W-1,C), "ssm": (B,H,P,N)}."""
+    B, S, _ = x.shape
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    proj = x @ p["in_proj"]
+    z, xBC, dt = _split_proj(cfg, proj)
+
+    new_cache = None
+    if cache is None:
+        xBC = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    else:
+        # decode (S==1) or cache-carrying prefill (S>1): conv uses the
+        # stored W-1 history instead of zero padding.
+        W = cfg.ssm_conv_width
+        hist = jnp.concatenate([cache["conv"], xBC], axis=1)  # (B,W-1+S,C)
+        conv_cache = hist[:, -(W - 1):, :]
+        out = sum(hist[:, i:i + S, :] * p["conv_w"][i] for i in range(W))
+        xBC = jax.nn.silu(out + p["conv_b"])
+
+    xh = xBC[..., :di].reshape(B, S, H, P)
+    Bmat = xBC[..., di:di + N]                            # (B,S,N)
+    Cmat = xBC[..., di + N:]                              # (B,S,N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"])                  # (B,S,H)
+    A = -jnp.exp(p["A_log"])                              # (H,)
+    log_a = dt * A                                        # (B,S,H) ≤ 0
+
+    if cache is None:
+        y, _ = _ssd_chunked(xh, Bmat, Cmat, dt, log_a, p["D"], H, P, N,
+                            jnp.zeros((B, H, P, N), jnp.float32))
+    elif S == 1:
+        h = cache["ssm"]                                  # (B,H,P,N)
+        a = jnp.exp(log_a[:, 0])                          # (B,H)
+        inp = jnp.einsum("bh,bhp,bn->bhpn", dt[:, 0], xh[:, 0], Bmat[:, 0])
+        h = a[..., None, None] * h + inp
+        y = jnp.einsum("bhpn,bn->bhp", h, Cmat[:, 0])
+        y = y + p["D"][None, :, None] * xh[:, 0]
+        y = y.reshape(B, 1, di)
+        new_cache = {"conv": conv_cache, "ssm": h}
+    else:
+        # cache-carrying prefill
+        y, h = _ssd_chunked(xh, Bmat, Cmat, dt, log_a, p["D"], H, P, N,
+                            cache["ssm"])
+        new_cache = {"conv": conv_cache, "ssm": h}
+
+    y = y.reshape(B, S, di)
+    y = rmsnorm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return y @ p["out_proj"], new_cache
+
+
+def _ssd_chunked(xh, Bmat, Cmat, dt, log_a, D, H, P, N, h0):
+    """Chunked SSD over full sequences.  Shapes: xh (B,S,H,P), B/C (B,S,N),
+    dt/log_a (B,S,H); h0 (B,H,P,N) initial state.
+    Returns (y (B,S,H*P), h_final)."""
+    B, S = xh.shape[0], xh.shape[1]
+    Q = min(CHUNK, S)
+    assert S % Q == 0, "pad sequence to the SSD chunk size"
+    nc = S // Q
+    # chunk views: (B,nc,Q,...) → scan over nc
+    r = lambda t: t.reshape(B, nc, Q, *t.shape[2:]).swapaxes(0, 1)
+    xh_c, B_c, C_c = r(xh), r(Bmat), r(Cmat)
+    dt_c, la_c = r(dt), r(log_a)
+
+    def chunk_step(h, inp):
+        xq, bq, cq, dtq, laq = inp                    # (B,Q,...)
+        # intra-chunk quadratic form
+        L = _segsum_decay(laq.transpose(0, 2, 1))     # (B,H,Q,Q)
+        G = jnp.einsum("bin,bjn->bij", cq, bq)        # (B,Q,Q)
+        M = G[:, None] * jnp.exp(L) * dtq.transpose(0, 2, 1)[:, :, None, :]
+        y = jnp.einsum("bhij,bjhp->bihp", M, xq)      # (B,Q,H,P)
+        # inter-chunk: contribution of carried state
+        decay_in = jnp.exp(jnp.cumsum(laq, axis=1))   # (B,Q,H) prod_{s<=i} a
+        y = y + jnp.einsum("bin,bih,bhpn->bihp", cq, decay_in, h)
+        # state update
+        total = decay_in[:, -1]                       # (B,H)
+        decay_out = jnp.exp(jnp.cumsum(laq[:, ::-1], axis=1)[:, ::-1]
+                            - laq)                    # prod_{j<s<=Q} a
+        upd = jnp.einsum("bjh,bjhp,bjn->bhpn", dtq * decay_out, xq, bq)
+        h = total[..., None, None] * h + upd
+        return h, y
+
+    h_final, ys = lax.scan(
+        chunk_step, h0.astype(jnp.float32),
+        (xh_c.astype(jnp.float32), B_c.astype(jnp.float32),
+         C_c.astype(jnp.float32), dt_c, la_c))
+    y = ys.swapaxes(0, 1).reshape(B, S, H, P)
+    y = y + D[None, None, :, None] * xh
+    return y.reshape(B, S, H * P).astype(xh.dtype), h_final
+
+
+def init_ssm_cache(cfg, B: int, dtype=jnp.float32) -> dict:
+    di, N = cfg.d_inner, cfg.ssm_state
+    return {
+        "conv": jnp.zeros((B, cfg.ssm_conv_width - 1, di + 2 * N), dtype),
+        "ssm": jnp.zeros((B, cfg.ssm_heads, cfg.ssm_head_dim, N),
+                         jnp.float32),
+    }

@@ -1,0 +1,331 @@
+"""Composable decoder/encoder transformer covering the 10 assigned archs.
+
+Layer stack is organized into homogeneous **segments** (same mixer + MLP
+kind) that are scanned with stacked parameters — one compiled layer body per
+segment regardless of depth.  Heterogeneity is expressed as:
+
+* per-layer flag arrays inside a segment (gemma2 local/global alternation);
+* a short unstacked prefix (deepseek-moe's first dense layer);
+* a *shared* attention block applied periodically inside the SSM scan
+  (zamba2's shared-block design — the block reuses one parameter set).
+
+Modalities (DESIGN §5): audio/vlm frontends are stubs per spec — the model
+consumes precomputed frame/patch embeddings through a linear projection.
+
+Decode: ``cache`` is a pytree mirroring the segment structure; prefill and
+decode share the cache path (prefill writes S tokens at offset 0).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import (embed_init, dense_init, mlp_forward,
+                                 mlp_init, rmsnorm, softcap)
+
+__all__ = ["init_params", "forward", "init_cache", "segments", "Segment"]
+
+
+# ---------------------------------------------------------------------------
+# Segment planning.
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Segment:
+    mixer: str            # 'attn' | 'ssm'
+    mlp: str              # 'dense' | 'moe' | 'none'
+    count: int
+    local_flags: tuple    # per-layer sliding-window on/off (attn segments)
+    shared_attn_every: int = 0   # hybrid: shared block cadence
+
+
+def segments(cfg: ModelConfig) -> list[Segment]:
+    if cfg.arch_type == "hybrid":
+        return [Segment(mixer="ssm", mlp="dense", count=cfg.num_layers,
+                        local_flags=(), shared_attn_every=cfg.attn_every)]
+    kinds, mlps = cfg.layer_kinds(), cfg.mlp_kinds()
+    segs: list[Segment] = []
+    i = 0
+    while i < cfg.num_layers:
+        mixer = "ssm" if kinds[i] == "ssm" else "attn"
+        mlp = mlps[i]
+        j = i
+        flags = []
+        while j < cfg.num_layers and mlps[j] == mlp \
+                and (("ssm" if kinds[j] == "ssm" else "attn") == mixer):
+            flags.append(kinds[j] == "attn_local")
+            j += 1
+        segs.append(Segment(mixer=mixer, mlp=mlp, count=j - i,
+                            local_flags=tuple(flags)))
+        i = j
+    return segs
+
+
+# ---------------------------------------------------------------------------
+# Init.
+# ---------------------------------------------------------------------------
+def _layer_init(key, cfg, seg: Segment, dtype):
+    km, kf, kn = jax.random.split(key, 3)
+    p: dict[str, Any] = {
+        "norm1": jnp.zeros((cfg.d_model,), dtype),
+        "norm2": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if seg.mixer == "attn":
+        p["mixer"] = attn_mod.attn_init(km, cfg, dtype)
+    else:
+        p["mixer"] = ssm_mod.ssm_init(km, cfg, dtype)
+    if seg.mlp == "dense":
+        p["mlp"] = mlp_init(kf, cfg.d_model, cfg.d_ff, cfg.activation, dtype)
+    elif seg.mlp == "moe":
+        p["mlp"] = moe_mod.moe_init(kf, cfg, dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32) -> dict:
+    keys = jax.random.split(key, 8)
+    params: dict[str, Any] = {
+        "embed": embed_init(keys[0], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[1], cfg.d_model, cfg.vocab_size,
+                                       dtype)
+    if cfg.modality != "text":
+        fd = cfg.frontend_dim or cfg.d_model
+        params["frontend_proj"] = dense_init(keys[2], fd, cfg.d_model, dtype)
+
+    segs = segments(cfg)
+    seg_params = []
+    for si, seg in enumerate(segs):
+        lkeys = jax.random.split(jax.random.fold_in(keys[3], si), seg.count)
+        stacked = jax.vmap(lambda k: _layer_init(k, cfg, seg, dtype))(lkeys)
+        seg_params.append(stacked)
+    params["segments"] = seg_params
+
+    if cfg.arch_type == "hybrid" and cfg.attn_every:
+        k_attn, k_mlp = jax.random.split(keys[4])
+        params["shared_attn"] = {
+            "norm": jnp.zeros((cfg.d_model,), dtype),
+            "attn": attn_mod.attn_init(k_attn, cfg, dtype),
+            "norm2": jnp.zeros((cfg.d_model,), dtype),
+            "mlp": mlp_init(k_mlp, cfg.d_model, cfg.d_ff, cfg.activation,
+                            dtype),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Cache.
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, B: int, S_max: int, dtype=jnp.float32,
+               ring: bool = False):
+    """ring=True: sliding-window attention segments use a window-sized ring
+    buffer instead of an S_max cache (§Perf long-context decode).  Only
+    applied to segments where every layer is local."""
+    segs = segments(cfg)
+    out = {"segments": []}
+    for seg in segs:
+        if seg.mixer == "attn":
+            all_local = seg.local_flags and all(seg.local_flags)
+            one = attn_mod.init_attn_cache(cfg, B, S_max, dtype,
+                                           ring=ring and all_local)
+        else:
+            one = ssm_mod.init_ssm_cache(cfg, B, dtype)
+        stacked = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (seg.count,) + a.shape).copy(), one)
+        out["segments"].append(stacked)
+    if cfg.arch_type == "hybrid" and cfg.attn_every:
+        n_apps = cfg.num_layers // cfg.attn_every
+        one = attn_mod.init_attn_cache(cfg, B, S_max, dtype)
+        out["shared_attn"] = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (n_apps,) + a.shape).copy(), one)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Forward.
+# ---------------------------------------------------------------------------
+def _embed_inputs(params, cfg, batch, cache):
+    d = cfg.d_model
+    if cfg.modality == "audio_frames":
+        x = batch["frames"] @ params["frontend_proj"]
+        B, S = x.shape[:2]
+        positions = jnp.arange(S)[None, :].repeat(B, 0)
+    elif cfg.modality == "image_patches" and "patches" in batch:
+        tok = params["embed"][batch["tokens"]]
+        patches = batch["patches"] @ params["frontend_proj"]
+        x = jnp.concatenate([patches, tok], axis=1)
+        B, S = x.shape[:2]
+        positions = jnp.arange(S)[None, :].repeat(B, 0)
+    else:
+        x = params["embed"][batch["tokens"]]
+        B, S = x.shape[:2]
+        if cache is not None and "pos" in batch:
+            positions = batch["pos"][:, None] + jnp.arange(S)[None, :]
+        else:
+            positions = jnp.arange(S)[None, :].repeat(B, 0)
+    return x, positions
+
+
+def _mixer_apply(seg, cfg, lp, x, positions, cache_l, window,
+                 attn_seq_sharding=None):
+    h = rmsnorm(x, lp["norm1"], cfg.norm_eps)
+    if seg.mixer == "attn":
+        if attn_seq_sharding is not None and h.shape[1] > 1:
+            # context parallelism (§Perf pair-2 it.2): shard the sequence
+            # over the model axis for attention — queries/scores split S;
+            # GSPMD all-gathers the (small, GQA) K/V for the contraction.
+            # Used when head counts don't divide the model axis.
+            h = jax.lax.with_sharding_constraint(h, attn_seq_sharding)
+        y, new_cache = _attn_with_window(lp["mixer"], cfg, h, window,
+                                         positions, cache_l)
+    else:
+        y, new_cache = ssm_mod.ssm_forward(lp["mixer"], cfg, h, cache_l)
+    return x + y, new_cache
+
+
+def _attn_with_window(p, cfg, h, window, positions, cache_l):
+    # attn_forward resolves local/global via a (possibly traced) window value
+    cfg_local = cfg
+    y, new_cache = attn_mod.attn_forward(
+        p, cfg_local, h, local=window, positions=positions, cache=cache_l,
+        norm_eps=cfg.norm_eps)
+    return y, new_cache
+
+
+def _mlp_apply(seg, cfg, lp, x, ep_ctx):
+    if seg.mlp == "none":
+        return x, 0.0
+    h = rmsnorm(x, lp["norm2"], cfg.norm_eps)
+    if seg.mlp == "dense":
+        return x + mlp_forward(lp["mlp"], h, cfg.activation), 0.0
+    # MoE
+    if ep_ctx is not None:
+        y, aux = ep_ctx(lp["mlp"], h)
+    else:
+        y, aux = moe_mod.moe_forward(lp["mlp"], cfg, h)
+    return x + y, aux
+
+
+def _run_segment(seg: Segment, cfg, stacked, x, positions, cache_seg,
+                 shared_attn, shared_cache, ep_ctx, act_sharding=None,
+                 layer_remat: bool = False, attn_seq_sharding=None):
+    local_flags = jnp.asarray(
+        [cfg.sliding_window if f else 0 for f in seg.local_flags]
+        or [0] * seg.count, jnp.int32)
+    apply_shared = jnp.asarray(
+        [(i + 1) % seg.shared_attn_every == 0 if seg.shared_attn_every
+         else False for i in range(seg.count)], bool)
+
+    has_cache = cache_seg is not None
+
+    def body(carry, xs):
+        x, shared_cache, app_idx = carry
+        lp, window, shared_flag, cache_l = xs
+        if act_sharding is not None:
+            # pin the layer-carry (and hence everything remat saves from
+            # it) to the batch sharding — without this GSPMD is free to
+            # replicate saved residuals across the data axis (§Perf it.1:
+            # an 11 TB/device temp blow-up caught by the dry-run).
+            x = jax.lax.with_sharding_constraint(x, act_sharding)
+        x, new_cache = _mixer_apply(seg, cfg, lp, x, positions, cache_l,
+                                    window, attn_seq_sharding)
+        x, aux = _mlp_apply(seg, cfg, lp, x, ep_ctx)
+        if act_sharding is not None:
+            x = jax.lax.with_sharding_constraint(x, act_sharding)
+
+        if seg.shared_attn_every:
+            def with_attn(x, shared_cache, app_idx):
+                h = rmsnorm(x, shared_attn["norm"], cfg.norm_eps)
+                if shared_cache is not None:
+                    cache_one = jax.tree_util.tree_map(
+                        lambda a: a[app_idx], shared_cache)
+                else:
+                    cache_one = None
+                y, cache_new = attn_mod.attn_forward(
+                    shared_attn["attn"], cfg, h, local=0,
+                    positions=positions, cache=cache_one,
+                    norm_eps=cfg.norm_eps)
+                if shared_cache is not None:
+                    shared_cache = jax.tree_util.tree_map(
+                        lambda full, one: full.at[app_idx].set(one),
+                        shared_cache, cache_new)
+                x = x + y
+                h2 = rmsnorm(x, shared_attn["norm2"], cfg.norm_eps)
+                return x + mlp_forward(shared_attn["mlp"], h2,
+                                       cfg.activation), shared_cache
+
+            def without(x, shared_cache, app_idx):
+                return x, shared_cache
+
+            x, shared_cache = lax.cond(
+                shared_flag,
+                lambda op: with_attn(*op),
+                lambda op: without(*op),
+                (x, shared_cache, app_idx))
+            app_idx = app_idx + shared_flag.astype(jnp.int32)
+
+        return (x, shared_cache, app_idx), (new_cache, aux)
+
+    if layer_remat and not has_cache:
+        # per-layer remat (§Perf it.3): the scan saves only each layer's
+        # input; everything inside the block is recomputed in backward.
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    xs = (stacked, local_flags, apply_shared, cache_seg)
+    (x, shared_cache, _), (new_cache_seg, auxs) = lax.scan(
+        body, (x, shared_cache, jnp.zeros((), jnp.int32)), xs)
+    aux = auxs.sum() if seg.mlp == "moe" else 0.0
+    return x, (new_cache_seg if has_cache else None), shared_cache, aux
+
+
+def forward(params, cfg: ModelConfig, batch, *, cache=None, ep_ctx=None,
+            return_hidden: bool = False, act_sharding=None,
+            layer_remat: bool = False, attn_seq_sharding=None):
+    """Returns (logits, new_cache, aux_loss).
+
+    batch: {"tokens": (B,S)} (+"pos" (B,) for decode) | audio/vlm variants.
+    cache: from init_cache (prefill/decode) or None (training).
+    ep_ctx: optional callable (moe_params, x)->(y, aux) for expert-parallel
+            execution (installed by the launcher under shard_map).
+    return_hidden: skip the LM head — return final-norm hidden states
+            (chunked-CE path computes the vocab projection itself).
+    """
+    x, positions = _embed_inputs(params, cfg, batch, cache)
+    if cache is not None and "pos" in batch:
+        positions = batch["pos"][:, None] + \
+            jnp.arange(x.shape[1])[None, :]
+
+    segs = segments(cfg)
+    shared_attn = params.get("shared_attn")
+    shared_cache = cache.get("shared_attn") if cache is not None else None
+    new_cache = {"segments": []} if cache is not None else None
+    aux_total = 0.0
+    for si, seg in enumerate(segs):
+        cache_seg = cache["segments"][si] if cache is not None else None
+        x, new_seg_cache, shared_cache, aux = _run_segment(
+            seg, cfg, params["segments"][si], x, positions, cache_seg,
+            shared_attn, shared_cache, ep_ctx, act_sharding, layer_remat,
+            attn_seq_sharding)
+        if cache is not None:
+            new_cache["segments"].append(new_seg_cache)
+        aux_total = aux_total + aux
+    if cache is not None and shared_cache is not None:
+        new_cache["shared_attn"] = shared_cache
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x, new_cache, aux_total
+    head = params.get("lm_head")
+    logits = x @ head if head is not None else x @ params["embed"].T
+    logits = softcap(logits, cfg.final_logit_softcap)
+    return logits, new_cache, aux_total

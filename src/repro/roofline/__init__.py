@@ -1,0 +1,2 @@
+from repro.roofline.analysis import (  # noqa: F401
+    model_flops, roofline_terms, load_reports, build_table)

@@ -1,0 +1,86 @@
+"""Roofline analysis (deliverable g).
+
+Derives the three roofline terms from a compiled dry-run artifact:
+
+    compute    = HLO_FLOPs_per_device / peak_FLOP/s          (197e12 bf16)
+    memory     = HLO_bytes_per_device / HBM_bw               (819e9 B/s)
+    collective = collective_bytes_per_device / link_bw       (50e9 B/s)
+
+``compiled.cost_analysis()`` is per-partition-program = per-device
+(verified in launch/dryrun.py); collective bytes come from parsing the
+partitioned HLO (cost_analysis does not expose them).
+
+MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference) with N = *active* params;
+the ratio MODEL_FLOPS / (chips · HLO_FLOPs) measures how much of the
+compiled compute is useful (catches remat/redundancy waste — remat'd
+training legitimately sits below 1).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.launch.mesh import HW
+
+__all__ = ["model_flops", "roofline_terms", "load_reports", "build_table"]
+
+REPORTS = os.path.join(os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))))), "reports", "dryrun")
+
+
+def model_flops(arch: str, shape: str) -> float:
+    if arch.startswith("lda"):
+        return 0.0
+    cfg = get_config(arch)
+    spec = INPUT_SHAPES[shape]
+    n_active = cfg.active_param_count()
+    if spec["kind"] == "train":
+        return 6.0 * n_active * spec["global_batch"] * spec["seq_len"]
+    if spec["kind"] == "prefill":
+        return 2.0 * n_active * spec["global_batch"] * spec["seq_len"]
+    return 2.0 * n_active * spec["global_batch"]
+
+
+def roofline_terms(flops_dev: float, bytes_dev: float,
+                   coll_bytes_dev: float) -> dict:
+    return {
+        "compute": flops_dev / HW.PEAK_FLOPS,
+        "memory": bytes_dev / HW.HBM_BW,
+        "collective": coll_bytes_dev / HW.ICI_BW,
+    }
+
+
+def load_reports(reports_dir: str | None = None) -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(
+            os.path.join(reports_dir or REPORTS, "*.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def build_table(reports: list[dict], mesh_filter: str | None = None):
+    """Markdown roofline table rows from dry-run reports."""
+    rows = []
+    for rep in reports:
+        if mesh_filter and rep.get("mesh") != mesh_filter:
+            continue
+        if "skipped" in rep:
+            rows.append((rep["arch"], rep["shape"], rep["mesh"], "SKIP",
+                         rep["skipped"]))
+            continue
+        if "error" in rep:
+            rows.append((rep["arch"], rep["shape"], rep["mesh"], "ERROR",
+                         rep["error"][:80]))
+            continue
+        t = rep["roofline_seconds"]
+        mf = model_flops(rep["arch"], rep["shape"])
+        useful = mf / (rep["hlo_flops_per_device"] * rep["chips"]) \
+            if rep["hlo_flops_per_device"] else 0.0
+        rows.append((
+            rep["arch"], rep["shape"], rep["mesh"], rep["bottleneck"],
+            f"compute={t['compute']:.2e} memory={t['memory']:.2e} "
+            f"collective={t['collective']:.2e} useful={useful:.2f}"))
+    return rows

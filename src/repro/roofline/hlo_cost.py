@@ -1,0 +1,257 @@
+"""While-aware HLO cost analyzer.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body **once**
+(verified: an 8-step scanned matmul reports 1/8 of the unrolled flops), so
+scanned layer stacks / attention chunks / nomad rounds are systematically
+under-counted.  This module re-derives flops, HBM bytes, and collective
+bytes from the partitioned HLO text, scaling every while body by its trip
+count (recursively — scans nest).
+
+Model:
+    flops       2 · |output| · |contracting dims| per dot (batch dims land
+                in |output| automatically); fusion computations recursed.
+    bytes       Σ (operands + result) over *memory-touching* top-level ops
+                (fusion, dot, custom-call, copy, slice/dynamic-*,
+                 collectives, sort, scatter, gather…) — fusion boundaries
+                are materialization points, so this approximates HBM
+                traffic at the right granularity.
+    collective  result bytes per collective op kind.
+    trip count  the integer constant in the while condition computation
+                (lax.scan lowers to 0..N step-1 counters).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+__all__ = ["analyze_hlo", "Cost"]
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "s64": 8, "u64": 8, "f16": 2, "bf16": 2,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "pred": 1, "s8": 1,
+                "u8": 1, "f8e4m3": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_LINE_RE = re.compile(
+    r"^\s*(ROOT\s+)?(%[\w.\-]+)\s*=\s*((?:\([^)]*\)|[a-z0-9]+\[[^\]]*\])"
+    r"(?:\{[^}]*\})?)\s+([\w\-]+)\((.*)$")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?(%[\w.\-]+)\s*(?:\(.*\))?\s*->.*\{")
+_CALL_RE = re.compile(r"(?:calls|body|condition|to_apply)=(%[\w.\-]+)")
+_WHILE_RE = re.compile(r"condition=(%[\w.\-]+),?\s*body=(%[\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERAND_RE = re.compile(r"(%[\w.\-]+)")
+
+MEM_OPS = {"fusion", "dot", "custom-call", "copy", "slice", "dynamic-slice",
+           "dynamic-update-slice", "scatter", "gather", "sort", "transpose",
+           "reshape", "broadcast", "reduce", "concatenate", "pad", "select",
+           "convert", "iota", "rng", "rng-bit-generator", "all-gather",
+           "all-reduce", "reduce-scatter", "all-to-all", "collective-permute",
+           "all-gather-start", "all-reduce-start", "collective-permute-start"}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in filter(None, dims.split(",")):
+            n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    n = 1
+    for d in filter(None, m.group(2).split(",")):
+        n *= int(d)
+    return n
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in filter(None, m.group(2).split(","))]
+
+
+@dataclass
+class _Op:
+    name: str
+    type_str: str
+    kind: str
+    rest: str       # everything after the opening '('
+
+
+@dataclass
+class _Computation:
+    name: str
+    ops: list = field(default_factory=list)
+    symbols: dict = field(default_factory=dict)   # %name -> type_str
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_by_kind: dict = field(default_factory=dict)
+
+    def __iadd__(self, other: "Cost"):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        self.collective_bytes += other.collective_bytes
+        for k, v in other.collective_by_kind.items():
+            self.collective_by_kind[k] = self.collective_by_kind.get(k, 0) + v
+        return self
+
+    def scaled(self, n: float) -> "Cost":
+        return Cost(self.flops * n, self.bytes * n,
+                    self.collective_bytes * n,
+                    {k: v * n for k, v in self.collective_by_kind.items()})
+
+
+def _parse(text: str) -> tuple[dict, str]:
+    comps: dict[str, _Computation] = {}
+    entry = None
+    cur = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        hdr = _COMP_HDR.match(line.strip())
+        if hdr and line.strip().endswith("{"):
+            cur = _Computation(hdr.group(1))
+            comps[cur.name] = cur
+            if line.strip().startswith("ENTRY"):
+                entry = cur.name
+            # parameters declared in the header: %p: f32[...]
+            for pname, ptype in re.findall(
+                    r"(%?[\w.\-]+)\s*:\s*((?:\([^)]*\)|[a-z0-9]+\[[^\]]*\]))",
+                    line):
+                key = pname if pname.startswith("%") else "%" + pname
+                cur.symbols[key] = ptype
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _LINE_RE.match(line)
+        if m:
+            _, name, type_str, kind, rest = m.groups()
+            cur.symbols[name] = type_str
+            cur.ops.append(_Op(name, type_str, kind, rest))
+    return comps, entry
+
+
+def _trip_count(cond: _Computation) -> int:
+    """Largest integer constant in the while condition computation."""
+    best = 1
+    for op in cond.ops:
+        if op.kind == "constant":
+            m = re.match(r"([0-9]+)\)?", op.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops(op: _Op, comp: _Computation) -> float:
+    out_elems = _shape_elems(op.type_str)
+    cm = _CONTRACT_RE.search(op.rest)
+    contract = 1
+    if cm:
+        operands = _OPERAND_RE.findall(op.rest.split(")")[0])
+        lhs_type = comp.symbols.get(operands[0], "") if operands else ""
+        dims = _shape_dims(lhs_type)
+        for idx in filter(None, cm.group(1).split(",")):
+            i = int(idx)
+            if i < len(dims):
+                contract *= dims[i]
+    return 2.0 * out_elems * contract
+
+
+def _operand_bytes(op: _Op, comp: _Computation) -> float:
+    total = _shape_bytes(op.type_str)
+    operands = _OPERAND_RE.findall(op.rest.split("),")[0])
+    for o in operands:
+        t = comp.symbols.get(o)
+        if t:
+            total += _shape_bytes(t)
+    return total
+
+
+def _comp_cost(comp: _Computation, comps: dict, memo: dict,
+               count_bytes: bool = True) -> Cost:
+    """count_bytes=False inside fusion computations: fused intermediates
+    live in registers/VMEM — only the fusion op's own operands+result are
+    HBM traffic (counted by the caller).  While/conditional bodies are real
+    programs and keep byte counting."""
+    key = (comp.name, count_bytes)
+    if key in memo:
+        return memo[key]
+    memo[key] = Cost()                # break cycles defensively
+    total = Cost()
+    for op in comp.ops:
+        if op.kind == "while":
+            wm = _WHILE_RE.search(op.rest)
+            if wm:
+                cond_name, body_name = wm.group(1), wm.group(2)
+                trips = _trip_count(comps[cond_name]) \
+                    if cond_name in comps else 1
+                body = _comp_cost(comps[body_name], comps, memo,
+                                  count_bytes) if body_name in comps \
+                    else Cost()
+                total += body.scaled(trips)
+            continue
+        if op.kind == "conditional":
+            for c in _CALL_RE.findall(op.rest):
+                if c in comps:
+                    total += _comp_cost(comps[c], comps, memo, count_bytes)
+            continue
+        if op.kind == "dot":
+            total += Cost(flops=_dot_flops(op, comp),
+                          bytes=_operand_bytes(op, comp)
+                          if count_bytes else 0.0)
+            continue
+        base_kind = op.kind[:-6] if op.kind.endswith("-start") else op.kind
+        if base_kind in COLLECTIVES:
+            nbytes = _shape_bytes(op.type_str)
+            if op.kind.endswith("-start") and op.type_str.startswith("("):
+                nbytes //= 2
+            total += Cost(bytes=nbytes if count_bytes else 0.0,
+                          collective_bytes=nbytes,
+                          collective_by_kind={base_kind: nbytes})
+            continue
+        # fusions / calls: recurse for flops+collectives only; the op's own
+        # operands+result are the HBM traffic.
+        for c in _CALL_RE.findall(op.rest):
+            if c in comps:
+                total += _comp_cost(comps[c], comps, memo,
+                                    count_bytes=False)
+        if count_bytes and op.kind in MEM_OPS:
+            if op.kind in ("dynamic-update-slice", "scatter"):
+                # in-place (aliased) update: traffic = touched bytes, not
+                # the whole buffer (XLA updates donated buffers in place)
+                ops_ = _OPERAND_RE.findall(op.rest.split("),")[0])
+                upd = comp.symbols.get(ops_[1]) if len(ops_) > 1 else None
+                touched = 2 * _shape_bytes(upd) if upd else \
+                    _shape_bytes(op.type_str)
+                total += Cost(bytes=touched)
+            elif op.kind in ("dynamic-slice", "gather"):
+                # reads only the gathered/sliced elements, not the table
+                total += Cost(bytes=2 * _shape_bytes(op.type_str))
+            else:
+                total += Cost(bytes=_operand_bytes(op, comp))
+    memo[key] = total
+    return total
+
+
+def analyze_hlo(text: str) -> Cost:
+    comps, entry = _parse(text)
+    if entry is None:
+        return Cost()
+    return _comp_cost(comps[entry], comps, {}, count_bytes=True)

@@ -1,0 +1,86 @@
+"""Batched serving engine: static-batch prefill + decode loop.
+
+The paper's system is a trainer, so serving is substrate: a minimal but
+real engine that takes a batch of variable-length prompts, left-pads...
+no — right-aligns via per-sequence positions: each sequence prefils its own
+length (cache "len" is per-batch), then decodes greedily until max_tokens
+or EOS.  Everything jit-compiled: one prefill call + one fori-style decode
+loop with a fixed step function (the `decode_32k` dry-run shape is exactly
+one iteration of this loop).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.serve.serve_step import decode_step, init_cache
+
+__all__ = ["generate"]
+
+
+def generate(params, cfg: ModelConfig, prompts: list[list[int]], *,
+             max_new_tokens: int = 16, eos_id: int = -1,
+             temperature: float = 0.0, key=None,
+             ring: bool = False) -> list[list[int]]:
+    """Greedy/sampled continuation for a batch of variable-length prompts."""
+    B = len(prompts)
+    max_len = max(len(p) for p in prompts)
+    S_max = max_len + max_new_tokens + 1
+    key = jax.random.key(0) if key is None else key
+
+    # pad prompts to a rectangle; track true lengths
+    tok = np.zeros((B, max_len), np.int32)
+    lens = np.zeros((B,), np.int32)
+    for i, p in enumerate(prompts):
+        tok[i, :len(p)] = p
+        lens[i] = len(p)
+    tokens = jnp.asarray(tok)
+    lens = jnp.asarray(lens)
+
+    cache = init_cache(cfg, B, S_max, ring=ring)
+
+    # prefill the padded rectangle; padded positions write garbage into the
+    # cache beyond each sequence's length, but "len" is then reset to the
+    # true length so decode masks them out (kv_len masking).
+    _, cache, _ = transformer.forward(
+        params, cfg, {"tokens": tokens,
+                      "pos": jnp.zeros((B,), jnp.int32)}, cache=cache)
+    cache = _set_lens(cache, lens)
+
+    last_tok = tokens[jnp.arange(B), lens - 1][:, None]
+    out = [[] for _ in range(B)]
+    done = np.zeros(B, bool)
+    pos = lens - 1
+
+    step = jax.jit(lambda p, t, q, c, k: decode_step(
+        p, cfg, t, q, c, temperature=temperature, key=k))
+
+    # re-decode the last prompt token to get the first continuation
+    for it in range(max_new_tokens):
+        key, sub = jax.random.split(key)
+        cache_step = _set_lens(cache, pos)     # attend up to current pos
+        nxt, _, cache = step(params, last_tok, pos, cache_step, sub)
+        nxt_np = np.asarray(nxt[:, 0])
+        for i in range(B):
+            if not done[i]:
+                if int(nxt_np[i]) == eos_id:
+                    done[i] = True
+                else:
+                    out[i].append(int(nxt_np[i]))
+        if done.all():
+            break
+        last_tok = nxt
+        pos = pos + 1
+    return out
+
+
+def _set_lens(cache, lens):
+    def fix(path, leaf):
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        if name == "len":
+            return jnp.broadcast_to(lens, leaf.shape).astype(leaf.dtype)
+        return leaf
+    return jax.tree_util.tree_map_with_path(fix, cache)

@@ -1,0 +1,43 @@
+"""Serving steps: prefill (fill the cache) and decode (one token).
+
+``decode_32k`` / ``long_500k`` dry-run shapes lower ``serve_step``: ONE new
+token against a KV/SSM cache of ``seq_len`` (per spec).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+
+__all__ = ["prefill", "decode_step", "make_decode_step", "init_cache"]
+
+init_cache = transformer.init_cache
+
+
+def prefill(params, cfg: ModelConfig, batch, cache):
+    """Run the full prompt through the model, filling the cache."""
+    logits, cache, _ = transformer.forward(params, cfg, batch, cache=cache)
+    return logits, cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens, pos, cache, *,
+                temperature: float = 0.0, key=None):
+    """One decode step. tokens: (B,1) current token; pos: (B,) its index.
+
+    Returns (next_tokens (B,1), logits (B,1,V), new_cache).
+    """
+    batch = {"tokens": tokens, "pos": pos}
+    logits, cache, _ = transformer.forward(params, cfg, batch, cache=cache)
+    if temperature > 0.0 and key is not None:
+        nxt = jax.random.categorical(key, logits[:, -1] / temperature)
+    else:
+        nxt = jnp.argmax(logits[:, -1], axis=-1)
+    return nxt[:, None].astype(jnp.int32), logits, cache
+
+
+def make_decode_step(cfg: ModelConfig):
+    def step(params, tokens, pos, cache):
+        return decode_step(params, cfg, tokens, pos, cache)
+    return step

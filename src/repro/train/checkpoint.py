@@ -1,0 +1,45 @@
+"""Checkpointing: msgpack-free, numpy ``.npz`` of the flattened pytree.
+
+Path-keyed flat dict → npz; restore rebuilds with the same treedef.  Works
+for params, optimizer state, and LDA count tables alike.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+
+__all__ = ["save", "restore"]
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":      # npz has no bf16: lossless f32
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def save(path: str, tree) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **_flatten(tree))
+
+
+def restore(path: str, like):
+    """Restore into the structure of ``like`` (shape/dtype template)."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for path_k, leaf in leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path_k)
+        arr = data[key]
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        out.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), out)

@@ -1,0 +1,163 @@
+"""Per-architecture smoke tests (spec requirement f).
+
+Each assigned arch instantiates a REDUCED same-family variant (2 layers,
+d_model ≤ 512, ≤ 4 experts) and runs one forward + one train step on CPU,
+asserting output shapes and finiteness.  Decode correctness: prefill+decode
+must match the full-context forward at the decoded position.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models import transformer
+from repro.serve.serve_step import decode_step, init_cache, prefill
+from repro.train.train_step import init_train_state, loss_fn, make_train_step
+
+ARCH_NAMES = sorted(ARCHS.keys())
+B, S = 2, 32
+
+
+def _batch(cfg, key):
+    kt, kp, kf, kl = jax.random.split(key, 4)
+    if cfg.modality == "audio_frames":
+        return {
+            "frames": jax.random.normal(kf, (B, S, cfg.frontend_dim)),
+            "labels": jax.random.randint(kl, (B, S), 0, cfg.vocab_size),
+        }
+    if cfg.modality == "image_patches":
+        return {
+            "tokens": jax.random.randint(kt, (B, S), 0, cfg.vocab_size),
+            "patches": jax.random.normal(
+                kp, (B, cfg.frontend_tokens, cfg.frontend_dim)),
+        }
+    return {"tokens": jax.random.randint(kt, (B, S), 0, cfg.vocab_size)}
+
+
+@pytest.fixture(scope="module")
+def states():
+    return {}
+
+
+def _get_state(states, name):
+    if name not in states:
+        cfg = get_config(name).smoke()
+        states[name] = (cfg, init_train_state(cfg, jax.random.key(0)))
+    return states[name]
+
+
+class TestForward:
+    @pytest.mark.parametrize("name", ARCH_NAMES)
+    def test_forward_shapes_finite(self, states, name):
+        cfg, state = _get_state(states, name)
+        batch = _batch(cfg, jax.random.key(1))
+        logits, _, aux = jax.jit(
+            lambda p, b: transformer.forward(p, cfg, b)
+        )(state.params, batch)
+        S_out = S + (cfg.frontend_tokens if cfg.modality == "image_patches"
+                     else 0)
+        assert logits.shape == (B, S_out, cfg.vocab_size)
+        assert bool(jnp.isfinite(logits).all()), name
+        if cfg.num_experts:
+            assert bool(jnp.isfinite(aux)), name
+
+    @pytest.mark.parametrize("name", ARCH_NAMES)
+    def test_train_step_improves_nothing_nan(self, states, name):
+        cfg, state = _get_state(states, name)
+        batch = _batch(cfg, jax.random.key(2))
+        step = jax.jit(make_train_step(cfg, lr=1e-3, remat=False))
+        state2, metrics = step(state, batch)
+        assert bool(jnp.isfinite(metrics["loss"])), (name, metrics)
+        assert bool(jnp.isfinite(metrics["grad_norm"]))
+        # params actually moved
+        moved = jax.tree_util.tree_map(
+            lambda a, b: float(jnp.abs(a - b).max()),
+            state.params, state2.params)
+        assert max(jax.tree_util.tree_leaves(moved)) > 0
+
+    @pytest.mark.parametrize("name", ARCH_NAMES)
+    def test_train_step_with_remat(self, states, name):
+        cfg, state = _get_state(states, name)
+        batch = _batch(cfg, jax.random.key(3))
+        step = jax.jit(make_train_step(cfg, lr=1e-3, remat=True))
+        _, metrics = step(state, batch)
+        assert bool(jnp.isfinite(metrics["loss"])), name
+
+
+class TestDecode:
+    """prefill + decode must reproduce the full forward (decoder archs)."""
+
+    @pytest.mark.parametrize("name", [
+        n for n in ARCH_NAMES if get_config(n).causal
+        and get_config(n).modality == "text"])
+    def test_decode_matches_forward(self, states, name):
+        cfg, state = _get_state(states, name)
+        params = state.params
+        key = jax.random.key(4)
+        tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+
+        # full forward
+        logits_full, _, _ = jax.jit(
+            lambda p, t: transformer.forward(p, cfg, {"tokens": t})
+        )(params, tokens)
+
+        # prefill first S-1, then decode token S-1
+        cache = init_cache(cfg, B, S + 8)
+        _, cache = prefill(params, cfg, {"tokens": tokens[:, :S - 1],
+                                         "pos": jnp.zeros((B,), jnp.int32)},
+                           cache)
+        _, logits_dec, _ = decode_step(
+            params, cfg, tokens[:, S - 1:S],
+            jnp.full((B,), S - 1, jnp.int32), cache)
+        np.testing.assert_allclose(
+            np.asarray(logits_dec[:, 0]), np.asarray(logits_full[:, -1]),
+            rtol=2e-3, atol=2e-3)
+
+
+class TestConfigs:
+    @pytest.mark.parametrize("name", ARCH_NAMES)
+    def test_full_config_matches_assignment(self, name):
+        cfg = get_config(name)
+        spec = {
+            "kimi-k2-1t-a32b": (61, 7168, 64, 8, 163840),
+            "gemma2-27b": (46, 4608, 32, 16, 256000),
+            "hubert-xlarge": (48, 1280, 16, 16, 504),
+            "zamba2-2.7b": (54, 2560, 32, 32, 32000),
+            "internvl2-1b": (24, 896, 14, 2, 151655),
+            "mamba2-1.3b": (48, 2048, 0, 0, 50280),
+            "phi4-mini-3.8b": (32, 3072, 24, 8, 200064),
+            "deepseek-moe-16b": (28, 2048, 16, 16, 102400),
+            "granite-3-2b": (40, 2048, 32, 8, 49155),
+            "qwen3-8b": (36, 4096, 32, 8, 151936),
+        }[name]
+        assert (cfg.num_layers, cfg.d_model, cfg.num_heads,
+                cfg.num_kv_heads, cfg.vocab_size) == spec
+
+    def test_param_counts_plausible(self):
+        """Analytic sizes should be in the advertised ballpark."""
+        expect = {
+            "kimi-k2-1t-a32b": (0.8e12, 1.3e12),
+            "gemma2-27b": (20e9, 32e9),
+            "mamba2-1.3b": (1.0e9, 1.7e9),
+            "phi4-mini-3.8b": (3.0e9, 4.8e9),
+            "deepseek-moe-16b": (13e9, 20e9),
+            "granite-3-2b": (2.0e9, 3.3e9),
+            "qwen3-8b": (6.5e9, 9.5e9),
+            "zamba2-2.7b": (2.0e9, 3.6e9),
+        }
+        for name, (lo, hi) in expect.items():
+            n = get_config(name).param_count()
+            assert lo <= n <= hi, (name, f"{n:.3e}")
+
+    def test_smoke_configs_are_small(self):
+        for name in ARCH_NAMES:
+            s = get_config(name).smoke()
+            assert s.num_layers == 2 and s.d_model <= 512
+            assert s.num_experts <= 4
+
+    def test_moe_active_params(self):
+        cfg = get_config("kimi-k2-1t-a32b")
+        active = cfg.active_param_count()
+        assert active < 0.1 * cfg.param_count()  # a32b of 1t
+        assert 20e9 < active < 60e9

@@ -1,0 +1,135 @@
+"""F+tree unit + property tests (paper §3.1, Algorithms 1-2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ftree
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand_p(rng, T):
+    return jnp.asarray(rng.random(T).astype(np.float32) + 0.01)
+
+
+class TestBuild:
+    @pytest.mark.parametrize("T", [1, 2, 4, 16, 128, 1024])
+    def test_internal_nodes_are_child_sums(self, T):
+        rng = np.random.default_rng(0)
+        p = _rand_p(rng, T)
+        F = ftree.build(p)
+        assert F.shape == (2 * T,)
+        F = np.asarray(F)
+        for i in range(1, T):
+            np.testing.assert_allclose(F[i], F[2 * i] + F[2 * i + 1],
+                                       rtol=1e-6)
+        np.testing.assert_allclose(F[T:], np.asarray(p))
+        np.testing.assert_allclose(F[1], np.asarray(p).sum(), rtol=1e-6)
+
+    def test_non_pow2_raises(self):
+        with pytest.raises(ValueError):
+            ftree.build(jnp.ones(3))
+
+    def test_pad_pow2(self):
+        p = jnp.ones(5)
+        pp = ftree.pad_pow2(p)
+        assert pp.shape == (8,)
+        assert float(pp.sum()) == 5.0
+
+    def test_batched_build(self):
+        rng = np.random.default_rng(1)
+        p = jnp.asarray(rng.random((3, 8)).astype(np.float32))
+        F = ftree.build(p)
+        assert F.shape == (3, 16)
+        np.testing.assert_allclose(np.asarray(ftree.total(F)),
+                                   np.asarray(p.sum(-1)), rtol=1e-6)
+
+
+class TestSample:
+    @pytest.mark.parametrize("T", [2, 8, 64, 1024])
+    def test_matches_inverse_cdf(self, T):
+        """F.sample(u) must equal min{t: cumsum(p)_t > u} for a grid of u."""
+        rng = np.random.default_rng(2)
+        p = _rand_p(rng, T)
+        F = ftree.build(p)
+        c = np.cumsum(np.asarray(p))
+        u01 = jnp.asarray(np.linspace(0.0, 1.0 - 1e-6, 257, dtype=np.float32))
+        got = np.asarray(ftree.sample_batch(F, u01))
+        want = np.searchsorted(c, np.asarray(u01) * c[-1], side="right")
+        # float accumulation order differs near boundaries: allow ulp slack
+        # by checking the chosen leaf's cumulative interval contains u.
+        u = np.asarray(u01) * c[-1]
+        lo = np.concatenate([[0.0], c])[got]
+        hi = np.concatenate([[0.0], c])[got + 1]
+        ok = (u >= lo - 1e-4) & (u <= hi + 1e-4)
+        assert ok.all(), (got[~ok], want[~ok])
+
+    def test_zero_mass_leaves_never_sampled(self):
+        p = jnp.asarray([0.0, 1.0, 0.0, 2.0, 0.0, 0.0, 3.0, 0.0],
+                        dtype=jnp.float32)
+        F = ftree.build(p)
+        u = jax.random.uniform(jax.random.key(0), (4096,))
+        got = np.asarray(ftree.sample_batch(F, u))
+        assert set(np.unique(got)).issubset({1, 3, 6})
+
+    def test_histogram_matches_distribution(self):
+        rng = np.random.default_rng(3)
+        T = 32
+        p = _rand_p(rng, T)
+        F = ftree.build(p)
+        n = 200_000
+        u = jax.random.uniform(jax.random.key(1), (n,))
+        got = np.asarray(ftree.sample_batch(F, u))
+        hist = np.bincount(got, minlength=T) / n
+        want = np.asarray(p) / float(np.asarray(p).sum())
+        np.testing.assert_allclose(hist, want, atol=0.01)
+
+
+class TestUpdate:
+    @given(T_log=st.integers(1, 8), t_frac=st.floats(0, 0.999),
+           delta=st.floats(-0.5, 5.0), seed=st.integers(0, 100))
+    @settings(max_examples=60, deadline=None)
+    def test_update_equals_rebuild(self, T_log, t_frac, delta, seed):
+        T = 1 << T_log
+        rng = np.random.default_rng(seed)
+        p = rng.random(T).astype(np.float32) + 1.0
+        t = int(t_frac * T)
+        F1 = ftree.update(ftree.build(jnp.asarray(p)), t, delta)
+        p2 = p.copy()
+        p2[t] += delta
+        F2 = ftree.build(jnp.asarray(p2))
+        np.testing.assert_allclose(np.asarray(F1), np.asarray(F2),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_update_batch_duplicates_accumulate(self):
+        T = 16
+        p = jnp.ones(T)
+        ts = jnp.asarray([3, 3, 3, 7], dtype=jnp.int32)
+        ds = jnp.asarray([1.0, 1.0, 1.0, 2.0], dtype=jnp.float32)
+        F = ftree.update_batch(ftree.build(p), ts, ds)
+        leaves = np.asarray(ftree.leaves(F))
+        assert leaves[3] == 4.0 and leaves[7] == 3.0
+        np.testing.assert_allclose(float(ftree.total(F)), T + 5.0, rtol=1e-6)
+
+    def test_set_leaf(self):
+        T = 8
+        p = jnp.arange(1.0, T + 1)
+        F = ftree.set_leaf(ftree.build(p), 2, 10.0)
+        leaves = np.asarray(ftree.leaves(F))
+        assert leaves[2] == 10.0
+        np.testing.assert_allclose(float(ftree.total(F)),
+                                   float(p.sum()) + 7.0, rtol=1e-6)
+
+    def test_update_inside_jit_and_scan(self):
+        T = 64
+        F0 = ftree.build(jnp.ones(T))
+
+        def body(F, t):
+            return ftree.update(F, t, 1.0), None
+
+        ts = jnp.arange(T, dtype=jnp.int32)
+        F, _ = jax.jit(lambda F: jax.lax.scan(body, F, ts))(F0)
+        np.testing.assert_allclose(np.asarray(ftree.leaves(F)),
+                                   np.full(T, 2.0), rtol=1e-6)

@@ -1,0 +1,124 @@
+"""Launch-layer unit tests: sharding rules, HLO collective parser,
+input specs (no multi-device requirement — pure logic)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import ARCHS, INPUT_SHAPES, get_config, shape_applicable
+from repro.launch.dryrun import collective_bytes
+from repro.launch.input_specs import input_specs
+from repro.launch.sharding_rules import sanitize_spec
+from repro.models import transformer
+from repro.train.train_step import init_train_state
+from repro.launch import sharding_rules as rules
+
+
+def _fake_mesh():
+    """AbstractMesh stand-in: we only need axis sizes for spec logic."""
+    dev = np.array(jax.devices()[:1])
+    # use a 1-device concrete mesh for NamedSharding construction and a
+    # shape dict for divisibility logic via a tiny shim
+    class Shim:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    return Shim()
+
+
+class TestSanitize:
+    def test_drops_nondivisible_axes(self):
+        mesh = _fake_mesh()
+        spec = sanitize_spec(P("model", None), (151655, 896), mesh)
+        assert spec == P(None, None)
+        spec = sanitize_spec(P("model", None), (163840, 7168), mesh)
+        assert spec == P("model", None)
+
+    def test_tuple_axes(self):
+        mesh = _fake_mesh()
+        spec = sanitize_spec(P(("data", "model"), None), (512, 4), mesh)
+        assert spec == P(("data", "model"), None)
+        spec = sanitize_spec(P(("data", "model"), None), (100, 4), mesh)
+        assert spec == P(None, None)
+
+    def test_pads_short_specs(self):
+        mesh = _fake_mesh()
+        spec = sanitize_spec(P("model"), (32, 4, 4), mesh)
+        assert spec == P("model", None, None)
+
+
+class TestCollectiveParser:
+    HLO = """
+  %ag = f32[2048,2048]{0,1} all-gather(%copy), channel_id=1
+  %ar = f32[1024]{0} all-reduce(%x), replica_groups={}
+  %rs = bf16[64,32]{1,0} reduce-scatter(%y), dimensions={0}
+  %a2a = f32[16,8]{1,0} all-to-all(%z)
+  %cp = s32[128]{0} collective-permute(%w)
+  %ags = (f32[256],f32[256]) all-gather-start(%v)
+  %agd = f32[256]{0} all-gather-done(%ags)
+  %fusion = f32[8]{0} fusion(%a), calls=%c, metadata={op_name="all-reduce"}
+"""
+
+    def test_counts_and_bytes(self):
+        out = collective_bytes(self.HLO)
+        assert out["all-gather"] == 2048 * 2048 * 4 + 256 * 4  # + start/2
+        assert out["all-reduce"] == 1024 * 4      # metadata line not counted
+        assert out["reduce-scatter"] == 64 * 32 * 2
+        assert out["all-to-all"] == 16 * 8 * 4
+        assert out["collective-permute"] == 128 * 4
+        assert out["op_counts"]["all-gather"] == 2
+
+    def test_empty(self):
+        out = collective_bytes("%x = f32[4]{0} add(%a, %b)")
+        assert out["total"] == 0
+
+
+class TestInputSpecs:
+    @pytest.mark.parametrize("arch", sorted(ARCHS))
+    @pytest.mark.parametrize("shape", sorted(INPUT_SHAPES))
+    def test_specs_exist_for_applicable(self, arch, shape):
+        cfg = get_config(arch)
+        ok, note = shape_applicable(cfg, shape)
+        if not ok:
+            assert cfg.is_encoder_only
+            return
+        sds = input_specs(cfg, shape)
+        spec = INPUT_SHAPES[shape]
+        if spec["kind"] == "decode":
+            assert sds["tokens"].shape == (spec["global_batch"], 1)
+            assert sds["pos"].shape == (spec["global_batch"],)
+        elif cfg.modality == "audio_frames":
+            assert sds["frames"].shape[0] == spec["global_batch"]
+        else:
+            assert sds["tokens"].shape[0] == spec["global_batch"]
+
+    def test_vlm_prefill_splits_patches(self):
+        cfg = get_config("internvl2-1b")
+        sds = input_specs(cfg, "prefill_32k")
+        total = sds["tokens"].shape[1] + sds["patches"].shape[1]
+        assert total == INPUT_SHAPES["prefill_32k"]["seq_len"]
+
+
+class TestParamSpecCoverage:
+    """Every arch's param tree gets a spec; sharded axes always divide."""
+
+    @pytest.mark.parametrize("arch", sorted(ARCHS))
+    def test_specs_cover_tree(self, arch):
+        cfg = get_config(arch)
+        shapes = jax.eval_shape(
+            lambda: transformer.init_params(cfg, jax.random.key(0)))
+        specs = rules.param_specs(shapes, _fake_mesh(), fsdp=False)
+        n_shapes = len(jax.tree_util.tree_leaves(shapes))
+        n_specs = len(jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(x, P)))
+        assert n_shapes == n_specs
+
+    def test_moe_experts_sharded(self):
+        cfg = get_config("deepseek-moe-16b")
+        shapes = jax.eval_shape(
+            lambda: transformer.init_params(cfg, jax.random.key(0)))
+        specs = rules.param_specs(shapes, _fake_mesh(), fsdp=False)
+        # find a routed expert weight: stacked (L, E, d, f) → E over model
+        seg = specs["segments"][-1]["mlp"]
+        assert seg["w_gate"] == P(None, "model", None, None)
+        assert seg["router"] == P(None, None, "model")

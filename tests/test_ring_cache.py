@@ -1,0 +1,68 @@
+"""Ring-buffer KV cache (§Perf long-context decode optimization).
+
+Decoding with a window-sized ring buffer must produce the same logits as
+decoding with the full-length cache, for sliding-window models — including
+after the buffer wraps."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer
+from repro.serve.serve_step import decode_step, init_cache
+from repro.train.train_step import init_train_state
+
+
+@pytest.fixture(scope="module")
+def sw_model():
+    cfg = get_config("granite-3-2b").smoke()
+    cfg = cfg.with_long_context(window=8)      # tiny window to force wraps
+    state = init_train_state(cfg, jax.random.key(0))
+    return cfg, state.params
+
+
+def _decode_seq(cfg, params, tokens, cache):
+    """Greedy-decode through `tokens` one at a time, collecting logits."""
+    B, S = tokens.shape
+    outs = []
+    for t in range(S):
+        _, logits, cache = decode_step(
+            params, cfg, tokens[:, t:t + 1],
+            jnp.full((B,), t, jnp.int32), cache)
+        outs.append(logits[:, 0])
+    return jnp.stack(outs, axis=1), cache
+
+
+class TestRingCache:
+    def test_matches_full_cache_after_wrap(self, sw_model):
+        cfg, params = sw_model
+        B, S = 2, 24                           # 3× the window: wraps twice
+        tokens = jax.random.randint(jax.random.key(1), (B, S), 0,
+                                    cfg.vocab_size)
+        full = init_cache(cfg, B, S + 4)
+        ring = init_cache(cfg, B, S + 4, ring=True)
+        lf, _ = _decode_seq(cfg, params, tokens, full)
+        lr, _ = _decode_seq(cfg, params, tokens, ring)
+        np.testing.assert_allclose(np.asarray(lf), np.asarray(lr),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_ring_cache_is_window_sized(self, sw_model):
+        cfg, params = sw_model
+        ring = init_cache(cfg, 2, 1000, ring=True)
+        k = ring["segments"][0]["k"]      # stacked: (count, B, S_cache, …)
+        assert k.shape[2] == cfg.sliding_window
+        assert "slot_pos" in ring["segments"][0]
+
+    def test_full_cache_unaffected_without_flag(self, sw_model):
+        cfg, params = sw_model
+        full = init_cache(cfg, 2, 1000)
+        assert full["segments"][0]["k"].shape[2] == 1000
+        assert "slot_pos" not in full["segments"][0]
+
+    def test_no_ring_for_global_attention(self):
+        cfg = get_config("qwen3-8b").smoke()    # global attention
+        ring = init_cache(cfg, 2, 64, ring=True)
+        assert "slot_pos" not in ring["segments"][0]

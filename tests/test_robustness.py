@@ -1,0 +1,128 @@
+"""Robustness: float drift bounds, degenerate corpora, edge shapes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cgs, ftree, likelihood
+from repro.data.corpus import Corpus
+from repro.data.sharding import build_layout
+from repro.data import synthetic
+
+
+class TestFTreeDrift:
+    """DESIGN §3: repeated delta updates drift in f32; rebuilds bound it."""
+
+    def test_drift_grows_then_rebuild_resets(self):
+        T = 1024
+        rng = np.random.default_rng(0)
+        p = rng.random(T).astype(np.float32) + 0.5
+        F = ftree.build(jnp.asarray(p))
+        ts = rng.integers(0, T, 20_000).astype(np.int32)
+        ds = (rng.random(20_000).astype(np.float32) - 0.5) * 0.1
+
+        def many(F, ts, ds):
+            def body(F, td):
+                return ftree.update(F, td[0], td[1]), None
+            return jax.lax.scan(body, F, (jnp.asarray(ts),
+                                          jnp.asarray(ds)))[0]
+        F = jax.jit(many)(F, ts, ds)
+        p2 = p.copy()
+        np.add.at(p2, ts, ds)
+        # internal consistency after 20k updates: root vs true sum
+        drift = abs(float(ftree.total(F)) - p2.sum())
+        assert drift < 0.5, drift   # bounded but nonzero in general
+        # rebuild restores exactness
+        F_rebuilt = ftree.build(jnp.asarray(ftree.leaves(F)))
+        resid = abs(float(ftree.total(F_rebuilt))
+                    - float(ftree.leaves(F).sum()))
+        assert resid < 1e-2
+
+    @given(n_upd=st.integers(1, 500), seed=st.integers(0, 20))
+    @settings(max_examples=15, deadline=None)
+    def test_internal_nodes_stay_consistent(self, n_upd, seed):
+        T = 64
+        rng = np.random.default_rng(seed)
+        p = rng.random(T).astype(np.float32) + 0.1
+        F = ftree.build(jnp.asarray(p))
+        for _ in range(n_upd // 50 + 1):
+            ts = jnp.asarray(rng.integers(0, T, 50).astype(np.int32))
+            ds = jnp.asarray(rng.random(50).astype(np.float32) * 0.2)
+            F = ftree.update_batch(F, ts, ds)
+        Fn = np.asarray(F)
+        for i in range(1, T):
+            np.testing.assert_allclose(Fn[i], Fn[2 * i] + Fn[2 * i + 1],
+                                       rtol=1e-3, atol=1e-3)
+
+
+class TestDegenerateCorpora:
+    def test_single_word_vocab(self):
+        doc_ids = np.repeat(np.arange(4, dtype=np.int32), 5)
+        word_ids = np.zeros(20, np.int32)
+        corpus = Corpus(doc_ids=doc_ids, word_ids=word_ids,
+                        num_docs=4, num_words=1)
+        T = 4
+        state = cgs.init_state(corpus, T, jax.random.key(0))
+        order = jnp.asarray(corpus.word_order())
+        boundary = jnp.asarray(corpus.word_boundary())
+        state = cgs.sweep_fplda_word(
+            state, jnp.asarray(doc_ids), jnp.asarray(word_ids),
+            order, boundary, 0.5, 0.01)
+        assert cgs.check_invariants(state, corpus)["n_t_mismatch"] == 0
+
+    def test_one_token_documents(self):
+        doc_ids = np.arange(10, dtype=np.int32)
+        word_ids = (np.arange(10) % 3).astype(np.int32)
+        corpus = Corpus(doc_ids=doc_ids, word_ids=word_ids,
+                        num_docs=10, num_words=3)
+        state = cgs.init_state(corpus, 4, jax.random.key(1))
+        order = jnp.asarray(corpus.doc_order())
+        state = cgs.sweep_reference(
+            state, jnp.asarray(doc_ids), jnp.asarray(word_ids), order,
+            0.5, 0.01)
+        v = cgs.check_invariants(state, corpus)
+        assert all(x == 0 for x in v.values())
+
+    def test_layout_with_empty_workers(self):
+        """More workers than documents: some workers own nothing."""
+        doc_ids = np.zeros(6, np.int32)
+        word_ids = np.arange(6, dtype=np.int32)
+        corpus = Corpus(doc_ids=doc_ids, word_ids=word_ids,
+                        num_docs=1, num_words=6)
+        lay = build_layout(corpus, n_workers=4, T=4)
+        assert int(lay.tok_valid.sum()) == 6
+        assert lay.cell_sizes.sum() == 6
+
+    def test_ll_on_empty_topic(self):
+        """Topics with zero mass must not produce NaN LL."""
+        corpus, _, _ = synthetic.make_corpus(
+            num_docs=10, vocab_size=16, num_topics=2, mean_doc_len=5.0,
+            seed=2)
+        T = 8  # more topics than data uses
+        state = cgs.init_state(corpus, T, jax.random.key(0))
+        z0 = jnp.zeros_like(state.z)  # all mass on topic 0
+        n_td, n_wt, n_t = cgs.counts_from_assignments(
+            jnp.asarray(corpus.doc_ids), jnp.asarray(corpus.word_ids),
+            z0, corpus.num_docs, corpus.num_words, T)
+        s = cgs.LDAState(z=z0, n_td=n_td, n_wt=n_wt, n_t=n_t, key=state.key)
+        assert np.isfinite(likelihood.log_likelihood(s, 0.1, 0.01))
+
+
+class TestSweepOrderPermutationInvariance:
+    @given(seed=st.integers(0, 30))
+    @settings(max_examples=8, deadline=None)
+    def test_invariants_hold_for_random_orders(self, seed):
+        """CGS stays exact for ANY visitation order, not just doc/word."""
+        corpus, _, _ = synthetic.make_corpus(
+            num_docs=15, vocab_size=32, num_topics=4, mean_doc_len=8.0,
+            seed=seed)
+        state = cgs.init_state(corpus, 4, jax.random.key(seed))
+        rng = np.random.default_rng(seed)
+        order = jnp.asarray(rng.permutation(corpus.num_tokens)
+                            .astype(np.int32))
+        state = cgs.sweep_reference(
+            state, jnp.asarray(corpus.doc_ids),
+            jnp.asarray(corpus.word_ids), order, 0.5, 0.01)
+        v = cgs.check_invariants(state, corpus)
+        assert all(x == 0 for x in v.values()), v

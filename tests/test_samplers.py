@@ -1,0 +1,112 @@
+"""Unified sampler tests — the four Table-1 samplers must agree."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import samplers
+
+KEY = jax.random.key(42)
+
+
+def _rand_p(seed, T):
+    return jnp.asarray(np.random.default_rng(seed).random(T).astype(np.float32)
+                       + 0.01)
+
+
+class TestExactSamplersAgree:
+    """LSearch / BSearch / F+tree are exact inverse-CDF samplers: for the
+    same u they must return the same index (up to float boundary slack)."""
+
+    @pytest.mark.parametrize("T", [2, 16, 256, 1024])
+    def test_same_u_same_index(self, T):
+        p = _rand_p(T, T)
+        ls = samplers.lsearch_init(p)
+        bs = samplers.bsearch_init(p)
+        ft = samplers.ftree_init(p)
+        u_grid = jnp.asarray(np.linspace(0, 1 - 1e-6, 101, dtype=np.float32))
+        z_ls = jax.vmap(lambda u: samplers.lsearch_draw(ls, u))(u_grid)
+        z_bs = jax.vmap(lambda u: samplers.bsearch_draw(bs, u))(u_grid)
+        z_ft = jax.vmap(lambda u: samplers.ftree_draw(ft, u))(u_grid)
+        np.testing.assert_array_equal(np.asarray(z_ls), np.asarray(z_bs))
+        # F+tree accumulates sums in tree order: boundary ulps may differ.
+        assert (np.asarray(z_ft) == np.asarray(z_ls)).mean() > 0.97
+
+    def test_updates_preserve_agreement(self):
+        T = 64
+        p = _rand_p(0, T)
+        ls = samplers.lsearch_init(p)
+        bs = samplers.bsearch_init(p)
+        ft = samplers.ftree_init(p)
+        rng = np.random.default_rng(7)
+        for _ in range(20):
+            t = int(rng.integers(T))
+            delta = float(rng.random() * 2 - 0.5)
+            delta = max(delta, -float(ls.p[t]) * 0.9)  # keep p nonnegative
+            ls = samplers.lsearch_update(ls, t, delta)
+            bs = samplers.bsearch_update(bs, t, delta)
+            ft = samplers.ftree_update(ft, t, delta)
+        u_grid = jnp.asarray(np.linspace(0, 1 - 1e-6, 53, dtype=np.float32))
+        z_ls = jax.vmap(lambda u: samplers.lsearch_draw(ls, u))(u_grid)
+        z_bs = jax.vmap(lambda u: samplers.bsearch_draw(bs, u))(u_grid)
+        z_ft = jax.vmap(lambda u: samplers.ftree_draw(ft, u))(u_grid)
+        assert (np.asarray(z_ls) == np.asarray(z_bs)).mean() > 0.95
+        assert (np.asarray(z_ft) == np.asarray(z_ls)).mean() > 0.95
+
+
+class TestAlias:
+    @pytest.mark.parametrize("T", [2, 7, 16, 100, 512])
+    def test_alias_table_is_valid(self, T):
+        """Reconstructed pmf from (prob, alias) must equal p/Σp exactly."""
+        p = _rand_p(T + 1, T)
+        st_ = samplers.alias_init(p)
+        prob = np.asarray(st_.prob, dtype=np.float64)
+        alias = np.asarray(st_.alias)
+        pmf = np.zeros(T)
+        pmf += prob / T
+        np.add.at(pmf, alias, (1.0 - prob) / T)
+        want = np.asarray(p, dtype=np.float64)
+        want = want / want.sum()
+        np.testing.assert_allclose(pmf, want, atol=1e-5)
+
+    def test_alias_histogram(self):
+        T = 16
+        p = _rand_p(3, T)
+        st_ = samplers.alias_init(p)
+        u = jax.random.uniform(KEY, (200_000,))
+        z = jax.vmap(lambda uu: samplers.alias_draw(st_, uu))(u)
+        hist = np.bincount(np.asarray(z), minlength=T) / u.shape[0]
+        want = np.asarray(p) / float(p.sum())
+        np.testing.assert_allclose(hist, want, atol=0.01)
+
+    def test_alias_degenerate_point_mass(self):
+        p = jnp.asarray([0.0, 0.0, 5.0, 0.0], dtype=jnp.float32)
+        st_ = samplers.alias_init(p)
+        u = jax.random.uniform(KEY, (1000,))
+        z = jax.vmap(lambda uu: samplers.alias_draw(st_, uu))(u)
+        assert (np.asarray(z) == 2).all()
+
+    def test_alias_inside_jit(self):
+        p = _rand_p(9, 32)
+        st_ = jax.jit(samplers.alias_init)(p)
+        assert st_.prob.shape == (32,)
+
+
+class TestProperty:
+    @given(T_log=st.integers(1, 7), seed=st.integers(0, 1000))
+    @settings(max_examples=30, deadline=None)
+    def test_all_draws_in_range_and_positive_mass(self, T_log, seed):
+        T = 1 << T_log
+        rng = np.random.default_rng(seed)
+        p_np = rng.random(T).astype(np.float32)
+        p_np[rng.random(T) < 0.5] = 0.0
+        p_np[rng.integers(T)] += 0.5  # ensure nonzero mass
+        p = jnp.asarray(p_np)
+        u = jnp.asarray(rng.random(64).astype(np.float32))
+        for name, (init, draw, _) in samplers.SAMPLERS.items():
+            state = init(p)
+            z = np.asarray(jax.vmap(lambda uu: draw(state, uu))(u))
+            assert ((z >= 0) & (z < T)).all(), name
+            if name != "alias":  # exact samplers never hit zero-mass leaves
+                assert (p_np[z] > 0).all(), (name, z, p_np)

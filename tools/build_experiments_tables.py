@@ -1,0 +1,109 @@
+"""Generate the §Dry-run and §Roofline markdown tables from reports/dryrun.
+
+Usage: PYTHONPATH=src python tools/build_experiments_tables.py
+Prints markdown to stdout (pasted into EXPERIMENTS.md).
+"""
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.roofline.analysis import model_flops  # noqa: E402
+
+REPORTS = os.path.join(os.path.dirname(__file__), "..", "reports", "dryrun")
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = ["kimi-k2-1t-a32b", "gemma2-27b", "hubert-xlarge",
+              "zamba2-2.7b", "internvl2-1b", "mamba2-1.3b",
+              "phi4-mini-3.8b", "deepseek-moe-16b", "granite-3-2b",
+              "qwen3-8b", "lda-fnomad"]
+
+
+def fmt_t(x):
+    return f"{x * 1e3:.2f}ms" if x >= 1e-4 else f"{x * 1e6:.1f}µs"
+
+
+def fmt_b(x):
+    if x >= 2**30:
+        return f"{x / 2**30:.2f}GiB"
+    return f"{x / 2**20:.1f}MiB"
+
+
+def main():
+    reps = {}
+    for p in sorted(glob.glob(os.path.join(REPORTS, "*.json"))):
+        r = json.load(open(p))
+        key = (r["arch"], r["shape"], r["mesh"], r.get("variant", "baseline"))
+        reps[key] = r
+
+    # ---- §Dry-run table ---------------------------------------------------
+    print("### Dry-run status (lower + compile)\n")
+    print("| arch | shape | 16×16 (256) | 2×16×16 (512) | "
+          "peak bytes/dev (512) |")
+    print("|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        meshes = ("lda-256", "lda-512") if arch == "lda-fnomad" \
+            else ("16x16", "2x16x16")
+        for shape in SHAPE_ORDER:
+            r1 = reps.get((arch, shape, meshes[0], "baseline"))
+            r2 = reps.get((arch, shape, meshes[1], "baseline"))
+            if r1 is None and r2 is None:
+                continue
+
+            def status(r):
+                if r is None:
+                    return "—"
+                if "skipped" in r:
+                    return "skip"
+                if "error" in r:
+                    return "ERROR"
+                return f"ok ({r['compile_seconds']}s)"
+            peak = "—"
+            if r2 and "memory" in r2 and r2["memory"]["peak_bytes"]:
+                peak = fmt_b(r2["memory"]["peak_bytes"])
+            note = (r1 or r2).get("skipped", "") or (r1 or r2).get("note", "")
+            print(f"| {arch} | {shape} | {status(r1)} | {status(r2)} | "
+                  f"{peak} |" + (f"  <!-- {note} -->" if note else ""))
+    print()
+
+    # ---- §Roofline table (single-pod, baseline) ---------------------------
+    print("### Roofline (single-pod 16×16, per-device terms)\n")
+    print("| arch | shape | compute | memory | collective | bottleneck | "
+          "useful-flops |")
+    print("|---|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        mesh = "lda-256" if arch == "lda-fnomad" else "16x16"
+        for shape in SHAPE_ORDER:
+            r = reps.get((arch, shape, mesh, "baseline"))
+            if r is None or "roofline_seconds" not in r:
+                continue
+            t = r["roofline_seconds"]
+            mf = model_flops(arch, shape)
+            hlo_glob = r["hlo_flops_per_device"] * r["chips"]
+            useful = f"{mf / hlo_glob:.2f}" if hlo_glob and mf else "n/a"
+            print(f"| {arch} | {shape} | {fmt_t(t['compute'])} | "
+                  f"{fmt_t(t['memory'])} | {fmt_t(t['collective'])} | "
+                  f"**{r['bottleneck']}** | {useful} |")
+    print()
+
+    # ---- variants (perf runs) ----------------------------------------------
+    variants = sorted({k[3] for k in reps if k[3] != "baseline"})
+    for v in variants:
+        print(f"### Variant: {v}\n")
+        print("| arch | shape | mesh | compute | memory | collective | "
+              "bottleneck |")
+        print("|---|---|---|---|---|---|---|")
+        for (arch, shape, mesh, var), r in sorted(reps.items()):
+            if var != v or "roofline_seconds" not in r:
+                continue
+            t = r["roofline_seconds"]
+            print(f"| {arch} | {shape} | {mesh} | {fmt_t(t['compute'])} | "
+                  f"{fmt_t(t['memory'])} | {fmt_t(t['collective'])} | "
+                  f"{r['bottleneck']} |")
+        print()
+
+
+if __name__ == "__main__":
+    main()
