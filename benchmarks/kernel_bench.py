@@ -7,11 +7,58 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.util import row, time_fn
-from repro.core import ftree
+from repro.core import cgs, ftree
+from repro.data import synthetic
 from repro.kernels.ftree_sample import ftree_sample
 from repro.kernels.ftree_sample.ref import ftree_sample_ref
 from repro.kernels.lda_scores import lda_scores_draw
 from repro.kernels.lda_scores.ref import lda_scores_draw_ref
+
+FUSED_T_SWEEP = [1024, 4096, 16384]
+
+
+def fused_vs_scan_rows(T_sweep=FUSED_T_SWEEP, *, prefix: str = "kernels",
+                       num_docs: int = 24, vocab: int = 80,
+                       mean_len: float = 10.0) -> list[str]:
+    """tokens/sec of the fused F+LDA sweep kernel vs the lax.scan sweep.
+
+    Both run the identical Gibbs chain (parity is asserted in the derived
+    column); interpret mode, so this measures dispatch/fusion structure, not
+    TPU silicon — the roofline story lives in benchmarks/roofline_bench.py.
+    """
+    out = []
+    for T in T_sweep:
+        corpus, _, _ = synthetic.make_corpus(
+            num_docs=num_docs, vocab_size=vocab, num_topics=16,
+            mean_doc_len=mean_len, seed=T)
+        n = corpus.num_tokens
+        state = cgs.init_state(corpus, T, jax.random.key(0))
+        doc_ids = jnp.asarray(corpus.doc_ids)
+        word_ids = jnp.asarray(corpus.word_ids)
+        order = jnp.asarray(corpus.word_order())
+        boundary = jnp.asarray(corpus.word_boundary())
+        alpha, beta = 50.0 / T, 0.01
+
+        runs = {}
+        tps = {}
+        for backend in ("scan", "fused"):
+            # jit both paths: the comparison is kernel structure, not
+            # eager-dispatch overhead (lda_sampler_bench does the same).
+            fn = jax.jit(lambda s, be=backend: cgs.sweep_fplda_word(
+                s, doc_ids, word_ids, order, boundary, alpha, beta,
+                backend=be))
+            runs[backend] = jax.block_until_ready(fn(state))
+            t = time_fn(fn, state, warmup=1, iters=3)
+            tps[backend] = n / t
+            out.append(row(f"{prefix}/fused_sweep/{backend}/T{T}",
+                           t * 1e6 / n, f"tokens_per_sec={n / t:.0f}"))
+        exact = bool(jnp.array_equal(runs["scan"].z, runs["fused"].z)
+                     and jnp.array_equal(runs["scan"].n_t,
+                                         runs["fused"].n_t))
+        out.append(row(f"{prefix}/fused_sweep/speedup/T{T}", 0.0,
+                       f"fused_over_scan={tps['fused'] / tps['scan']:.2f}x "
+                       f"chain_exact={exact}"))
+    return out
 
 
 def run(T: int = 1024, n: int = 4096) -> list[str]:
@@ -38,4 +85,6 @@ def run(T: int = 1024, n: int = 4096) -> list[str]:
                 warmup=1, iters=3)
     out.append(row("kernels/lda_scores_fused", t * 1e6 / n,
                    f"oracle_match={match:.4f}"))
+
+    out.extend(fused_vs_scan_rows())
     return out

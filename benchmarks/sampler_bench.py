@@ -69,4 +69,11 @@ def run() -> list[str]:
                                                   1e-12)
             out.append(row(f"table1/{name}/{op}/T{hi}", us,
                            f"T{hi}/T{lo}_ratio={ratio:.2f}"))
+
+    # End-to-end sweep throughput: the fused kernel vs the lax.scan sweep
+    # over the same chain (the per-token composition of the ops above).
+    # T=1024/4096 intentionally overlap kernel_bench's sweep so each CSV
+    # section is self-contained; the cost is two repeated configs per run.
+    from benchmarks.kernel_bench import fused_vs_scan_rows
+    out.extend(fused_vs_scan_rows(T_SWEEP, prefix="table1"))
     return out

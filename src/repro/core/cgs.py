@@ -27,6 +27,7 @@ abstract op-count accounting (what Table 1/2 claim) is reported by
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple
 
 import jax
@@ -138,7 +139,8 @@ def sweep_reference(state: LDAState, doc_ids, word_ids, order,
 # F+LDA word-by-word — Algorithm 3.
 # ---------------------------------------------------------------------------
 def sweep_fplda_word(state: LDAState, doc_ids, word_ids, order, boundary,
-                     alpha: float, beta: float) -> LDAState:
+                     alpha: float, beta: float, *, backend: str = "scan",
+                     interpret: bool = True) -> LDAState:
     """Paper Algorithm 3.  Tokens arrive sorted by word; ``boundary[k]`` marks
     the first occurrence of a new vocabulary item.
 
@@ -148,6 +150,18 @@ def sweep_fplda_word(state: LDAState, doc_ids, word_ids, order, boundary,
     for the incoming word — the dense-vectorized form of the paper's
     ``F.update(t, ±n_tw/(n_t+β̄)) ∀t∈T_w`` enter/exit updates (equal result;
     DESIGN.md §3 explains the VPU trade).
+
+    ``backend`` selects the implementation of the hot loop:
+        "scan"   — one ``lax.scan`` over occurrences
+                   (:func:`repro.kernels.fused_sweep.ref.fused_sweep_ref`).
+        "fused"  — the single-``pallas_call`` kernel in
+                   :mod:`repro.kernels.fused_sweep`, which keeps the F+tree
+                   and count tables VMEM-resident (DESIGN.md §7).  Same
+                   chain bit-for-bit; ``interpret=True`` (default) runs it
+                   CPU-safely.  ``alpha``/``beta`` are baked into the
+                   kernel as static values, so they must be concrete
+                   Python floats (not traced), and each distinct value
+                   compiles its own kernel.
     """
     T = state.n_t.shape[0]
     Tp = 1 << (T - 1).bit_length()
@@ -157,58 +171,30 @@ def sweep_fplda_word(state: LDAState, doc_ids, word_ids, order, boundary,
     key, sweep_key = jax.random.split(state.key)
     u = jax.random.uniform(sweep_key, (order.shape[0],))
 
-    f32 = jnp.float32
+    if backend == "fused":
+        from repro.kernels.fused_sweep import fused_sweep_tokens
+        sweep = functools.partial(fused_sweep_tokens, interpret=interpret)
+    elif backend == "scan":
+        # The masked per-token chain (Alg. 3 inner loop: boundary rebuild,
+        # decrement, F.update, q/r two-level draw, increment, F.update) is
+        # defined once, in repro.kernels.fused_sweep.ref — the oracle both
+        # backends and the nomad cell sweep share, so the float-op order
+        # has a single source of truth.
+        from repro.kernels.fused_sweep.ref import fused_sweep_ref
+        sweep = fused_sweep_ref
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
 
-    def q_dense(n_wt_row, n_t):
-        return (n_wt_row.astype(f32) + beta) / (n_t.astype(f32) + beta_bar)
-
-    F0 = ftree.build(q_dense(state.n_wt[word_ids[order[0]]], state.n_t))
-
-    def step(carry, inp):
-        z, n_td, n_wt, n_t, F = carry
-        k, u01, is_boundary = inp
-        d, w, t_old = doc_ids[k], word_ids[k], z[k]
-
-        # Word boundary: rebuild the tree for the incoming word's q vector.
-        F = lax.cond(is_boundary,
-                     lambda: ftree.build(q_dense(n_wt[w], n_t)),
-                     lambda: F)
-
-        # --- decrement (Alg. 3 inner loop) --------------------------------
-        n_td = n_td.at[d, t_old].add(-1)
-        n_wt = n_wt.at[w, t_old].add(-1)
-        n_t = n_t.at[t_old].add(-1)
-        F = ftree.set_leaf(F, t_old,
-                           (n_wt[w, t_old].astype(f32) + beta)
-                           / (n_t[t_old].astype(f32) + beta_bar))
-
-        # --- two-level draw (6): p = α·q + r -------------------------------
-        q = ftree.leaves(F)
-        r = n_td[d].astype(f32) * q          # |T_d|-sparse in exact arithmetic
-        c = jnp.cumsum(r)
-        r_mass = c[-1]
-        norm = alpha * ftree.total(F) + r_mass
-        u_scaled = u01 * norm
-        in_r = u_scaled < r_mass
-        t_r = jnp.sum(c <= u_scaled).astype(jnp.int32)      # BSearch on r
-        t_q = ftree.sample(F, jnp.clip((u_scaled - r_mass)
-                                       / (alpha * ftree.total(F)),
-                                       0.0, 1.0 - 1e-7))     # F.sample on q
-        t_new = jnp.where(in_r, t_r, t_q)
-
-        # --- increment ------------------------------------------------------
-        n_td = n_td.at[d, t_new].add(1)
-        n_wt = n_wt.at[w, t_new].add(1)
-        n_t = n_t.at[t_new].add(1)
-        F = ftree.set_leaf(F, t_new,
-                           (n_wt[w, t_new].astype(f32) + beta)
-                           / (n_t[t_new].astype(f32) + beta_bar))
-        z = z.at[k].set(t_new)
-        return (z, n_td, n_wt, n_t, F), None
-
-    carry0 = (state.z, state.n_td, state.n_wt, state.n_t, F0)
-    (z, n_td, n_wt, n_t, _), _ = lax.scan(
-        step, carry0, (order, u, boundary))
+    valid = jnp.ones(order.shape[0], jnp.int32)
+    # Token 0 starts its word's run by definition; forcing the flag keeps
+    # the zero-initialized tree safe for boundary vectors that don't mark
+    # position 0 (equivalent to the former unconditional F0 prebuild).
+    boundary = jnp.asarray(boundary).at[0].set(True)
+    z_new, n_td, n_wt, n_t, _ = sweep(
+        doc_ids[order], word_ids[order], valid, boundary,
+        state.z[order], u, state.n_td, state.n_wt, state.n_t,
+        alpha=alpha, beta=beta, beta_bar=beta_bar)
+    z = state.z.at[order].set(z_new)
     return LDAState(z=z, n_td=n_td, n_wt=n_wt, n_t=n_t, key=key)
 
 

@@ -43,9 +43,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
 
-from repro.core import ftree
+from repro.compat import shard_map
 from repro.data.sharding import NomadLayout
 
 __all__ = ["NomadLDA", "nomad_sweep_fn"]
@@ -92,70 +91,21 @@ def _ring_shift_down(x, axes: Sequence[str], sizes: Sequence[int]):
 # ---------------------------------------------------------------------------
 def _cell_sweep(tok_doc, tok_wrd, tok_valid, tok_bound, z_cell,
                 n_td, n_wt, n_t, u, alpha, beta, beta_bar):
-    """Exact CGS over one padded cell.
+    """Exact CGS over one padded cell (Alg. 3 with masking + local indices).
 
     tok_* / z_cell / u: (L,); n_td: (I,T) int32 (local docs); n_wt: (J,T)
     int32 (current block, local words); n_t: (T,) int32 (worker's working
     copy — possibly stale).  Returns updated (z_cell, n_td, n_wt, n_t).
+
+    The masked per-token chain itself lives in
+    :func:`repro.kernels.fused_sweep.ref.fused_sweep_ref` — the single
+    jnp reference all implementations (this scan mode, the fused Pallas
+    kernel, its tests) share, so the float-op order is defined once.
     """
-    T = n_t.shape[-1]
-
-    def q_of(n_wt_row, n_t):
-        return (n_wt_row.astype(F32) + beta) / (n_t.astype(F32) + beta_bar)
-
-    def q_at(n_wt, n_t, w, t):
-        return ((n_wt[w, t].astype(F32) + beta)
-                / (n_t[t].astype(F32) + beta_bar))
-
-    F0 = jnp.zeros((2 * T,), F32)  # rebuilt at the first boundary token
-
-    def step(carry, inp):
-        z_cell, n_td, n_wt, n_t, F = carry
-        k, u01 = inp
-        d, w = tok_doc[k], tok_wrd[k]
-        valid, boundary = tok_valid[k], tok_bound[k]
-        t_old = z_cell[k]
-        one = valid.astype(jnp.int32)
-
-        F = lax.cond(boundary, lambda: ftree.build(q_of(n_wt[w], n_t)),
-                     lambda: F)
-
-        # decrement (masked)
-        n_td = n_td.at[d, t_old].add(-one)
-        n_wt = n_wt.at[w, t_old].add(-one)
-        n_t = n_t.at[t_old].add(-one)
-        new_leaf = q_at(n_wt, n_t, w, t_old)
-        F = ftree.set_leaf(F, t_old, jnp.where(valid, new_leaf, F[T + t_old]))
-
-        # two-level draw p = α·q + r (eq. (6))
-        q = ftree.leaves(F)
-        r = n_td[d].astype(F32) * q
-        c = jnp.cumsum(r)
-        r_mass = c[-1]
-        q_total = ftree.total(F)
-        norm = alpha * q_total + r_mass
-        u_val = u01 * norm
-        in_r = u_val < r_mass
-        t_r = jnp.clip(jnp.sum(c <= u_val), 0, T - 1).astype(jnp.int32)
-        t_q = ftree.sample(F, jnp.clip((u_val - r_mass)
-                                       / jnp.maximum(alpha * q_total, 1e-30),
-                                       0.0, 1.0 - 1e-7))
-        t_new = jnp.where(valid, jnp.where(in_r, t_r, t_q), t_old)
-
-        # increment (masked)
-        n_td = n_td.at[d, t_new].add(one)
-        n_wt = n_wt.at[w, t_new].add(one)
-        n_t = n_t.at[t_new].add(one)
-        new_leaf2 = q_at(n_wt, n_t, w, t_new)
-        F = ftree.set_leaf(F, t_new,
-                           jnp.where(valid, new_leaf2, F[T + t_new]))
-        z_cell = z_cell.at[k].set(t_new)
-        return (z_cell, n_td, n_wt, n_t, F), None
-
-    L = tok_doc.shape[0]
-    (z_cell, n_td, n_wt, n_t, _), _ = lax.scan(
-        step, (z_cell, n_td, n_wt, n_t, F0),
-        (jnp.arange(L, dtype=jnp.int32), u))
+    from repro.kernels.fused_sweep.ref import fused_sweep_ref
+    z_cell, n_td, n_wt, n_t, _ = fused_sweep_ref(
+        tok_doc, tok_wrd, tok_valid, tok_bound, z_cell, u,
+        n_td, n_wt, n_t, alpha=alpha, beta=beta, beta_bar=beta_bar)
     return z_cell, n_td, n_wt, n_t
 
 
@@ -194,13 +144,28 @@ def _cell_sweep_vectorized(tok_doc, tok_wrd, tok_valid, tok_bound, z_cell,
     return z_new, n_td, n_wt, n_t
 
 
+def _cell_sweep_fused(tok_doc, tok_wrd, tok_valid, tok_bound, z_cell,
+                      n_td, n_wt, n_t, u, alpha, beta, beta_bar,
+                      interpret: bool = True):
+    """Exact per-token chain like :func:`_cell_sweep`, but run as the single
+    fused ``pallas_call`` of :mod:`repro.kernels.fused_sweep`: the F+tree,
+    ``n_t`` and the cell's count blocks stay VMEM-resident across the whole
+    cell instead of round-tripping per scan step (DESIGN.md §7).  Bit-exact
+    same chain as ``inner_mode="scan"``."""
+    from repro.kernels.fused_sweep import fused_sweep_tokens
+    z_cell, n_td, n_wt, n_t, _ = fused_sweep_tokens(
+        tok_doc, tok_wrd, tok_valid, tok_bound, z_cell, u, n_td, n_wt, n_t,
+        alpha=alpha, beta=beta, beta_bar=beta_bar, interpret=interpret)
+    return z_cell, n_td, n_wt, n_t
+
+
 # ---------------------------------------------------------------------------
 # The distributed sweep.
 # ---------------------------------------------------------------------------
 def nomad_sweep_fn(mesh: Mesh, ring_axes: Sequence[str], *,
                    B: int, T: int, alpha: float, beta: float,
                    beta_bar: float, sync_mode: str = "stoken",
-                   inner_mode: str = "scan"):
+                   inner_mode: str = "scan", interpret: bool = True):
     """Build the jittable distributed sweep for ``mesh``.
 
     Ring spans the product of ``ring_axes`` (e.g. ('worker',) or
@@ -208,16 +173,22 @@ def nomad_sweep_fn(mesh: Mesh, ring_axes: Sequence[str], *,
     operating on global arrays sharded as documented in NomadLayout.
 
     inner_mode: "scan" = exact per-token chain (paper Alg. 3);
-    "vectorized" = beyond-paper batched cell pass (see
+    "fused" = the same chain as one fused Pallas kernel per cell
+    (see :func:`_cell_sweep_fused`; ``interpret=False`` compiles it for
+    TPU); "vectorized" = beyond-paper batched cell pass (see
     :func:`_cell_sweep_vectorized`).
     """
     sizes = tuple(int(mesh.shape[ax]) for ax in ring_axes)
     W = int(np.prod(sizes))
     if sync_mode not in ("stoken", "stale", "allreduce"):
         raise ValueError(sync_mode)
-    if inner_mode not in ("scan", "vectorized"):
+    cell_fns = {"scan": _cell_sweep,
+                "fused": functools.partial(_cell_sweep_fused,
+                                           interpret=interpret),
+                "vectorized": _cell_sweep_vectorized}
+    if inner_mode not in cell_fns:
         raise ValueError(inner_mode)
-    cell_fn = _cell_sweep if inner_mode == "scan" else _cell_sweep_vectorized
+    cell_fn = cell_fns[inner_mode]
 
     ring = P(tuple(ring_axes))
     spec_tok = P(tuple(ring_axes), None, None)
@@ -302,6 +273,7 @@ class NomadLDA:
     beta: float
     sync_mode: str = "stoken"
     inner_mode: str = "scan"
+    interpret: bool = True      # Pallas interpret mode for inner_mode="fused"
 
     def __post_init__(self):
         lay = self.layout
@@ -309,7 +281,8 @@ class NomadLDA:
         self._sweep = nomad_sweep_fn(
             self.mesh, self.ring_axes, B=lay.B, T=lay.T,
             alpha=self.alpha, beta=self.beta, beta_bar=self.beta_bar,
-            sync_mode=self.sync_mode, inner_mode=self.inner_mode)
+            sync_mode=self.sync_mode, inner_mode=self.inner_mode,
+            interpret=self.interpret)
         ring = tuple(self.ring_axes)
         self._sh_tok = NamedSharding(self.mesh, P(ring, None, None))
         self._sh_rep = NamedSharding(self.mesh, P())

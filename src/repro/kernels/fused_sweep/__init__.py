@@ -1,0 +1,1 @@
+from repro.kernels.fused_sweep.ops import fused_sweep_tokens  # noqa: F401

@@ -1,0 +1,185 @@
+"""Fused F+LDA token-sweep kernel (paper Alg. 3, whole inner loop on-chip).
+
+The ``lax.scan`` sweeps in :mod:`repro.core.cgs` and :mod:`repro.core.nomad`
+honour the exact Gibbs chain but pay for it in memory traffic: every token
+re-reads and re-writes its count rows and the F+tree through HBM, and each
+scan step is its own XLA while-loop iteration.  This kernel fuses the whole
+word-by-word sweep (decrement → F.update → q/r two-level draw → increment →
+F.update) into **one** ``pallas_call``:
+
+* the F+tree (``2T`` f32) and the global topic counts ``n_t`` (``T`` i32)
+  stay VMEM-resident for the entire sweep — they are carried through the
+  per-token ``fori_loop`` as register/VMEM values and only written back to
+  the output buffers once per token tile;
+* the doc-topic table ``n_td`` and the word-topic block ``n_wt`` live in
+  VMEM buffers for the whole call; per token the kernel touches exactly one
+  row of each via dynamic-slice load/store (``pl.ds``) — no (N, T) HBM
+  intermediates are ever materialized;
+* tokens are tiled over a sequential grid (``N_BLK`` per program).  The
+  count/tree outputs use constant index maps, so the state persists across
+  grid steps — the standard Pallas accumulator pattern — and the chain is
+  exact across tile boundaries.
+
+Masking follows the nomad cell-sweep convention: ``valid=False`` tokens are
+no-ops (count deltas of 0, leaf rewritten to itself, ``z`` kept), which is
+what makes arbitrary padding of the token stream safe.  ``boundary=True``
+rebuilds the tree from the incoming word's q vector; the tree starts zeroed,
+so the first valid token of the stream must be a boundary (guaranteed by
+``Corpus.word_boundary`` and by ``NomadLayout.tok_bound``).
+
+Chain exactness: every float op (q rebuild, path update, cumsum, draw) is
+performed by the same :mod:`repro.core.ftree` value ops and in the same
+order as ``cgs.sweep_fplda_word``, so given identical uniforms the kernel
+reproduces that sweep's ``z``/counts bit-for-bit (the clip/max guards are
+no-ops on consistent count tables).  ``interpret=True`` is the CPU-safe
+default; the compiled path targets the layout above.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import ftree
+
+N_BLK = 256  # tokens per grid program
+
+F32 = jnp.float32
+
+
+def _kernel(T: int, n_blk: int, alpha: float, beta: float, beta_bar: float,
+            # inputs
+            tok_doc_ref, tok_wrd_ref, tok_valid_ref, tok_bound_ref,
+            z_in_ref, u_ref, ntd_in_ref, nwt_in_ref, nt_in_ref,
+            # outputs
+            z_ref, ntd_ref, nwt_ref, nt_ref, f_ref):
+    first = pl.program_id(0) == 0
+
+    @pl.when(first)
+    def _init():
+        ntd_ref[...] = ntd_in_ref[...]
+        nwt_ref[...] = nwt_in_ref[...]
+        nt_ref[...] = nt_in_ref[...]
+        f_ref[...] = jnp.zeros((2 * T,), F32)
+
+    # Tile-local token metadata (VMEM-resident for the whole tile).
+    tok_doc = tok_doc_ref[...]
+    tok_wrd = tok_wrd_ref[...]
+    tok_valid = tok_valid_ref[...]
+    tok_bound = tok_bound_ref[...]
+    z_tile = z_in_ref[...]
+    u_tile = u_ref[...]
+
+    def q_of(nwt_row, nt):
+        return (nwt_row.astype(F32) + beta) / (nt.astype(F32) + beta_bar)
+
+    def body(k, carry):
+        z_tile, nt, F = carry
+        d, w = tok_doc[k], tok_wrd[k]
+        valid, boundary = tok_valid[k] != 0, tok_bound[k] != 0
+        u01 = u_tile[k]
+        t_old = z_tile[k]
+        one = valid.astype(jnp.int32)
+
+        ntd_row = ntd_ref[pl.ds(d, 1), :][0]          # (T,) doc-topic row
+        nwt_row = nwt_ref[pl.ds(w, 1), :][0]          # (T,) word-topic row
+
+        # Word boundary: rebuild the tree for the incoming word's q vector
+        # (cond, not where: the Θ(T) build must not run on interior tokens).
+        F = jax.lax.cond(boundary,
+                         lambda: ftree.build(q_of(nwt_row, nt)),
+                         lambda: F)
+
+        # --- decrement (Alg. 3 inner loop, masked) ------------------------
+        ntd_row = ntd_row.at[t_old].add(-one)
+        nwt_row = nwt_row.at[t_old].add(-one)
+        nt = nt.at[t_old].add(-one)
+        new_leaf = ((nwt_row[t_old].astype(F32) + beta)
+                    / (nt[t_old].astype(F32) + beta_bar))
+        F = ftree.set_leaf(F, t_old,
+                           jnp.where(valid, new_leaf, F[T + t_old]))
+
+        # --- two-level draw p = α·q + r (eq. (6)) --------------------------
+        q = ftree.leaves(F)
+        r = ntd_row.astype(F32) * q
+        c = jnp.cumsum(r)
+        r_mass = c[-1]
+        q_total = ftree.total(F)
+        norm = alpha * q_total + r_mass
+        u_val = u01 * norm
+        in_r = u_val < r_mass
+        t_r = jnp.clip(jnp.sum(c <= u_val), 0, T - 1).astype(jnp.int32)
+        t_q = ftree.sample(F, jnp.clip((u_val - r_mass)
+                                       / jnp.maximum(alpha * q_total, 1e-30),
+                                       0.0, 1.0 - 1e-7))
+        t_new = jnp.where(valid, jnp.where(in_r, t_r, t_q), t_old)
+
+        # --- increment -----------------------------------------------------
+        ntd_row = ntd_row.at[t_new].add(one)
+        nwt_row = nwt_row.at[t_new].add(one)
+        nt = nt.at[t_new].add(one)
+        new_leaf2 = ((nwt_row[t_new].astype(F32) + beta)
+                     / (nt[t_new].astype(F32) + beta_bar))
+        F = ftree.set_leaf(F, t_new,
+                           jnp.where(valid, new_leaf2, F[T + t_new]))
+
+        ntd_ref[pl.ds(d, 1), :] = ntd_row[None]
+        nwt_ref[pl.ds(w, 1), :] = nwt_row[None]
+        z_tile = z_tile.at[k].set(t_new)
+        return z_tile, nt, F
+
+    nt0 = nt_ref[...]
+    F0 = f_ref[...]
+    z_tile, nt, F = jax.lax.fori_loop(0, n_blk, body, (z_tile, nt0, F0))
+
+    z_ref[...] = z_tile
+    nt_ref[...] = nt
+    f_ref[...] = F
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "beta", "beta_bar",
+                                             "n_blk", "interpret"))
+def fused_sweep_pallas(tok_doc: jax.Array, tok_wrd: jax.Array,
+                       tok_valid: jax.Array, tok_bound: jax.Array,
+                       z: jax.Array, u: jax.Array,
+                       n_td: jax.Array, n_wt: jax.Array, n_t: jax.Array, *,
+                       alpha: float, beta: float, beta_bar: float,
+                       n_blk: int = N_BLK, interpret: bool = True):
+    """One fused F+LDA sweep over a padded token stream.
+
+    Shapes: tok_* / z / u are (N,) with N % n_blk == 0; n_td (I, T) i32;
+    n_wt (J, T) i32; n_t (T,) i32; T a power of two.  Returns
+    (z', n_td', n_wt', n_t', F) with F the final F+tree (2T,) f32.
+    """
+    n = tok_doc.shape[0]
+    I, T = n_td.shape
+    J = n_wt.shape[0]
+    grid = (n // n_blk,)
+
+    tile = lambda: pl.BlockSpec((n_blk,), lambda b: (b,))
+    whole = lambda *shape: pl.BlockSpec(shape, lambda b: (0,) * len(shape))
+
+    return pl.pallas_call(
+        functools.partial(_kernel, T, n_blk,
+                          float(alpha), float(beta), float(beta_bar)),
+        grid=grid,
+        in_specs=[
+            tile(), tile(), tile(), tile(), tile(), tile(),   # token stream
+            whole(I, T), whole(J, T), whole(T),               # count tables
+        ],
+        out_specs=[
+            tile(),                                           # z'
+            whole(I, T), whole(J, T), whole(T),               # tables
+            whole(2 * T),                                     # final F+tree
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((I, T), jnp.int32),
+            jax.ShapeDtypeStruct((J, T), jnp.int32),
+            jax.ShapeDtypeStruct((T,), jnp.int32),
+            jax.ShapeDtypeStruct((2 * T,), F32),
+        ],
+        interpret=interpret,
+    )(tok_doc, tok_wrd, tok_valid, tok_bound, z, u, n_td, n_wt, n_t)

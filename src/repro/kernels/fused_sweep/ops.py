@@ -1,0 +1,63 @@
+"""Public wrapper: padding, dtype plumbing and VMEM budgeting for the
+fused F+LDA sweep kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_sweep.fused_sweep import N_BLK, fused_sweep_pallas
+
+# Soft ceiling for the compiled path: the count tables + tree + one token
+# tile must fit on-chip (~16 MiB/core, leave headroom for double buffers).
+VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+
+
+def _is_pow2(n: int) -> bool:
+    return n >= 1 and (n & (n - 1)) == 0
+
+
+def fused_sweep_tokens(tok_doc: jax.Array, tok_wrd: jax.Array,
+                       tok_valid: jax.Array, tok_bound: jax.Array,
+                       z: jax.Array, u: jax.Array,
+                       n_td: jax.Array, n_wt: jax.Array, n_t: jax.Array, *,
+                       alpha: float, beta: float, beta_bar: float,
+                       n_blk: int = N_BLK, interpret: bool = True):
+    """Fused word-by-word F+LDA sweep over an arbitrary-length token stream.
+
+    Pads the stream to a multiple of ``n_blk`` with masked no-op tokens,
+    runs the single-``pallas_call`` kernel, and unpads.  Returns
+    ``(z', n_td', n_wt', n_t', F)`` where ``F`` is the final F+tree.
+    """
+    I, T = n_td.shape
+    J = n_wt.shape[0]
+    if not _is_pow2(T):
+        raise ValueError(f"fused sweep needs a power-of-two T, got {T}")
+    n = tok_doc.shape[0]
+    if n == 0:
+        return (z, n_td, n_wt, n_t,
+                jnp.zeros((2 * T,), jnp.float32))
+    if not interpret:
+        # Whole-array in_specs AND out_specs each get their own VMEM buffer:
+        # two copies of every count table, one tree output, plus the six
+        # tiled input streams and the z output tile.
+        vmem = 2 * 4 * (I * T + J * T + T) + 4 * 2 * T + 7 * 4 * n_blk
+        if vmem > VMEM_BUDGET_BYTES:
+            raise ValueError(
+                f"fused sweep state ({vmem / 2**20:.1f} MiB) exceeds the "
+                f"VMEM budget; shard n_td/n_wt (nomad cells) or use "
+                f"backend='scan'")
+
+    n_pad = -n % n_blk
+    pad_i = lambda a: jnp.pad(a.astype(jnp.int32), (0, n_pad))
+    tok_doc, tok_wrd, z = pad_i(tok_doc), pad_i(tok_wrd), pad_i(z)
+    tok_valid = jnp.pad(tok_valid.astype(jnp.int32), (0, n_pad))
+    tok_bound = jnp.pad(tok_bound.astype(jnp.int32), (0, n_pad))
+    u = jnp.pad(u.astype(jnp.float32), (0, n_pad))
+
+    z_out, n_td, n_wt, n_t, F = fused_sweep_pallas(
+        tok_doc, tok_wrd, tok_valid, tok_bound, z, u,
+        n_td.astype(jnp.int32), n_wt.astype(jnp.int32),
+        n_t.astype(jnp.int32),
+        alpha=float(alpha), beta=float(beta), beta_bar=float(beta_bar),
+        n_blk=n_blk, interpret=interpret)
+    return z_out[:n], n_td, n_wt, n_t, F

@@ -1,0 +1,74 @@
+"""Pure-jnp oracle for the fused F+LDA sweep kernel.
+
+A ``lax.scan`` over the token stream with exactly the kernel's masked
+semantics (and exactly ``cgs.sweep_fplda_word``'s float-op order), used to
+pin the Pallas kernel down bit-for-bit in tests and benchmarks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import ftree
+
+F32 = jnp.float32
+
+
+def fused_sweep_ref(tok_doc, tok_wrd, tok_valid, tok_bound, z, u,
+                    n_td, n_wt, n_t, *, alpha, beta, beta_bar):
+    """Reference sweep; same signature/returns as ``fused_sweep_pallas``."""
+    T = n_t.shape[-1]
+
+    def q_of(nwt_row, nt):
+        return (nwt_row.astype(F32) + beta) / (nt.astype(F32) + beta_bar)
+
+    def step(carry, inp):
+        z, n_td, n_wt, n_t, F = carry
+        k, u01 = inp
+        d, w = tok_doc[k], tok_wrd[k]
+        valid, boundary = tok_valid[k] != 0, tok_bound[k] != 0
+        t_old = z[k]
+        one = valid.astype(jnp.int32)
+
+        F = lax.cond(boundary, lambda: ftree.build(q_of(n_wt[w], n_t)),
+                     lambda: F)
+
+        n_td = n_td.at[d, t_old].add(-one)
+        n_wt = n_wt.at[w, t_old].add(-one)
+        n_t = n_t.at[t_old].add(-one)
+        new_leaf = ((n_wt[w, t_old].astype(F32) + beta)
+                    / (n_t[t_old].astype(F32) + beta_bar))
+        F = ftree.set_leaf(F, t_old,
+                           jnp.where(valid, new_leaf, F[T + t_old]))
+
+        q = ftree.leaves(F)
+        r = n_td[d].astype(F32) * q
+        c = jnp.cumsum(r)
+        r_mass = c[-1]
+        q_total = ftree.total(F)
+        norm = alpha * q_total + r_mass
+        u_val = u01 * norm
+        in_r = u_val < r_mass
+        t_r = jnp.clip(jnp.sum(c <= u_val), 0, T - 1).astype(jnp.int32)
+        t_q = ftree.sample(F, jnp.clip((u_val - r_mass)
+                                       / jnp.maximum(alpha * q_total, 1e-30),
+                                       0.0, 1.0 - 1e-7))
+        t_new = jnp.where(valid, jnp.where(in_r, t_r, t_q), t_old)
+
+        n_td = n_td.at[d, t_new].add(one)
+        n_wt = n_wt.at[w, t_new].add(one)
+        n_t = n_t.at[t_new].add(one)
+        new_leaf2 = ((n_wt[w, t_new].astype(F32) + beta)
+                     / (n_t[t_new].astype(F32) + beta_bar))
+        F = ftree.set_leaf(F, t_new,
+                           jnp.where(valid, new_leaf2, F[T + t_new]))
+        z = z.at[k].set(t_new)
+        return (z, n_td, n_wt, n_t, F), None
+
+    n = tok_doc.shape[0]
+    F0 = jnp.zeros((2 * T,), F32)
+    carry0 = (z, n_td, n_wt, n_t, F0)
+    (z, n_td, n_wt, n_t, F), _ = lax.scan(
+        step, carry0, (jnp.arange(n, dtype=jnp.int32), u))
+    return z, n_td, n_wt, n_t, F

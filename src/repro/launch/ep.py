@@ -9,8 +9,9 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import shard_map
 
 from repro.models import moe as moe_mod
 from repro.launch.sharding_rules import batch_axes

@@ -1,0 +1,150 @@
+"""Shared test configuration.
+
+Installs a minimal ``hypothesis`` stand-in when the real package is absent
+so the property-based test modules collect and run everywhere (the container
+image does not ship hypothesis).  The shim implements exactly the API
+surface the suite uses — ``given``, ``settings``, ``strategies.integers``,
+``strategies.floats`` (plus a few obvious neighbours) — with deterministic
+draws: bound values first, then seeded pseudo-random examples.  With the
+real hypothesis installed the shim is inert.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import os
+import random
+import sys
+import types
+
+# Cap shim example counts so `@settings(max_examples=60)` style requests do
+# not dominate wall-clock; override with REPRO_SHIM_MAX_EXAMPLES.
+_SHIM_MAX_EXAMPLES = int(os.environ.get("REPRO_SHIM_MAX_EXAMPLES", "10"))
+_SHIM_DEFAULT_EXAMPLES = 8
+
+
+class _Strategy:
+    """A draw function plus the interesting boundary examples."""
+
+    def __init__(self, draw, boundary=()):
+        self._draw = draw
+        self.boundary = tuple(boundary)
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+    def example(self, rng: random.Random, i: int):
+        if i < len(self.boundary):
+            return self.boundary[i]
+        return self._draw(rng)
+
+    def map(self, fn):
+        return _Strategy(lambda rng: fn(self._draw(rng)),
+                         tuple(fn(b) for b in self.boundary))
+
+
+def _build_shim() -> types.ModuleType:
+    st = types.ModuleType("hypothesis.strategies")
+
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value),
+                         (min_value, max_value))
+
+    def floats(min_value, max_value, **_kw):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value),
+                         (min_value, max_value))
+
+    def booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5, (False, True))
+
+    def sampled_from(elements):
+        seq = list(elements)
+        return _Strategy(lambda rng: seq[rng.randrange(len(seq))],
+                         (seq[0],) if seq else ())
+
+    def lists(elements, min_size=0, max_size=8, **_kw):
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements.draw(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+    def just(value):
+        return _Strategy(lambda rng: value, (value,))
+
+    st.integers = integers
+    st.floats = floats
+    st.booleans = booleans
+    st.sampled_from = sampled_from
+    st.lists = lists
+    st.just = just
+
+    class settings:  # noqa: N801 — mirrors hypothesis' lowercase class
+        def __init__(self, max_examples=_SHIM_DEFAULT_EXAMPLES,
+                     deadline=None, **_kw):
+            self.max_examples = max_examples
+
+        def __call__(self, fn):
+            fn._shim_settings = self
+            return fn
+
+    class _UnsatisfiedAssumption(Exception):
+        """Raised by assume(False): skip this example, like real hypothesis."""
+
+    def assume(condition):
+        if not condition:
+            raise _UnsatisfiedAssumption()
+        return True
+
+    def given(*arg_strategies, **kw_strategies):
+        if arg_strategies:
+            raise TypeError("hypothesis shim supports keyword strategies only")
+
+        def decorate(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                cfg = (getattr(wrapper, "_shim_settings", None)
+                       or getattr(fn, "_shim_settings", None))
+                requested = cfg.max_examples if cfg else _SHIM_DEFAULT_EXAMPLES
+                n = max(1, min(requested, _SHIM_MAX_EXAMPLES))
+                rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+                for i in range(n):
+                    drawn = {name: strat.example(rng, i)
+                             for name, strat in kw_strategies.items()}
+                    try:
+                        fn(*args, **kwargs, **drawn)
+                    except _UnsatisfiedAssumption:
+                        continue
+
+            # Hide the strategy-filled parameters from pytest's fixture
+            # resolution (real hypothesis does the same bookkeeping).
+            sig = inspect.signature(fn)
+            params = [p for name, p in sig.parameters.items()
+                      if name not in kw_strategies]
+            wrapper.__signature__ = sig.replace(parameters=params)
+            del wrapper.__wrapped__
+            return wrapper
+
+        return decorate
+
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = st
+    mod.assume = assume
+    mod.HealthCheck = types.SimpleNamespace(too_slow=None, data_too_large=None)
+    mod.__shim__ = True
+    return mod
+
+
+def _install_hypothesis_shim() -> None:
+    try:
+        import hypothesis  # noqa: F401  — real package present
+        return
+    except ImportError:
+        pass
+    mod = _build_shim()
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = mod.strategies
+
+
+_install_hypothesis_shim()

@@ -15,6 +15,10 @@ from repro.models import transformer
 from repro.serve.serve_step import decode_step, init_cache, prefill
 from repro.train.train_step import init_train_state, loss_fn, make_train_step
 
+# Model-zoo coverage is minutes-long; excluded from the fast signal via
+# `pytest -m "not slow"` (tier-1 still runs everything).
+pytestmark = pytest.mark.slow
+
 ARCH_NAMES = sorted(ARCHS.keys())
 B, S = 2, 32
 

@@ -8,6 +8,10 @@ from repro.configs import ARCHS, get_config
 from repro.models import transformer
 from repro.train.train_step import init_train_state, make_train_step
 
+# Model-zoo coverage is minutes-long; excluded from the fast signal via
+# `pytest -m "not slow"` (tier-1 still runs everything).
+pytestmark = pytest.mark.slow
+
 B, S = 2, 16
 
 

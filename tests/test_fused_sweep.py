@@ -1,0 +1,187 @@
+"""Fused F+LDA sweep kernel: chain-exact parity + invariants.
+
+The fused kernel must reproduce the ``lax.scan`` sweep bit-for-bit: same
+``z``, same count tables, same final F+tree as its ``ref.py`` oracle —
+across topic counts, non-power-of-two vocab/doc shapes, and token-tile
+boundaries (small ``n_blk`` forces the chain to cross grid programs).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cgs
+from repro.data import synthetic
+from repro.kernels.fused_sweep import fused_sweep_tokens
+from repro.kernels.fused_sweep.ref import fused_sweep_ref
+
+
+def _setup(T, num_docs, vocab, mean_len, seed):
+    corpus, _, _ = synthetic.make_corpus(
+        num_docs=num_docs, vocab_size=vocab, num_topics=min(T, 32),
+        mean_doc_len=mean_len, seed=seed)
+    state = cgs.init_state(corpus, T, jax.random.key(seed))
+    doc_ids = jnp.asarray(corpus.doc_ids)
+    word_ids = jnp.asarray(corpus.word_ids)
+    order = jnp.asarray(corpus.word_order())
+    boundary = jnp.asarray(corpus.word_boundary())
+    return corpus, state, doc_ids, word_ids, order, boundary
+
+
+def _fused_inputs(state, doc_ids, word_ids, order, boundary):
+    """Same uniforms the scan sweep derives from the chain key."""
+    _, sweep_key = jax.random.split(state.key)
+    u = jax.random.uniform(sweep_key, (order.shape[0],))
+    valid = jnp.ones(order.shape[0], jnp.int32)
+    return (doc_ids[order], word_ids[order], valid,
+            boundary.astype(jnp.int32), state.z[order], u)
+
+
+class TestChainExactParity:
+    # Non-power-of-two I and J throughout; T must be a power of two.
+    @pytest.mark.parametrize("T,num_docs,vocab,mean_len", [
+        (4, 13, 37, 9.0),
+        (64, 21, 150, 15.0),
+        (1024, 11, 97, 10.0),
+    ])
+    def test_fused_matches_scan_and_ref(self, T, num_docs, vocab, mean_len):
+        corpus, state, doc_ids, word_ids, order, boundary = _setup(
+            T, num_docs, vocab, mean_len, seed=T)
+        alpha, beta = 50.0 / T, 0.01
+        beta_bar = beta * corpus.num_words
+
+        s_scan = cgs.sweep_fplda_word(state, doc_ids, word_ids, order,
+                                      boundary, alpha, beta)
+        s_fused = cgs.sweep_fplda_word(state, doc_ids, word_ids, order,
+                                       boundary, alpha, beta,
+                                       backend="fused")
+        # identical chain: z and all three count tables bit-equal
+        np.testing.assert_array_equal(np.asarray(s_scan.z),
+                                      np.asarray(s_fused.z))
+        np.testing.assert_array_equal(np.asarray(s_scan.n_td),
+                                      np.asarray(s_fused.n_td))
+        np.testing.assert_array_equal(np.asarray(s_scan.n_wt),
+                                      np.asarray(s_fused.n_wt))
+        np.testing.assert_array_equal(np.asarray(s_scan.n_t),
+                                      np.asarray(s_fused.n_t))
+
+        # kernel vs its oracle: z, counts AND the final F+tree, bit-equal
+        tok = _fused_inputs(state, doc_ids, word_ids, order, boundary)
+        kw = dict(alpha=alpha, beta=beta, beta_bar=beta_bar)
+        z_k, ntd_k, nwt_k, nt_k, F_k = fused_sweep_tokens(
+            *tok, state.n_td, state.n_wt, state.n_t, **kw)
+        z_r, ntd_r, nwt_r, nt_r, F_r = fused_sweep_ref(
+            *tok, state.n_td, state.n_wt, state.n_t, **kw)
+        np.testing.assert_array_equal(np.asarray(z_k), np.asarray(z_r))
+        np.testing.assert_array_equal(np.asarray(ntd_k), np.asarray(ntd_r))
+        np.testing.assert_array_equal(np.asarray(nwt_k), np.asarray(nwt_r))
+        np.testing.assert_array_equal(np.asarray(nt_k), np.asarray(nt_r))
+        np.testing.assert_array_equal(np.asarray(F_k), np.asarray(F_r))
+
+    def test_chain_crosses_tile_boundaries(self):
+        """n_blk smaller than N: state must persist across grid programs."""
+        T = 16
+        corpus, state, doc_ids, word_ids, order, boundary = _setup(
+            T, 25, 60, 18.0, seed=7)
+        alpha, beta = 50.0 / T, 0.01
+        beta_bar = beta * corpus.num_words
+        tok = _fused_inputs(state, doc_ids, word_ids, order, boundary)
+        kw = dict(alpha=alpha, beta=beta, beta_bar=beta_bar)
+        base = fused_sweep_tokens(*tok, state.n_td, state.n_wt, state.n_t,
+                                  **kw)
+        assert corpus.num_tokens > 32  # actually exercises >1 tile
+        tiled = fused_sweep_tokens(*tok, state.n_td, state.n_wt, state.n_t,
+                                   n_blk=32, **kw)
+        for a, b in zip(base, tiled):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_invariants_after_fused_sweeps(self):
+        T = 32
+        corpus, state, doc_ids, word_ids, order, boundary = _setup(
+            T, 30, 70, 14.0, seed=2)
+        alpha, beta = 50.0 / T, 0.01
+        for _ in range(2):
+            state = cgs.sweep_fplda_word(state, doc_ids, word_ids, order,
+                                         boundary, alpha, beta,
+                                         backend="fused")
+        v = cgs.check_invariants(state, corpus)
+        assert all(x == 0 for x in v.values()), v
+        assert int(state.n_t.sum()) == corpus.num_tokens
+
+
+class TestMaskingAndEdges:
+    def test_invalid_tokens_are_noops(self):
+        """Interleaved valid=0 tokens must not perturb the chain."""
+        T = 16
+        corpus, state, doc_ids, word_ids, order, boundary = _setup(
+            T, 12, 40, 10.0, seed=4)
+        alpha, beta = 50.0 / T, 0.01
+        beta_bar = beta * corpus.num_words
+        tok_doc, tok_wrd, valid, bound, z0, u = _fused_inputs(
+            state, doc_ids, word_ids, order, boundary)
+        kw = dict(alpha=alpha, beta=beta, beta_bar=beta_bar)
+        base = fused_sweep_tokens(tok_doc, tok_wrd, valid, bound, z0, u,
+                                  state.n_td, state.n_wt, state.n_t, **kw)
+
+        # duplicate every token, mark the copies invalid (boundary=0)
+        n = tok_doc.shape[0]
+        ileave = lambda a, pad: jnp.stack(
+            [a, jnp.full_like(a, pad)], axis=1).reshape(2 * n)
+        got = fused_sweep_tokens(
+            ileave(tok_doc, 0), ileave(tok_wrd, 0), ileave(valid, 0),
+            ileave(bound, 0), ileave(z0, 0), ileave(u, 0.5),
+            state.n_td, state.n_wt, state.n_t, **kw)
+        z2, ntd2, nwt2, nt2, F2 = got
+        np.testing.assert_array_equal(np.asarray(z2[0::2]),
+                                      np.asarray(base[0]))
+        np.testing.assert_array_equal(np.asarray(ntd2), np.asarray(base[1]))
+        np.testing.assert_array_equal(np.asarray(nwt2), np.asarray(base[2]))
+        np.testing.assert_array_equal(np.asarray(nt2), np.asarray(base[3]))
+        np.testing.assert_array_equal(np.asarray(F2), np.asarray(base[4]))
+
+    def test_empty_stream(self):
+        T = 8
+        z, ntd, nwt, nt, F = fused_sweep_tokens(
+            jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.int32),
+            jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.int32),
+            jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.float32),
+            jnp.zeros((3, T), jnp.int32), jnp.zeros((5, T), jnp.int32),
+            jnp.zeros((T,), jnp.int32),
+            alpha=0.5, beta=0.01, beta_bar=0.05)
+        assert z.shape == (0,)
+        assert int(jnp.abs(ntd).sum()) == 0
+
+    def test_non_pow2_T_rejected(self):
+        T = 12
+        with pytest.raises(ValueError, match="power-of-two"):
+            fused_sweep_tokens(
+                jnp.zeros((4,), jnp.int32), jnp.zeros((4,), jnp.int32),
+                jnp.ones((4,), jnp.int32), jnp.ones((4,), jnp.int32),
+                jnp.zeros((4,), jnp.int32), jnp.zeros((4,), jnp.float32),
+                jnp.zeros((3, T), jnp.int32), jnp.zeros((5, T), jnp.int32),
+                jnp.zeros((T,), jnp.int32),
+                alpha=0.5, beta=0.01, beta_bar=0.05)
+
+
+class TestNomadFusedInnerMode:
+    def test_single_device_ring_matches_scan(self):
+        from repro.core.nomad import NomadLDA
+        from repro.data.sharding import build_layout
+        T = 16
+        corpus, _, _ = synthetic.make_corpus(
+            num_docs=20, vocab_size=50, num_topics=8, mean_doc_len=12.0,
+            seed=9)
+        layout = build_layout(corpus, n_workers=1, T=T)
+        mesh = jax.make_mesh((1,), ("worker",))
+        results = {}
+        for mode in ("scan", "fused"):
+            lda = NomadLDA(mesh=mesh, ring_axes=("worker",), layout=layout,
+                           alpha=50.0 / T, beta=0.01, sync_mode="stoken",
+                           inner_mode=mode)
+            arrays = lda.init_arrays(seed=0)
+            for it in range(2):
+                arrays = lda.sweep(arrays, seed=it)
+            results[mode] = (*lda.global_counts(arrays),
+                             np.asarray(arrays["z"]))
+        for a, b in zip(results["scan"], results["fused"]):
+            np.testing.assert_array_equal(a, b)

@@ -37,6 +37,32 @@ class TestFTreeSampleKernel:
         z = np.asarray(ftree_sample(F, u))
         assert (z == 7).mean() > 0.99
 
+    def test_batch_exactly_one_tile(self):
+        """N == N_BLK: the padding path must be a no-op, not an off-by-one."""
+        from repro.kernels.ftree_sample.ftree_sample import N_BLK
+        T = 64
+        rng = np.random.default_rng(11)
+        F = ftree.build(jnp.asarray(rng.random(T).astype(np.float32) + 0.01))
+        u = jnp.asarray(rng.random(N_BLK).astype(np.float32))
+        z_k = ftree_sample(F, u)
+        assert z_k.shape == (N_BLK,)
+        np.testing.assert_array_equal(np.asarray(z_k),
+                                      np.asarray(ftree_sample_ref(F, u)))
+
+    def test_zero_probability_leaves_never_drawn(self):
+        """Zero-mass leaves are unreachable for u01 < 1 (paper §3.1 note)."""
+        T = 128
+        rng = np.random.default_rng(13)
+        p = np.zeros(T, np.float32)
+        alive = rng.choice(T, size=T // 4, replace=False)
+        p[alive] = rng.random(T // 4).astype(np.float32) + 0.1
+        F = ftree.build(jnp.asarray(p))
+        u = jnp.asarray(rng.random(2048).astype(np.float32))
+        z_k = np.asarray(ftree_sample(F, u))
+        assert np.isin(z_k, alive).all()
+        np.testing.assert_array_equal(z_k,
+                                      np.asarray(ftree_sample_ref(F, u)))
+
 
 class TestFTreeUpdateKernel:
     @pytest.mark.parametrize("T", [2, 64, 1024])
@@ -60,6 +86,28 @@ class TestFTreeUpdateKernel:
         F2 = ftree_update_batch(F, ts, ds)
         assert float(ftree.leaves(F2)[0]) == 17.0
         assert float(ftree.total(F2)) == T + 16.0
+
+    def test_duplicate_paths_match_oracle(self):
+        """Many updates to the same leaf and to siblings sharing ancestors:
+        level-by-level scatter must accumulate exactly like Alg. 2 walks."""
+        T = 64
+        rng = np.random.default_rng(21)
+        F = ftree.build(jnp.asarray(rng.random(T).astype(np.float32) + 0.5))
+        # half the batch hits leaf 3, rest hits its sibling 2 and cousin 5
+        ts = jnp.asarray(np.array([3] * 32 + [2] * 16 + [5] * 16, np.int32))
+        ds = jnp.asarray(rng.standard_normal(64).astype(np.float32) * 0.1)
+        F_k = ftree_update_batch(F, ts, ds)
+        F_r = ftree_update_ref(F, ts, ds)
+        np.testing.assert_allclose(np.asarray(F_k), np.asarray(F_r),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_zero_delta_is_identity(self):
+        T = 32
+        F = ftree.build(jnp.asarray(
+            np.random.default_rng(0).random(T).astype(np.float32)))
+        ts = jnp.asarray(np.arange(8, dtype=np.int32))
+        F2 = ftree_update_batch(F, ts, jnp.zeros(8, jnp.float32))
+        np.testing.assert_array_equal(np.asarray(F2), np.asarray(F))
 
     def test_update_then_sample_consistent(self):
         """Kernel-composed pipeline: update then sample = rebuild then sample."""
@@ -90,6 +138,23 @@ class TestLdaScoresKernel:
         kw = dict(alpha=0.05, beta=0.01, beta_bar=0.01 * 5000)
         z_k, norm_k = lda_scores_draw(ntd, nwt, nt, u, **kw)
         z_r, norm_r = lda_scores_draw_ref(ntd, nwt, nt, u, **kw)
+        np.testing.assert_array_equal(np.asarray(z_k), np.asarray(z_r))
+        np.testing.assert_allclose(np.asarray(norm_k), np.asarray(norm_r),
+                                   rtol=1e-5)
+
+    def test_batch_exactly_one_tile(self):
+        """N == N_BLK exercises the unpadded grid edge."""
+        from repro.kernels.lda_scores.lda_scores import N_BLK
+        T = 128
+        rng = np.random.default_rng(29)
+        ntd = jnp.asarray(rng.integers(0, 8, (N_BLK, T)).astype(np.int32))
+        nwt = jnp.asarray(rng.integers(0, 20, (N_BLK, T)).astype(np.int32))
+        nt = jnp.asarray(rng.integers(20, 1000, T).astype(np.int32))
+        u = jnp.asarray(rng.random(N_BLK).astype(np.float32))
+        kw = dict(alpha=0.05, beta=0.01, beta_bar=0.01 * 5000)
+        z_k, norm_k = lda_scores_draw(ntd, nwt, nt, u, **kw)
+        z_r, norm_r = lda_scores_draw_ref(ntd, nwt, nt, u, **kw)
+        assert z_k.shape == (N_BLK,)
         np.testing.assert_array_equal(np.asarray(z_k), np.asarray(z_r))
         np.testing.assert_allclose(np.asarray(norm_k), np.asarray(norm_r),
                                    rtol=1e-5)

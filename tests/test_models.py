@@ -10,6 +10,10 @@ from repro.models import attention as attn_mod
 from repro.models import ssm as ssm_mod
 from repro.models.layers import softcap
 
+# Model-zoo coverage is minutes-long; excluded from the fast signal via
+# `pytest -m "not slow"` (tier-1 still runs everything).
+pytestmark = pytest.mark.slow
+
 
 class TestSSDOracle:
     """Chunked SSD must equal the naive per-step recurrence."""

@@ -9,6 +9,10 @@ from repro.configs import get_config
 from repro.models import moe as moe_mod
 from repro.models.moe import dispatch_indices
 
+# Model-zoo coverage is minutes-long; excluded from the fast signal via
+# `pytest -m "not slow"` (tier-1 still runs everything).
+pytestmark = pytest.mark.slow
+
 
 class TestDispatchIndices:
     @given(n=st.integers(1, 64), k=st.integers(1, 4), E=st.integers(2, 16),

@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# CI gate: import-clean collection, fast kernel/sampler signal, then tier-1.
+#
+#   tools/ci.sh          # collection check + full tier-1 suite
+#   tools/ci.sh --fast   # collection check + `-m "not slow"` subset only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== collection (all test modules must import cleanly) =="
+python -m pytest -q --collect-only >/dev/null
+
+echo "== fast signal: kernels + samplers (-m 'not slow') =="
+python -m pytest -q -m "not slow"
+
+if [[ "${1:-}" != "--fast" ]]; then
+    # The fast subset already ran above; finish tier-1 with the remainder
+    # instead of re-running everything.
+    echo "== tier-1 remainder: slow suite (-m slow) =="
+    python -m pytest -x -q -m "slow"
+fi
+
+echo "CI OK"
