@@ -6,9 +6,15 @@ Prints ``name,us_per_call,derived`` CSV.  Sections:
     fig4/…     convergence per sampler (paper Fig 4a-b)
     fig5/…     multicore nomad scaling (paper Fig 5)
     kernels/…  Pallas kernel oracle checks
+    sweep/…    scan vs fused vs nomad tokens/sec (writes BENCH_sweep.json)
     roofline/… (arch × shape × mesh) roofline terms from the dry-run
 
-Env: REPRO_BENCH_FAST=1 skips the slow multi-device section.
+Besides the CSV, the sweep section records its numbers in
+``BENCH_sweep.json`` at the repo root — the machine-readable perf
+trajectory successive PRs diff against.
+
+Env: REPRO_BENCH_FAST=1 skips the slow multi-device scaling section and
+shrinks the sweep section's ring.
 """
 from __future__ import annotations
 
@@ -21,13 +27,14 @@ def main() -> None:
     sections = []
     from benchmarks import (bucket_bench, convergence_bench, kernel_bench,
                             lda_sampler_bench, roofline_bench,
-                            sampler_bench)
+                            sampler_bench, sweep_bench)
     sections = [
         ("table1", sampler_bench.run),
         ("table2", lda_sampler_bench.run),
         ("fig4", convergence_bench.run),
         ("sec3.3", bucket_bench.run),
         ("kernels", kernel_bench.run),
+        ("sweep", sweep_bench.run),
         ("roofline", roofline_bench.run),
     ]
     if not os.environ.get("REPRO_BENCH_FAST"):

@@ -1,0 +1,109 @@
+"""Sweep-throughput benchmark + the repo's machine-readable perf record.
+
+Measures tokens/sec of the three sweep paths —
+
+* serial ``cgs.sweep_fplda_word`` with ``backend="scan"`` vs ``"fused"``
+  (the single-block fused kernel), in-process;
+* the distributed nomad sweep (subprocesses on faked devices) for
+  ``inner_mode`` ∈ {scan, fused} × ``B`` ∈ {W, 4W} — the block-queue ring
+  with one fused ``pallas_call`` per round in fused mode —
+
+and, besides the usual CSV rows, writes ``BENCH_sweep.json`` at the repo
+root so successive PRs leave a diffable perf trajectory (interpret-mode
+numbers: structure, not silicon).
+
+Env: REPRO_BENCH_FAST=1 shrinks the nomad ring to 2 workers.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.util import row, time_fn
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(REPO, "BENCH_sweep.json")
+
+SERIAL_T = 1024
+
+
+def _serial_entries(T: int = SERIAL_T) -> list[dict]:
+    from repro.core import cgs
+    from repro.data import synthetic
+
+    corpus, _, _ = synthetic.make_corpus(
+        num_docs=24, vocab_size=80, num_topics=16, mean_doc_len=10.0, seed=T)
+    state = cgs.init_state(corpus, T, jax.random.key(0))
+    doc_ids = jnp.asarray(corpus.doc_ids)
+    word_ids = jnp.asarray(corpus.word_ids)
+    order = jnp.asarray(corpus.word_order())
+    boundary = jnp.asarray(corpus.word_boundary())
+    alpha, beta = 50.0 / T, 0.01
+
+    entries = []
+    for backend in ("scan", "fused"):
+        fn = jax.jit(lambda s, be=backend: cgs.sweep_fplda_word(
+            s, doc_ids, word_ids, order, boundary, alpha, beta, backend=be))
+        t = time_fn(fn, state, warmup=1, iters=3)
+        entries.append({"path": "serial", "backend": backend, "T": T,
+                        "n_tokens": int(corpus.num_tokens),
+                        "tokens_per_sec": corpus.num_tokens / t})
+    return entries
+
+
+def _nomad_entries(W: int) -> list[dict]:
+    entries = []
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    for inner_mode in ("scan", "fused"):
+        for B in (W, 4 * W):
+            res = subprocess.run(
+                [sys.executable, "-m", "repro.launch.lda_dist_check",
+                 str(W), "stoken", "1", inner_mode, str(B)],
+                capture_output=True, text=True, env=env, timeout=900)
+            if res.returncode != 0:
+                raise RuntimeError(
+                    f"lda_dist_check W={W} B={B} {inner_mode}: "
+                    + res.stderr[-500:])
+            rep = json.loads(res.stdout.strip().splitlines()[-1])
+            entries.append({
+                "path": "nomad", "backend": inner_mode, "B": B, "W": W,
+                "T": 16, "k": rep["blocks_per_worker"],
+                "n_tokens": rep["n_tokens"],
+                "tokens_per_sec": rep["tokens_per_sec"],
+                "exact": rep["n_td_mismatch"] + rep["n_wt_mismatch"]
+                         + rep["n_t_mismatch"] == 0,
+                "round_imbalance": rep["round_imbalance"],
+            })
+    return entries
+
+
+def run() -> list[str]:
+    fast = bool(os.environ.get("REPRO_BENCH_FAST"))
+    W = 2 if fast else 4
+    entries = _serial_entries() + _nomad_entries(W)
+    if not fast:
+        # Only full-size runs may touch the committed perf trajectory —
+        # the CI smoke's shrunken W=2 ring must not overwrite it.
+        with open(BENCH_JSON, "w") as f:
+            json.dump({"interpret_mode": True, "entries": entries}, f,
+                      indent=1)
+
+    out = []
+    for e in entries:
+        tag = (f"sweep/{e['path']}/{e['backend']}"
+               + (f"/B{e['B']}W{e['W']}" if e["path"] == "nomad" else "")
+               + f"/T{e['T']}")
+        us = 1e6 / max(e["tokens_per_sec"], 1e-9)
+        out.append(row(tag, us, f"tokens_per_sec={e['tokens_per_sec']:.0f}"))
+    out.append(row("sweep/json", 0.0,
+                   ("skipped=fast_mode" if fast else
+                    f"wrote={os.path.basename(BENCH_JSON)}")
+                   + f";entries={len(entries)}"))
+    return out

@@ -1,11 +1,16 @@
 """F+Nomad LDA across 8 (faked) devices — the paper's distributed algorithm.
 
-Run:  PYTHONPATH=src python examples/nomad_distributed.py
+Run:  PYTHONPATH=src python examples/nomad_distributed.py [n_blocks]
 Documents sharded across an 8-worker ring; word-topic blocks travel the
-ring as nomadic tokens; the s-token carries the global topic counts
-(paper Alg. 4).  Prints LL per sweep + exactness check.
+ring as nomadic tokens — by default 4 blocks per worker (B = 4W, the
+paper's blocks >> workers setup; pass n_blocks to override), with each
+worker sweeping its whole block queue every ring round; the s-token
+carries the global topic counts (paper Alg. 4).  Prints LL per sweep +
+exactness check.
 """
 import os
+import sys
+
 os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
                            + os.environ.get("XLA_FLAGS", ""))
 
@@ -28,9 +33,11 @@ def main():
     n_dev = len(jax.devices())
     print(f"devices: {n_dev}; corpus: {corpus.num_tokens} tokens")
 
+    n_blocks = int(sys.argv[1]) if len(sys.argv) > 1 else 4 * n_dev
     mesh = jax.make_mesh((n_dev,), ("worker",))
-    layout = build_layout(corpus, n_workers=n_dev, T=T)
-    print(f"layout: {layout.W}x{layout.B} cells, pad {layout.pad_fraction:.1%},"
+    layout = build_layout(corpus, n_workers=n_dev, T=T, n_blocks=n_blocks)
+    print(f"layout: {layout.W}x{layout.B} cells ({layout.k} blocks/queue), "
+          f"pad {layout.pad_fraction:.1%},"
           f" worst-round imbalance {layout.round_imbalance:.2f}x")
 
     lda = NomadLDA(mesh=mesh, ring_axes=("worker",), layout=layout,

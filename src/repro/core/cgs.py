@@ -140,7 +140,7 @@ def sweep_reference(state: LDAState, doc_ids, word_ids, order,
 # ---------------------------------------------------------------------------
 def sweep_fplda_word(state: LDAState, doc_ids, word_ids, order, boundary,
                      alpha: float, beta: float, *, backend: str = "scan",
-                     interpret: bool = True) -> LDAState:
+                     interpret: bool | None = None) -> LDAState:
     """Paper Algorithm 3.  Tokens arrive sorted by word; ``boundary[k]`` marks
     the first occurrence of a new vocabulary item.
 
@@ -157,8 +157,9 @@ def sweep_fplda_word(state: LDAState, doc_ids, word_ids, order, boundary,
         "fused"  — the single-``pallas_call`` kernel in
                    :mod:`repro.kernels.fused_sweep`, which keeps the F+tree
                    and count tables VMEM-resident (DESIGN.md §7).  Same
-                   chain bit-for-bit; ``interpret=True`` (default) runs it
-                   CPU-safely.  ``alpha``/``beta`` are baked into the
+                   chain bit-for-bit; ``interpret=None`` (default) compiles
+                   on TPU and runs the CPU-safe interpreter elsewhere.
+                   ``alpha``/``beta`` are baked into the
                    kernel as static values, so they must be concrete
                    Python floats (not traced), and each distinct value
                    compiles its own kernel.
@@ -172,7 +173,10 @@ def sweep_fplda_word(state: LDAState, doc_ids, word_ids, order, boundary,
     u = jax.random.uniform(sweep_key, (order.shape[0],))
 
     if backend == "fused":
-        from repro.kernels.fused_sweep import fused_sweep_tokens
+        from repro.kernels.fused_sweep import (default_interpret,
+                                               fused_sweep_tokens)
+        if interpret is None:
+            interpret = default_interpret()
         sweep = functools.partial(fused_sweep_tokens, interpret=interpret)
     elif backend == "scan":
         # The masked per-token chain (Alg. 3 inner loop: boundary rebuild,

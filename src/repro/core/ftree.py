@@ -21,7 +21,10 @@ Operations (all pure, jit/vmap/scan friendly):
 
 ``T`` must be a power of two (paper's simplifying assumption); :func:`pad_pow2`
 zero-pads arbitrary ``p``.  Zero-probability leaves are never returned by
-``sample`` provided u01 < 1 strictly and no negative leaves exist.
+``sample`` provided no negative leaves exist: the traversal refuses to enter
+a zero-mass right subtree, so even ``u01`` so close to 1 that ``u01 * F[1]``
+rounds up to ``F[1]`` in f32 (easy at large totals) lands on the last
+positive leaf instead of falling off the right edge onto padding.
 """
 from __future__ import annotations
 
@@ -101,6 +104,11 @@ def sample(F: jax.Array, u01: jax.Array) -> jax.Array:
 
     ``F`` is a single tree (1-D); use :func:`sample_batch`/vmap for batches.
     Θ(log T): one gather + select per level.
+
+    Edge guard: descending right additionally requires the right subtree to
+    hold positive mass.  Without it, ``u = u01 * F[1]`` can round up to
+    ``F[1]`` exactly (f32, large totals) and the walk marches off the right
+    edge onto a zero-probability padded leaf.
     """
     T = F.shape[-1] // 2
     d = depth(T)
@@ -109,7 +117,7 @@ def sample(F: jax.Array, u01: jax.Array) -> jax.Array:
     def step(_, carry):
         i, u = carry
         left = F[2 * i]
-        go_right = u >= left
+        go_right = (u >= left) & (F[2 * i + 1] > 0)
         i = 2 * i + go_right.astype(i.dtype)
         u = jnp.where(go_right, u - left, u)
         return i, u
@@ -121,7 +129,10 @@ def sample(F: jax.Array, u01: jax.Array) -> jax.Array:
 
 @functools.partial(jax.jit, static_argnames=())
 def sample_batch(F: jax.Array, u01: jax.Array) -> jax.Array:
-    """Vectorized draws from one tree: ``u01`` is any-shape uniforms in [0,1)."""
+    """Vectorized draws from one tree: ``u01`` is any-shape uniforms in [0,1).
+
+    Same zero-mass-right-subtree guard as :func:`sample`.
+    """
     T = F.shape[-1] // 2
     d = depth(T)
     u = u01 * F[1]
@@ -130,7 +141,7 @@ def sample_batch(F: jax.Array, u01: jax.Array) -> jax.Array:
     def step(_, carry):
         i, u = carry
         left = F[2 * i]
-        go_right = u >= left
+        go_right = (u >= left) & (F[2 * i + 1] > 0)
         i = 2 * i + go_right.astype(i.dtype)
         u = jnp.where(go_right, u - left, u)
         return i, u
@@ -158,7 +169,6 @@ def update_batch(F: jax.Array, ts: jax.Array, deltas: jax.Array) -> jax.Array:
     """Batched updates ``p_{ts[k]} += deltas[k]``; duplicate paths accumulate."""
     T = F.shape[-1] // 2
     idx = _path_indices(T, ts)                      # (..., d+1)
-    d = idx.shape[-1]
     vals = jnp.broadcast_to(deltas[..., None], idx.shape).astype(F.dtype)
     return F.at[idx.reshape(-1)].add(vals.reshape(-1))
 

@@ -3,11 +3,19 @@
 The paper's nomadic framework, mapped to SPMD TPU semantics (DESIGN.md §3):
 
 * **Word tokens** τ_j: the word-topic count blocks ``n_wt[b]`` are the
-  nomadic payloads.  ``W`` workers form a flat ring over the whole mesh;
-  blocks hop one position per round via ``lax.ppermute``.  In round ``r``
-  worker ``w`` owns block ``(w + r) % B`` and performs the unit subtasks
-  (all occurrences of that block's words in its document shard) with the
-  word counts **always exact and conflict-free** — the paper's key invariant.
+  nomadic payloads.  ``W`` workers form a flat ring over the whole mesh and
+  each owns a **queue of k = B/W blocks** (paper §4: circulate more blocks
+  than workers).  The queue hops one ring position per round via
+  ``lax.ppermute``: in round ``r`` (of ``W`` per sweep) worker ``w`` holds
+  chunk ``c = (w + r) % W`` — global blocks ``c·k .. c·k+k−1`` — and sweeps
+  all ``k`` of those cells (all occurrences of the queue's words in its
+  document shard) before passing the queue on.  Chunks are disjoint, so the
+  word counts stay **always exact and conflict-free** — the paper's key
+  invariant — for any ``B`` that is a multiple of ``W``.  Raising ``B``
+  shrinks each block's vocabulary slice (the fused kernel's VMEM page) at
+  no round-balance cost: the hierarchical LPT in ``data/sharding.py``
+  keeps ``NomadLayout.round_imbalance`` equal to the ``B = W`` packing
+  (DESIGN.md §4).
 
 * **The s token** τ_s: the only globally shared state is ``s = n_t`` (size
   T).  Three synchronization modes:
@@ -15,7 +23,7 @@ The paper's nomadic framework, mapped to SPMD TPU semantics (DESIGN.md §3):
     - ``"stoken"``   (paper-faithful): one authoritative ``s`` vector rides
       the same ring; each worker keeps a working copy ``s_l`` and folds its
       accumulated delta in when the token passes (Alg. 4: s += s_l − s̄).
-      Staleness ≤ W−1 rounds, exactly the paper's bound.
+      Staleness ≤ W−1 ring rounds (k cells each), exactly the paper's bound.
     - ``"stale"``    (AD-LDA-like): no intra-sweep sync; deltas psum at
       sweep end.  Staleness = 1 sweep.
     - ``"allreduce"``(beyond-paper): psum the cumulative deltas every round.
@@ -144,19 +152,45 @@ def _cell_sweep_vectorized(tok_doc, tok_wrd, tok_valid, tok_bound, z_cell,
     return z_new, n_td, n_wt, n_t
 
 
-def _cell_sweep_fused(tok_doc, tok_wrd, tok_valid, tok_bound, z_cell,
-                      n_td, n_wt, n_t, u, alpha, beta, beta_bar,
-                      interpret: bool = True):
-    """Exact per-token chain like :func:`_cell_sweep`, but run as the single
-    fused ``pallas_call`` of :mod:`repro.kernels.fused_sweep`: the F+tree,
-    ``n_t`` and the cell's count blocks stay VMEM-resident across the whole
-    cell instead of round-tripping per scan step (DESIGN.md §7).  Bit-exact
-    same chain as ``inner_mode="scan"``."""
-    from repro.kernels.fused_sweep import fused_sweep_tokens
-    z_cell, n_td, n_wt, n_t, _ = fused_sweep_tokens(
-        tok_doc, tok_wrd, tok_valid, tok_bound, z_cell, u, n_td, n_wt, n_t,
+def _queue_sweep_fused(tok_doc, tok_wrd, tok_valid, tok_bound, z_q,
+                       n_td, n_wt_q, n_t, u, alpha, beta, beta_bar,
+                       interpret: bool = True):
+    """Exact per-token chain like :func:`_cell_sweep`, but the worker's whole
+    per-round block queue runs as ONE fused ``pallas_call``
+    (:func:`repro.kernels.fused_sweep.fused_sweep_cells`): grid over the k
+    cells, F+tree / ``n_t`` / ``n_td`` carried across grid steps, one
+    word-topic block VMEM-resident at a time (DESIGN.md §7).  Bit-exact
+    same chain as ``inner_mode="scan"`` over the same queue.
+
+    tok_* / z_q / u: (k, L); n_td: (I,T); n_wt_q: (k,J,T); n_t: (T,).
+    """
+    from repro.kernels.fused_sweep import fused_sweep_cells
+    z_q, n_td, n_wt_q, n_t, _ = fused_sweep_cells(
+        tok_doc, tok_wrd, tok_valid, tok_bound, z_q, u, n_td, n_wt_q, n_t,
         alpha=alpha, beta=beta, beta_bar=beta_bar, interpret=interpret)
-    return z_cell, n_td, n_wt, n_t
+    return z_q, n_td, n_wt_q, n_t
+
+
+def _queue_sweep_cells(cell_fn, tok_doc, tok_wrd, tok_valid, tok_bound, z_q,
+                       n_td, n_wt_q, n_t, u, alpha, beta, beta_bar):
+    """Sweep a worker's k-cell queue with a per-cell function (``scan`` /
+    ``vectorized`` inner modes): an inner ``lax.scan`` over the stacked
+    cells, the exact chain carried through ``n_td``/``n_t``; each cell's
+    ``z`` row and word-topic block ride as scan xs/ys.  Same shapes as
+    :func:`_queue_sweep_fused`."""
+
+    def cell_body(carry, xs):
+        n_td, n_t = carry
+        tok_d, tok_w, tok_v, tok_b, z_c, nwt_c, u_c = xs
+        z_c, n_td, nwt_c, n_t = cell_fn(
+            tok_d, tok_w, tok_v, tok_b, z_c, n_td, nwt_c, n_t, u_c,
+            alpha, beta, beta_bar)
+        return (n_td, n_t), (z_c, nwt_c)
+
+    (n_td, n_t), (z_q, n_wt_q) = lax.scan(
+        cell_body, (n_td, n_t),
+        (tok_doc, tok_wrd, tok_valid, tok_bound, z_q, n_wt_q, u))
+    return z_q, n_td, n_wt_q, n_t
 
 
 # ---------------------------------------------------------------------------
@@ -165,41 +199,55 @@ def _cell_sweep_fused(tok_doc, tok_wrd, tok_valid, tok_bound, z_cell,
 def nomad_sweep_fn(mesh: Mesh, ring_axes: Sequence[str], *,
                    B: int, T: int, alpha: float, beta: float,
                    beta_bar: float, sync_mode: str = "stoken",
-                   inner_mode: str = "scan", interpret: bool = True):
+                   inner_mode: str = "scan", interpret: bool | None = None):
     """Build the jittable distributed sweep for ``mesh``.
 
     Ring spans the product of ``ring_axes`` (e.g. ('worker',) or
     ('pod', 'worker')).  Returns ``sweep(tok_*, z, n_td, n_wt, n_t, seed)``
     operating on global arrays sharded as documented in NomadLayout.
 
-    inner_mode: "scan" = exact per-token chain (paper Alg. 3);
-    "fused" = the same chain as one fused Pallas kernel per cell
-    (see :func:`_cell_sweep_fused`; ``interpret=False`` compiles it for
-    TPU); "vectorized" = beyond-paper batched cell pass (see
-    :func:`_cell_sweep_vectorized`).
+    ``B`` may be any multiple of the ring size ``W``: each worker's shard of
+    the ``(B, J_max, T)`` word-topic array is its ``k = B/W``-block queue,
+    and the sweep runs ``W`` ring rounds of ``k`` cells each (``B`` cell
+    sweeps per worker per sweep — every (worker, block) pair exactly once).
+
+    inner_mode: "scan" = exact per-token chain (paper Alg. 3), inner scan
+    over the queue; "fused" = the same chain with the whole queue as ONE
+    fused Pallas kernel per round (see :func:`_queue_sweep_fused`);
+    "vectorized" = beyond-paper batched cell pass (see
+    :func:`_cell_sweep_vectorized`).  ``interpret=None`` auto-selects the
+    compiled Pallas path on TPU and the interpreter elsewhere.
     """
     sizes = tuple(int(mesh.shape[ax]) for ax in ring_axes)
     W = int(np.prod(sizes))
+    if B % W != 0 or B < W:
+        raise ValueError(
+            f"B must be a positive multiple of the ring size; got B={B}, "
+            f"W={W}")
+    k = B // W
     if sync_mode not in ("stoken", "stale", "allreduce"):
         raise ValueError(sync_mode)
-    cell_fns = {"scan": _cell_sweep,
-                "fused": functools.partial(_cell_sweep_fused,
-                                           interpret=interpret),
-                "vectorized": _cell_sweep_vectorized}
-    if inner_mode not in cell_fns:
+    if inner_mode not in ("scan", "fused", "vectorized"):
         raise ValueError(inner_mode)
-    cell_fn = cell_fns[inner_mode]
+    if interpret is None:
+        from repro.kernels.fused_sweep import default_interpret
+        interpret = default_interpret()
+    if inner_mode == "fused":
+        queue_fn = functools.partial(_queue_sweep_fused, interpret=interpret)
+    else:
+        cell_fn = {"scan": _cell_sweep,
+                   "vectorized": _cell_sweep_vectorized}[inner_mode]
+        queue_fn = functools.partial(_queue_sweep_cells, cell_fn)
 
-    ring = P(tuple(ring_axes))
     spec_tok = P(tuple(ring_axes), None, None)
     spec_td = P(tuple(ring_axes), None, None)
     spec_wt = P(tuple(ring_axes), None, None)
     spec_rep = P()
 
     def worker_fn(tok_doc, tok_wrd, tok_valid, tok_bound,
-                  z, n_td, n_wt_blk, n_t, seed):
-        # local shapes: tok_* (1,B,L); n_td (1,I,T); n_wt_blk (1,J,T);
-        # n_t (T,) replicated; seed () replicated.
+                  z, n_td, n_wt_q, n_t, seed):
+        # local shapes: tok_* (1,B,L); n_td (1,I,T); n_wt_q (k,J,T) — the
+        # worker's block queue; n_t (T,) replicated; seed () replicated.
         w_flat = _flat_index(ring_axes, sizes)
         key = jax.random.fold_in(jax.random.key(seed), w_flat)
         L = tok_doc.shape[-1]
@@ -209,19 +257,18 @@ def nomad_sweep_fn(mesh: Mesh, ring_axes: Sequence[str], *,
         delta_folded = jnp.zeros_like(n_t)
 
         def round_body(carry, r):
-            z, n_td, n_wt_blk, n_t_local, delta_mine, s_tok, delta_folded = carry
-            b = (w_flat + r) % B
-            cell = lambda a: lax.dynamic_index_in_dim(a[0], b, axis=0,
-                                                      keepdims=False)
-            u = jax.random.uniform(jax.random.fold_in(key, r), (L,))
+            z, n_td, n_wt_q, n_t_local, delta_mine, s_tok, delta_folded = carry
+            c = (w_flat + r) % W          # chunk id this queue corresponds to
+            b0 = c * k                    # its first global block index
+            queue = lambda a: lax.dynamic_slice_in_dim(a[0], b0, k, axis=0)
+            u = jax.random.uniform(jax.random.fold_in(key, r), (k, L))
             n_t_before = n_t_local
-            z_cell, n_td0, n_wt0, n_t_local = cell_fn(
-                cell(tok_doc), cell(tok_wrd), cell(tok_valid),
-                cell(tok_bound), cell(z), n_td[0], n_wt_blk[0], n_t_local,
+            z_q, n_td0, n_wt_q, n_t_local = queue_fn(
+                queue(tok_doc), queue(tok_wrd), queue(tok_valid),
+                queue(tok_bound), queue(z), n_td[0], n_wt_q, n_t_local,
                 u, alpha, beta, beta_bar)
             n_td = n_td0[None]
-            n_wt_blk = n_wt0[None]
-            z = lax.dynamic_update_index_in_dim(z, z_cell[None], b, axis=1)
+            z = lax.dynamic_update_slice_in_dim(z[0], z_q, b0, axis=0)[None]
             delta_mine = delta_mine + (n_t_local - n_t_before)
 
             # --- s synchronization ---------------------------------------
@@ -237,19 +284,20 @@ def nomad_sweep_fn(mesh: Mesh, ring_axes: Sequence[str], *,
             # "stale": nothing until sweep end.
 
             # --- rotate nomadic payloads ----------------------------------
-            n_wt_blk, s_tok = _ring_shift_down((n_wt_blk, s_tok),
-                                               ring_axes, sizes)
-            return (z, n_td, n_wt_blk, n_t_local, delta_mine, s_tok,
+            n_wt_q, s_tok = _ring_shift_down((n_wt_q, s_tok),
+                                             ring_axes, sizes)
+            return (z, n_td, n_wt_q, n_t_local, delta_mine, s_tok,
                     delta_folded), None
 
-        carry0 = (z, n_td, n_wt_blk, n_t, jnp.zeros_like(n_t), s_tok,
+        carry0 = (z, n_td, n_wt_q, n_t, jnp.zeros_like(n_t), s_tok,
                   delta_folded)
-        (z, n_td, n_wt_blk, _, delta_mine, _, _), _ = lax.scan(
-            round_body, carry0, jnp.arange(B, dtype=jnp.int32))
+        (z, n_td, n_wt_q, _, delta_mine, _, _), _ = lax.scan(
+            round_body, carry0, jnp.arange(W, dtype=jnp.int32))
 
+        # W shifts = one full loop: every queue is back home, in block order.
         # exact sweep-end resync (additivity of s)
         n_t_out = n_t_start + lax.psum(delta_mine, tuple(ring_axes))
-        return z, n_td, n_wt_blk, n_t_out
+        return z, n_td, n_wt_q, n_t_out
 
     fn = shard_map(
         worker_fn, mesh=mesh,
@@ -265,7 +313,13 @@ def nomad_sweep_fn(mesh: Mesh, ring_axes: Sequence[str], *,
 # ---------------------------------------------------------------------------
 @dataclass
 class NomadLDA:
-    """End-to-end distributed LDA trainer (the paper's F+Nomad LDA)."""
+    """End-to-end distributed LDA trainer (the paper's F+Nomad LDA).
+
+    ``layout.B`` may be any multiple of the ring size: each worker then
+    carries a ``k = B/W``-block queue around the ring (paper §4's
+    blocks ≫ workers setup).  ``interpret=None`` (the default) compiles the
+    ``inner_mode="fused"`` Pallas path on TPU and interprets it elsewhere.
+    """
     mesh: Mesh
     ring_axes: tuple
     layout: NomadLayout
@@ -273,10 +327,17 @@ class NomadLDA:
     beta: float
     sync_mode: str = "stoken"
     inner_mode: str = "scan"
-    interpret: bool = True      # Pallas interpret mode for inner_mode="fused"
+    interpret: bool | None = None  # Pallas mode for inner_mode="fused"
 
     def __post_init__(self):
         lay = self.layout
+        W = int(np.prod([self.mesh.shape[ax] for ax in self.ring_axes]))
+        if lay.W != W:
+            raise ValueError(
+                f"layout built for {lay.W} workers but the ring has {W}")
+        if lay.B % lay.W != 0:
+            raise ValueError(
+                f"layout B={lay.B} is not a multiple of W={lay.W}")
         self.beta_bar = self.beta * lay.num_words
         self._sweep = nomad_sweep_fn(
             self.mesh, self.ring_axes, B=lay.B, T=lay.T,

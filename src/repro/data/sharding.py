@@ -28,7 +28,8 @@ import numpy as np
 
 from repro.data.corpus import Corpus
 
-__all__ = ["NomadLayout", "lpt_assign", "build_layout"]
+__all__ = ["NomadLayout", "counts_from_layout", "lpt_assign",
+           "build_layout"]
 
 
 def lpt_assign(weights: np.ndarray, n_bins: int,
@@ -38,26 +39,35 @@ def lpt_assign(weights: np.ndarray, n_bins: int,
     n = weights.shape[0]
     if not balance:
         return (np.arange(n) * n_bins // max(n, 1)).astype(np.int32)
-    order = np.argsort(-weights, kind="stable")
-    loads = np.zeros(n_bins, dtype=np.int64)
-    out = np.zeros(n, dtype=np.int32)
-    # heap-free LPT: argmin over n_bins each step (n_bins is small)
     import heapq
+    order = np.argsort(-weights, kind="stable")
+    out = np.zeros(n, dtype=np.int32)
+    # LPT via a min-heap keyed on bin load: pop lightest, assign, push back.
     heap = [(0, b) for b in range(n_bins)]
     heapq.heapify(heap)
     for i in order:
         load, b = heapq.heappop(heap)
         out[i] = b
         heapq.heappush(heap, (load + int(weights[i]), b))
-        loads[b] += weights[i]
     return out
 
 
 @dataclass
 class NomadLayout:
-    """Padded cell grid + count-table geometry for a nomad run."""
+    """Padded cell grid + count-table geometry for a nomad run.
+
+    ``B`` must be a multiple of ``W``: each worker owns a queue of
+    ``k = B // W`` blocks that travels the ring as one payload.  At ring
+    round ``r`` (of ``W`` per sweep) worker ``w`` holds chunk
+    ``c = (w + r) % W``, i.e. global blocks ``c*k .. c*k + k - 1``, and
+    sweeps all ``k`` of those cells before the queue hops (DESIGN.md §4).
+    ``B = W`` (``k = 1``) is the paper's minimal setup; ``B ≫ W`` is the
+    paper's actual choice — finer blocks shrink the per-block vocabulary
+    (the fused kernel's VMEM page) and, thanks to the hierarchical LPT in
+    :func:`build_layout`, cost nothing in round balance.
+    """
     W: int                       # workers (ring length)
-    B: int                       # word blocks (== W in the standard setup)
+    B: int                       # word blocks (multiple of W)
     L: int                       # padded cell length
     T: int                       # topics
     num_words: int               # true vocabulary size J (for β̄)
@@ -75,19 +85,50 @@ class NomadLayout:
     cell_sizes: np.ndarray       # (W,B) true token counts (imbalance stats)
 
     @property
+    def k(self) -> int:
+        """Blocks per worker queue (``B // W``)."""
+        return self.B // self.W
+
+    @property
     def pad_fraction(self) -> float:
         return 1.0 - self.cell_sizes.sum() / (self.W * self.B * self.L)
 
     @property
     def round_imbalance(self) -> float:
-        """max/mean token count over the W cells active in a round, worst
-        round — the 'last reducer' exposure of the static schedule."""
+        """max/mean token count over the per-worker queue loads in a ring
+        round, worst round — the 'last reducer' exposure of the static
+        schedule.  A round's load on worker ``w`` is the sum over its
+        ``k``-cell queue, so larger ``B`` (smaller blocks, more of them)
+        averages the power-law word skew down within each round."""
+        W, k = self.W, self.k
         worst = 0.0
-        for r in range(self.B):
-            active = self.cell_sizes[np.arange(self.W), (np.arange(self.W) + r) % self.B]
+        for r in range(W):
+            chunk = (np.arange(W) + r) % W
+            active = np.array([
+                self.cell_sizes[w, chunk[w] * k:(chunk[w] + 1) * k].sum()
+                for w in range(W)])
             if active.mean() > 0:
                 worst = max(worst, active.max() / active.mean())
         return float(worst)
+
+
+def counts_from_layout(lay: NomadLayout, z: np.ndarray, T: int):
+    """Rebuild compact global ``(n_td, n_wt, n_t)`` from the padded
+    assignment grid ``z`` (W,B,L) — the single oracle every distributed
+    exactness check compares ``NomadLDA.global_counts`` against.
+
+    (Distinct from :func:`repro.core.cgs.counts_from_assignments`, which
+    rebuilds from the flat serial corpus arrays.)"""
+    w_idx, b_idx, l_idx = np.nonzero(lay.tok_valid)
+    zz = z[w_idx, b_idx, l_idx]
+    gdoc = lay.doc_of_worker[w_idx, lay.tok_doc[w_idx, b_idx, l_idx]]
+    gwrd = lay.word_of_block[b_idx, lay.tok_wrd[w_idx, b_idx, l_idx]]
+    I = int((lay.doc_of_worker >= 0).sum())
+    n_td = np.zeros((I, T), np.int64)
+    n_wt = np.zeros((lay.num_words, T), np.int64)
+    np.add.at(n_td, (gdoc, zz), 1)
+    np.add.at(n_wt, (gwrd, zz), 1)
+    return n_td, n_wt, np.bincount(zz, minlength=T).astype(np.int64)
 
 
 def build_layout(corpus: Corpus, *, n_workers: int, T: int,
@@ -95,8 +136,27 @@ def build_layout(corpus: Corpus, *, n_workers: int, T: int,
                  balance: bool = True, seed: int = 0) -> NomadLayout:
     B = n_workers if n_blocks is None else n_blocks
     W = n_workers
+    if B % W != 0 or B < W:
+        raise ValueError(
+            f"n_blocks must be a positive multiple of n_workers so each "
+            f"worker's block queue has equal length; got n_blocks={B}, "
+            f"n_workers={W}")
     doc_assign = lpt_assign(corpus.doc_lengths(), W, balance)
-    word_assign = lpt_assign(corpus.word_freqs(), B, balance)
+    # Hierarchical word packing: LPT into W ring chunks first (so per-round
+    # queue loads are exactly as balanced as the B = W packing — flat LPT
+    # into B small bins lets single heavy words dominate a bin and would
+    # *worsen* round balance), then LPT each chunk into k = B/W blocks.
+    # Block b of chunk c gets global id c*k + b, matching the queue layout.
+    freqs = corpus.word_freqs()
+    chunk_assign = lpt_assign(freqs, W, balance)
+    if B == W:
+        word_assign = chunk_assign
+    else:
+        kq = B // W
+        word_assign = np.zeros_like(chunk_assign)
+        for c in range(W):
+            ids = np.nonzero(chunk_assign == c)[0]
+            word_assign[ids] = c * kq + lpt_assign(freqs[ids], kq, balance)
 
     # Local doc / word index maps.
     I_counts = np.bincount(doc_assign, minlength=W)

@@ -27,7 +27,10 @@ def _kernel(depth: int, f_ref, u_ref, z_ref):
     i = jnp.ones(u.shape, jnp.int32)     # all walks start at the root
     for _ in range(depth):               # unrolled log₂T vector steps
         left = F[2 * i]                  # vectorized VMEM gather
-        go_right = u >= left
+        # zero-mass right subtrees are never entered — same edge guard as
+        # ftree.sample_batch (u01→1 can round u up to F[1] in f32, which
+        # would otherwise walk onto a zero-probability padded leaf)
+        go_right = (u >= left) & (F[2 * i + 1] > 0)
         i = 2 * i + go_right.astype(jnp.int32)
         u = jnp.where(go_right, u - left, u)
     T = F.shape[0] // 2

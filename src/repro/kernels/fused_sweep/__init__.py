@@ -1,1 +1,3 @@
-from repro.kernels.fused_sweep.ops import fused_sweep_tokens  # noqa: F401
+from repro.kernels.fused_sweep.ops import (default_interpret,  # noqa: F401
+                                           fused_sweep_cells,
+                                           fused_sweep_tokens)

@@ -20,6 +20,21 @@ F.update) into **one** ``pallas_call``:
   grid steps — the standard Pallas accumulator pattern — and the chain is
   exact across tile boundaries.
 
+Two entry points share the tile body:
+
+* :func:`fused_sweep_pallas` — one token stream against one word-topic
+  block (the serial ``cgs`` hot path).  Grid ``(n_tiles,)``.
+* :func:`fused_sweep_cells_pallas` — a *batch of k cells* (one nomad
+  worker's whole per-round block queue) in a single call.  Grid
+  ``(k, n_tiles)`` with the cell index leftmost, so the k cells run in
+  sequence on the sequential TPU grid; ``n_td``/``n_t``/``F`` use constant
+  index maps and carry across cell boundaries, while the per-cell
+  word-topic block ``n_wt[c]`` is paged in/out by the BlockSpec index map —
+  only one ``(J, T)`` block is VMEM-resident at a time.  Cross-cell chain
+  exactness needs no special handling: a cell's first valid token is always
+  a word boundary (``NomadLayout.tok_bound``), which rebuilds the tree from
+  the incoming block's q vector.
+
 Masking follows the nomad cell-sweep convention: ``valid=False`` tokens are
 no-ops (count deltas of 0, leaf rewritten to itself, ``z`` kept), which is
 what makes arbitrary padding of the token stream safe.  ``boundary=True``
@@ -49,28 +64,16 @@ N_BLK = 256  # tokens per grid program
 F32 = jnp.float32
 
 
-def _kernel(T: int, n_blk: int, alpha: float, beta: float, beta_bar: float,
-            # inputs
-            tok_doc_ref, tok_wrd_ref, tok_valid_ref, tok_bound_ref,
-            z_in_ref, u_ref, ntd_in_ref, nwt_in_ref, nt_in_ref,
-            # outputs
-            z_ref, ntd_ref, nwt_ref, nt_ref, f_ref):
-    first = pl.program_id(0) == 0
+def _sweep_tile(T: int, n_blk: int, alpha: float, beta: float,
+                beta_bar: float, tok_doc, tok_wrd, tok_valid, tok_bound,
+                z_tile, u_tile, nt0, F0,
+                ntd_load, ntd_store, nwt_load, nwt_store):
+    """Exact Alg. 3 chain over one token tile.
 
-    @pl.when(first)
-    def _init():
-        ntd_ref[...] = ntd_in_ref[...]
-        nwt_ref[...] = nwt_in_ref[...]
-        nt_ref[...] = nt_in_ref[...]
-        f_ref[...] = jnp.zeros((2 * T,), F32)
-
-    # Tile-local token metadata (VMEM-resident for the whole tile).
-    tok_doc = tok_doc_ref[...]
-    tok_wrd = tok_wrd_ref[...]
-    tok_valid = tok_valid_ref[...]
-    tok_bound = tok_bound_ref[...]
-    z_tile = z_in_ref[...]
-    u_tile = u_ref[...]
+    Row access to the doc-topic / word-topic tables is abstracted behind
+    ``*_load(idx) -> (T,)`` / ``*_store(idx, row)`` so the single-block and
+    cell-batch kernels share the float-op order exactly.
+    """
 
     def q_of(nwt_row, nt):
         return (nwt_row.astype(F32) + beta) / (nt.astype(F32) + beta_bar)
@@ -83,8 +86,8 @@ def _kernel(T: int, n_blk: int, alpha: float, beta: float, beta_bar: float,
         t_old = z_tile[k]
         one = valid.astype(jnp.int32)
 
-        ntd_row = ntd_ref[pl.ds(d, 1), :][0]          # (T,) doc-topic row
-        nwt_row = nwt_ref[pl.ds(w, 1), :][0]          # (T,) word-topic row
+        ntd_row = ntd_load(d)                         # (T,) doc-topic row
+        nwt_row = nwt_load(w)                         # (T,) word-topic row
 
         # Word boundary: rebuild the tree for the incoming word's q vector
         # (cond, not where: the Θ(T) build must not run on interior tokens).
@@ -125,14 +128,40 @@ def _kernel(T: int, n_blk: int, alpha: float, beta: float, beta_bar: float,
         F = ftree.set_leaf(F, t_new,
                            jnp.where(valid, new_leaf2, F[T + t_new]))
 
-        ntd_ref[pl.ds(d, 1), :] = ntd_row[None]
-        nwt_ref[pl.ds(w, 1), :] = nwt_row[None]
+        ntd_store(d, ntd_row)
+        nwt_store(w, nwt_row)
         z_tile = z_tile.at[k].set(t_new)
         return z_tile, nt, F
 
-    nt0 = nt_ref[...]
-    F0 = f_ref[...]
-    z_tile, nt, F = jax.lax.fori_loop(0, n_blk, body, (z_tile, nt0, F0))
+    return jax.lax.fori_loop(0, n_blk, body, (z_tile, nt0, F0))
+
+
+def _kernel(T: int, n_blk: int, alpha: float, beta: float, beta_bar: float,
+            # inputs
+            tok_doc_ref, tok_wrd_ref, tok_valid_ref, tok_bound_ref,
+            z_in_ref, u_ref, ntd_in_ref, nwt_in_ref, nt_in_ref,
+            # outputs
+            z_ref, ntd_ref, nwt_ref, nt_ref, f_ref):
+    first = pl.program_id(0) == 0
+
+    @pl.when(first)
+    def _init():
+        ntd_ref[...] = ntd_in_ref[...]
+        nwt_ref[...] = nwt_in_ref[...]
+        nt_ref[...] = nt_in_ref[...]
+        f_ref[...] = jnp.zeros((2 * T,), F32)
+
+    z_tile, nt, F = _sweep_tile(
+        T, n_blk, alpha, beta, beta_bar,
+        tok_doc_ref[...], tok_wrd_ref[...], tok_valid_ref[...],
+        tok_bound_ref[...], z_in_ref[...], u_ref[...],
+        nt_ref[...], f_ref[...],
+        ntd_load=lambda d: ntd_ref[pl.ds(d, 1), :][0],
+        ntd_store=lambda d, row: ntd_ref.__setitem__(
+            (pl.ds(d, 1), slice(None)), row[None]),
+        nwt_load=lambda w: nwt_ref[pl.ds(w, 1), :][0],
+        nwt_store=lambda w, row: nwt_ref.__setitem__(
+            (pl.ds(w, 1), slice(None)), row[None]))
 
     z_ref[...] = z_tile
     nt_ref[...] = nt
@@ -178,6 +207,95 @@ def fused_sweep_pallas(tok_doc: jax.Array, tok_wrd: jax.Array,
             jax.ShapeDtypeStruct((n,), jnp.int32),
             jax.ShapeDtypeStruct((I, T), jnp.int32),
             jax.ShapeDtypeStruct((J, T), jnp.int32),
+            jax.ShapeDtypeStruct((T,), jnp.int32),
+            jax.ShapeDtypeStruct((2 * T,), F32),
+        ],
+        interpret=interpret,
+    )(tok_doc, tok_wrd, tok_valid, tok_bound, z, u, n_td, n_wt, n_t)
+
+
+def _cells_kernel(T: int, n_blk: int, alpha: float, beta: float,
+                  beta_bar: float,
+                  # inputs
+                  tok_doc_ref, tok_wrd_ref, tok_valid_ref, tok_bound_ref,
+                  z_in_ref, u_ref, ntd_in_ref, nwt_in_ref, nt_in_ref,
+                  # outputs
+                  z_ref, ntd_ref, nwt_ref, nt_ref, f_ref):
+    first = (pl.program_id(0) == 0) & (pl.program_id(1) == 0)
+    cell_start = pl.program_id(1) == 0
+
+    @pl.when(first)
+    def _init():
+        ntd_ref[...] = ntd_in_ref[...]
+        nt_ref[...] = nt_in_ref[...]
+        f_ref[...] = jnp.zeros((2 * T,), F32)
+
+    # New cell ⇒ new word-topic block paged into the output accumulator.
+    @pl.when(cell_start)
+    def _load_block():
+        nwt_ref[...] = nwt_in_ref[...]
+
+    z_tile, nt, F = _sweep_tile(
+        T, n_blk, alpha, beta, beta_bar,
+        tok_doc_ref[0], tok_wrd_ref[0], tok_valid_ref[0],
+        tok_bound_ref[0], z_in_ref[0], u_ref[0],
+        nt_ref[...], f_ref[...],
+        ntd_load=lambda d: ntd_ref[pl.ds(d, 1), :][0],
+        ntd_store=lambda d, row: ntd_ref.__setitem__(
+            (pl.ds(d, 1), slice(None)), row[None]),
+        nwt_load=lambda w: nwt_ref[0, pl.ds(w, 1), :][0],
+        nwt_store=lambda w, row: nwt_ref.__setitem__(
+            (0, pl.ds(w, 1), slice(None)), row[None]))
+
+    z_ref[...] = z_tile[None]
+    nt_ref[...] = nt
+    f_ref[...] = F
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "beta", "beta_bar",
+                                             "n_blk", "interpret"))
+def fused_sweep_cells_pallas(tok_doc: jax.Array, tok_wrd: jax.Array,
+                             tok_valid: jax.Array, tok_bound: jax.Array,
+                             z: jax.Array, u: jax.Array,
+                             n_td: jax.Array, n_wt: jax.Array,
+                             n_t: jax.Array, *,
+                             alpha: float, beta: float, beta_bar: float,
+                             n_blk: int = N_BLK, interpret: bool = True):
+    """One fused F+LDA sweep over a batch of k cells (a nomad block queue).
+
+    Shapes: tok_* / z / u are (k, L) with L % n_blk == 0; n_td (I, T) i32
+    shared across cells; n_wt (k, J, T) i32, one word-topic block per cell
+    (``tok_wrd`` is block-local); n_t (T,) i32.  Cells are swept in order
+    c = 0..k-1 with the exact chain carried through ``n_td``/``n_t``/``F``;
+    returns (z', n_td', n_wt', n_t', F).
+    """
+    k, L = tok_doc.shape
+    I, T = n_td.shape
+    J = n_wt.shape[1]
+    grid = (k, L // n_blk)
+
+    tile = lambda: pl.BlockSpec((1, n_blk), lambda c, t: (c, t))
+    blk = lambda: pl.BlockSpec((1, J, T), lambda c, t: (c, 0, 0))
+    whole = lambda *shape: pl.BlockSpec(shape,
+                                        lambda c, t: (0,) * len(shape))
+
+    return pl.pallas_call(
+        functools.partial(_cells_kernel, T, n_blk,
+                          float(alpha), float(beta), float(beta_bar)),
+        grid=grid,
+        in_specs=[
+            tile(), tile(), tile(), tile(), tile(), tile(),   # token stream
+            whole(I, T), blk(), whole(T),                     # count tables
+        ],
+        out_specs=[
+            tile(),                                           # z'
+            whole(I, T), blk(), whole(T),                     # tables
+            whole(2 * T),                                     # final F+tree
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, L), jnp.int32),
+            jax.ShapeDtypeStruct((I, T), jnp.int32),
+            jax.ShapeDtypeStruct((k, J, T), jnp.int32),
             jax.ShapeDtypeStruct((T,), jnp.int32),
             jax.ShapeDtypeStruct((2 * T,), F32),
         ],

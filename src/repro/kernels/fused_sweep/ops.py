@@ -5,7 +5,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.fused_sweep.fused_sweep import N_BLK, fused_sweep_pallas
+from repro.kernels.fused_sweep.fused_sweep import (N_BLK,
+                                                   fused_sweep_cells_pallas,
+                                                   fused_sweep_pallas)
 
 # Soft ceiling for the compiled path: the count tables + tree + one token
 # tile must fit on-chip (~16 MiB/core, leave headroom for double buffers).
@@ -14,6 +16,15 @@ VMEM_BUDGET_BYTES = 12 * 1024 * 1024
 
 def _is_pow2(n: int) -> bool:
     return n >= 1 and (n & (n - 1)) == 0
+
+
+def default_interpret() -> bool:
+    """Pallas interpret-mode default: compiled on TPU, interpreted elsewhere.
+
+    The kernels target the TPU memory hierarchy; on CPU/GPU backends the
+    interpreter is the only correct way to run them.
+    """
+    return jax.default_backend() != "tpu"
 
 
 def fused_sweep_tokens(tok_doc: jax.Array, tok_wrd: jax.Array,
@@ -61,3 +72,57 @@ def fused_sweep_tokens(tok_doc: jax.Array, tok_wrd: jax.Array,
         alpha=float(alpha), beta=float(beta), beta_bar=float(beta_bar),
         n_blk=n_blk, interpret=interpret)
     return z_out[:n], n_td, n_wt, n_t, F
+
+
+def fused_sweep_cells(tok_doc: jax.Array, tok_wrd: jax.Array,
+                      tok_valid: jax.Array, tok_bound: jax.Array,
+                      z: jax.Array, u: jax.Array,
+                      n_td: jax.Array, n_wt: jax.Array, n_t: jax.Array, *,
+                      alpha: float, beta: float, beta_bar: float,
+                      n_blk: int = N_BLK, interpret: bool = True):
+    """Fused F+LDA sweep over a batch of ``k`` padded cells in ONE kernel.
+
+    This is the nomad hot path: ``tok_* / z / u`` are ``(k, L)`` — one row
+    per cell of a worker's per-round block queue — and ``n_wt`` is
+    ``(k, J, T)``, the queue's word-topic blocks.  The kernel's grid is
+    ``(k, tiles)``: cells run in sequence, the word-topic block is paged per
+    cell, and ``n_td``/``n_t``/the F+tree carry across cells, so the result
+    is chain-identical to sweeping the cells one after another.
+
+    Pads ``L`` to a multiple of ``n_blk`` with masked no-op tokens and
+    unpads.  Returns ``(z', n_td', n_wt', n_t', F)``.
+    """
+    I, T = n_td.shape
+    k, J = n_wt.shape[0], n_wt.shape[1]
+    if not _is_pow2(T):
+        raise ValueError(f"fused sweep needs a power-of-two T, got {T}")
+    if tok_doc.shape[0] != k:
+        raise ValueError(f"queue length mismatch: tokens have "
+                         f"{tok_doc.shape[0]} cells, n_wt has {k} blocks")
+    L = tok_doc.shape[1]
+    if k == 0 or L == 0:
+        return z, n_td, n_wt, n_t, jnp.zeros((2 * T,), jnp.float32)
+    if not interpret:
+        # Whole-array n_td in+out, ONE (J,T) word-topic block in+out (the
+        # queue is paged per cell), tree output, token tiles.
+        vmem = 2 * 4 * (I * T + J * T + T) + 4 * 2 * T + 7 * 4 * n_blk
+        if vmem > VMEM_BUDGET_BYTES:
+            raise ValueError(
+                f"fused cell-batch state ({vmem / 2**20:.1f} MiB) exceeds "
+                f"the VMEM budget; shard docs/vocab into smaller nomad "
+                f"cells or use inner_mode='scan'")
+
+    n_pad = -L % n_blk
+    pad_i = lambda a: jnp.pad(a.astype(jnp.int32), ((0, 0), (0, n_pad)))
+    tok_doc, tok_wrd, z_p = pad_i(tok_doc), pad_i(tok_wrd), pad_i(z)
+    tok_valid = jnp.pad(tok_valid.astype(jnp.int32), ((0, 0), (0, n_pad)))
+    tok_bound = jnp.pad(tok_bound.astype(jnp.int32), ((0, 0), (0, n_pad)))
+    u = jnp.pad(u.astype(jnp.float32), ((0, 0), (0, n_pad)))
+
+    z_out, n_td, n_wt, n_t, F = fused_sweep_cells_pallas(
+        tok_doc, tok_wrd, tok_valid, tok_bound, z_p, u,
+        n_td.astype(jnp.int32), n_wt.astype(jnp.int32),
+        n_t.astype(jnp.int32),
+        alpha=float(alpha), beta=float(beta), beta_bar=float(beta_bar),
+        n_blk=n_blk, interpret=interpret)
+    return z_out[:, :L], n_td, n_wt, n_t, F

@@ -16,8 +16,13 @@ F32 = jnp.float32
 
 
 def fused_sweep_ref(tok_doc, tok_wrd, tok_valid, tok_bound, z, u,
-                    n_td, n_wt, n_t, *, alpha, beta, beta_bar):
-    """Reference sweep; same signature/returns as ``fused_sweep_pallas``."""
+                    n_td, n_wt, n_t, *, alpha, beta, beta_bar, F0=None):
+    """Reference sweep; same signature/returns as ``fused_sweep_pallas``.
+
+    ``F0`` is the incoming F+tree (zeros by default — the single-call
+    convention); the cell-batch oracle threads it across cells to mirror
+    the kernel's carried tree.
+    """
     T = n_t.shape[-1]
 
     def q_of(nwt_row, nt):
@@ -67,8 +72,27 @@ def fused_sweep_ref(tok_doc, tok_wrd, tok_valid, tok_bound, z, u,
         return (z, n_td, n_wt, n_t, F), None
 
     n = tok_doc.shape[0]
-    F0 = jnp.zeros((2 * T,), F32)
+    if F0 is None:
+        F0 = jnp.zeros((2 * T,), F32)
     carry0 = (z, n_td, n_wt, n_t, F0)
     (z, n_td, n_wt, n_t, F), _ = lax.scan(
         step, carry0, (jnp.arange(n, dtype=jnp.int32), u))
     return z, n_td, n_wt, n_t, F
+
+
+def fused_sweep_cells_ref(tok_doc, tok_wrd, tok_valid, tok_bound, z, u,
+                          n_td, n_wt, n_t, *, alpha, beta, beta_bar):
+    """Oracle for the cell-batch kernel: the k cells swept one after another
+    with ``n_td``/``n_t``/``F`` carried through — same signature/returns as
+    ``fused_sweep_cells_pallas`` (tok_* (k, L); n_wt (k, J, T))."""
+    k = tok_doc.shape[0]
+    z_rows, nwt_rows = [], []
+    F = jnp.zeros((2 * n_t.shape[-1],), F32)
+    for c in range(k):
+        z_c, n_td, nwt_c, n_t, F = fused_sweep_ref(
+            tok_doc[c], tok_wrd[c], tok_valid[c], tok_bound[c], z[c], u[c],
+            n_td, n_wt[c], n_t, alpha=alpha, beta=beta, beta_bar=beta_bar,
+            F0=F)
+        z_rows.append(z_c)
+        nwt_rows.append(nwt_c)
+    return (jnp.stack(z_rows), n_td, jnp.stack(nwt_rows), n_t, F)

@@ -1,6 +1,7 @@
 """Multi-device Nomad LDA correctness check (run as a subprocess).
 
-Usage:  python -m repro.launch.lda_dist_check [n_devices] [sync_mode] [pods]
+Usage:  python -m repro.launch.lda_dist_check \
+            [n_devices] [sync_mode] [pods] [inner_mode] [n_blocks]
 
 Sets XLA_FLAGS *before* importing jax (the only supported way to fake a
 multi-device CPU platform), runs sweeps of Nomad F+LDA on a synthetic
@@ -17,14 +18,16 @@ def main() -> None:
     sync_mode = sys.argv[2] if len(sys.argv) > 2 else "stoken"
     pods = int(sys.argv[3]) if len(sys.argv) > 3 else 1
     inner_mode = sys.argv[4] if len(sys.argv) > 4 else "scan"
+    n_blocks = int(sys.argv[5]) if len(sys.argv) > 5 else n_dev
 
     os.environ["XLA_FLAGS"] = (
         f"--xla_force_host_platform_device_count={n_dev} "
         + os.environ.get("XLA_FLAGS", ""))
 
+    import time
+
     import jax
     import numpy as np
-    from jax.sharding import Mesh
 
     from repro.core.nomad import NomadLDA
     from repro.data import synthetic
@@ -44,39 +47,46 @@ def main() -> None:
         mesh = jax.make_mesh((n_dev,), ("worker",))
         ring_axes = ("worker",)
 
-    layout = build_layout(corpus, n_workers=n_dev, T=T)
+    layout = build_layout(corpus, n_workers=n_dev, T=T,
+                          n_blocks=n_blocks)
     lda = NomadLDA(mesh=mesh, ring_axes=ring_axes, layout=layout,
                    alpha=alpha, beta=beta, sync_mode=sync_mode,
                    inner_mode=inner_mode)
     arrays = lda.init_arrays(seed=0)
 
+    n_sweeps = 4
     lls = [lda.log_likelihood(arrays)]
-    for it in range(4):
-        arrays = lda.sweep(arrays, seed=it)
+    arrays = lda.sweep(arrays, seed=0)        # compile + first sweep
+    lls.append(lda.log_likelihood(arrays))
+    wall = 0.0
+    for it in range(1, n_sweeps):
+        t0 = time.perf_counter()              # time the sweep alone — the
+        arrays = lda.sweep(arrays, seed=it)   # LL eval is diagnostics, not
+        jax.block_until_ready(arrays["n_t"])  # the throughput under test
+        wall += time.perf_counter() - t0
         lls.append(lda.log_likelihood(arrays))
+    tokens_per_sec = corpus.num_tokens * (n_sweeps - 1) / max(wall, 1e-9)
 
     # --- invariants ---------------------------------------------------------
+    from repro.data.sharding import counts_from_layout
     n_td, n_wt, n_t = lda.global_counts(arrays)
     z = np.asarray(arrays["z"])
     lay = layout
-    w_idx, b_idx, l_idx = np.nonzero(lay.tok_valid)
-    zz = z[w_idx, b_idx, l_idx]
-    # rebuild tables from z
-    gdoc = lay.doc_of_worker[w_idx, lay.tok_doc[w_idx, b_idx, l_idx]]
-    gwrd = lay.word_of_block[b_idx, lay.tok_wrd[w_idx, b_idx, l_idx]]
-    n_td_ref = np.zeros_like(n_td)
-    np.add.at(n_td_ref, (gdoc, zz), 1)
-    n_wt_ref = np.zeros_like(n_wt)
-    np.add.at(n_wt_ref, (gwrd, zz), 1)
-    n_t_ref = np.bincount(zz, minlength=T)
+    n_td_ref, n_wt_ref, n_t_ref = counts_from_layout(lay, z, T)
 
     # check the layout maps are self-consistent with the original corpus
+    w_idx, b_idx, l_idx = np.nonzero(lay.tok_valid)
+    zz = z[w_idx, b_idx, l_idx]
+    gwrd = lay.word_of_block[b_idx, lay.tok_wrd[w_idx, b_idx, l_idx]]
     gwrd_expected = lay.tok_gwrd[w_idx, b_idx, l_idx]
     report = {
         "n_devices": n_dev,
         "sync_mode": sync_mode,
         "inner_mode": inner_mode,
         "pods": pods,
+        "n_blocks": layout.B,
+        "blocks_per_worker": layout.k,
+        "tokens_per_sec": tokens_per_sec,
         "n_tokens": int(corpus.num_tokens),
         "ll": lls,
         "ll_improved": bool(lls[-1] > lls[0]),

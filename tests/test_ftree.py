@@ -74,6 +74,36 @@ class TestSample:
         got = np.asarray(ftree.sample_batch(F, u))
         assert set(np.unique(got)).issubset({1, 3, 6})
 
+    @given(size=st.integers(1, 600), scale_log=st.integers(0, 9),
+           seed=st.integers(0, 1000))
+    @settings(max_examples=60, deadline=None)
+    def test_u01_edge_never_falls_onto_padding(self, size, scale_log, seed):
+        """u01 → 1 must land on a positive leaf, even when ``u01 * F[1]``
+        rounds up to ``F[1]`` in f32 (large totals) and the tree carries
+        ``pad_pow2`` zero padding past the true ``size``."""
+        rng = np.random.default_rng(seed)
+        scale = 10.0 ** scale_log
+        p = (rng.random(size).astype(np.float32) + 0.01) * scale
+        F = ftree.build(ftree.pad_pow2(jnp.asarray(p)))
+        edge = jnp.asarray([1.0 - 1e-7, np.float32(1.0 - 1e-7),
+                            np.nextafter(np.float32(1.0), np.float32(0.0)),
+                            1.0], dtype=jnp.float32)
+        got_b = np.asarray(ftree.sample_batch(F, edge))
+        got_s = np.asarray(
+            [ftree.sample(F, u) for u in edge])
+        for got in (got_b, got_s):
+            assert (got < size).all(), (size, scale, got)
+            assert (np.asarray(ftree.leaves(F))[got] > 0).all()
+
+    def test_u01_edge_large_total_unpadded(self):
+        """The same overflow hazard exists without padding: u ≥ F[1] must
+        clamp to the last leaf, not walk off the heap."""
+        T = 64
+        p = jnp.full((T,), np.float32(1e8))
+        F = ftree.build(p)
+        got = np.asarray(ftree.sample_batch(F, jnp.asarray([1.0], jnp.float32)))
+        assert (got == T - 1).all()
+
     def test_histogram_matches_distribution(self):
         rng = np.random.default_rng(3)
         T = 32

@@ -37,6 +37,22 @@ class TestFTreeSampleKernel:
         z = np.asarray(ftree_sample(F, u))
         assert (z == 7).mean() > 0.99
 
+    def test_u01_edge_on_padded_tree_matches_oracle(self):
+        """u01 → 1 with pad_pow2 zero padding and a large total: the kernel
+        must carry the same zero-mass-right-subtree guard as ftree.sample
+        and land on a positive leaf."""
+        size = 300
+        rng = np.random.default_rng(5)
+        p = (rng.random(size).astype(np.float32) + 0.01) * 1e8
+        F = ftree.build(ftree.pad_pow2(jnp.asarray(p)))
+        u = jnp.asarray([1.0 - 1e-7,
+                         np.nextafter(np.float32(1.0), np.float32(0.0)),
+                         1.0], dtype=jnp.float32)
+        z_k = np.asarray(ftree_sample(F, u))
+        z_r = np.asarray(ftree_sample_ref(F, u))
+        np.testing.assert_array_equal(z_k, z_r)
+        assert (z_k < size).all()
+
     def test_batch_exactly_one_tile(self):
         """N == N_BLK: the padding path must be a no-op, not an off-by-one."""
         from repro.kernels.ftree_sample.ftree_sample import N_BLK

@@ -21,13 +21,14 @@ from repro.data.sharding import build_layout, lpt_assign
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def _run_check(n_dev, sync_mode, pods=1, inner_mode="scan"):
+def _run_check(n_dev, sync_mode, pods=1, inner_mode="scan", n_blocks=None):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(REPO, "src")
     env.pop("XLA_FLAGS", None)
     out = subprocess.run(
         [sys.executable, "-m", "repro.launch.lda_dist_check",
-         str(n_dev), sync_mode, str(pods), inner_mode],
+         str(n_dev), sync_mode, str(pods), inner_mode,
+         str(n_dev if n_blocks is None else n_blocks)],
         capture_output=True, text=True, env=env, timeout=900)
     assert out.returncode == 0, out.stderr[-3000:]
     return json.loads(out.stdout.strip().splitlines()[-1])
@@ -59,6 +60,45 @@ class TestLayout:
         # word->block assignment is respected
         assert (lay.word_assign[gw] == b).all()
 
+    def test_multiblock_layout_covers_all_tokens(self):
+        """B = 3W: the queue geometry must still place every token exactly
+        once, with the word→block map respected."""
+        corpus, _, _ = synthetic.make_corpus(
+            num_docs=50, vocab_size=128, num_topics=8, mean_doc_len=20.0,
+            seed=1)
+        lay = build_layout(corpus, n_workers=4, T=8, n_blocks=12)
+        assert (lay.W, lay.B, lay.k) == (4, 12, 3)
+        assert int(lay.tok_valid.sum()) == corpus.num_tokens
+        w, b, l = np.nonzero(lay.tok_valid)
+        gw = lay.word_of_block[b, lay.tok_wrd[w, b, l]]
+        np.testing.assert_array_equal(gw, lay.tok_gwrd[w, b, l])
+        assert (lay.word_assign[gw] == b).all()
+
+    def test_more_blocks_smooth_round_imbalance(self):
+        """The scaling knob must be free: a power-law vocabulary packed into
+        B = 8W blocks round-balances exactly as well as B = W, because word
+        chunks are LPT-packed at ring granularity first and only then split
+        into the k per-queue blocks (hierarchical LPT)."""
+        from repro.data.corpus import Corpus
+        rng = np.random.default_rng(7)
+        doc_ids = np.repeat(np.arange(200), 12)
+        word_ids = np.minimum(rng.zipf(1.3, size=doc_ids.shape[0]), 500) - 1
+        corpus = Corpus(doc_ids=doc_ids.astype(np.int32),
+                        word_ids=word_ids.astype(np.int32),
+                        num_docs=200, num_words=500)
+        lay1 = build_layout(corpus, n_workers=4, T=8, n_blocks=4)
+        lay8 = build_layout(corpus, n_workers=4, T=8, n_blocks=32)
+        assert lay8.round_imbalance <= lay1.round_imbalance * 1.05, (
+            lay1.round_imbalance, lay8.round_imbalance)
+
+    def test_invalid_n_blocks_rejected(self):
+        corpus, _, _ = synthetic.make_corpus(
+            num_docs=20, vocab_size=64, num_topics=8, mean_doc_len=10.0,
+            seed=3)
+        for bad in (3, 6, 0):
+            with pytest.raises(ValueError, match="multiple"):
+                build_layout(corpus, n_workers=4, T=8, n_blocks=bad)
+
     def test_boundaries_mark_distinct_words_per_cell(self):
         corpus, _, _ = synthetic.make_corpus(
             num_docs=30, vocab_size=64, num_topics=8, mean_doc_len=15.0,
@@ -73,17 +113,21 @@ class TestLayout:
 
 
 class TestSingleDeviceRing:
-    """W=1: the nomad machinery must reduce to serial F+LDA semantics."""
+    """W=1: the nomad machinery must reduce to serial F+LDA semantics,
+    for any queue length k = B (the whole ring is one worker)."""
 
-    def test_invariants_and_ll(self):
+    @pytest.mark.parametrize("n_blocks,inner_mode", [
+        (1, "scan"), (4, "scan"), (4, "fused"), (4, "vectorized"),
+    ])
+    def test_invariants_and_ll(self, n_blocks, inner_mode):
         T = 8
         corpus, _, _ = synthetic.make_corpus(
             num_docs=60, vocab_size=128, num_topics=T, mean_doc_len=25.0,
             seed=4)
         mesh = jax.make_mesh((1,), ("worker",))
-        lay = build_layout(corpus, n_workers=1, T=T)
+        lay = build_layout(corpus, n_workers=1, T=T, n_blocks=n_blocks)
         lda = NomadLDA(mesh=mesh, ring_axes=("worker",), layout=lay,
-                       alpha=50.0 / T, beta=0.01)
+                       alpha=50.0 / T, beta=0.01, inner_mode=inner_mode)
         arrays = lda.init_arrays(seed=0)
         ll0 = lda.log_likelihood(arrays)
         for it in range(3):
@@ -95,6 +139,37 @@ class TestSingleDeviceRing:
         assert int(n_t.sum()) == corpus.num_tokens
         np.testing.assert_array_equal(n_td.sum(0), n_t)
         np.testing.assert_array_equal(n_wt.sum(0), n_t)
+
+    def test_block_count_does_not_change_totals(self):
+        """Same corpus under B=1 vs B=4 queues: different visit order (so a
+        different chain), but identical exactness invariants and token mass
+        per word — the block split must be invisible in the totals."""
+        T = 8
+        corpus, _, _ = synthetic.make_corpus(
+            num_docs=40, vocab_size=96, num_topics=T, mean_doc_len=15.0,
+            seed=6)
+        mesh = jax.make_mesh((1,), ("worker",))
+        per_word = {}
+        for B in (1, 4):
+            lay = build_layout(corpus, n_workers=1, T=T, n_blocks=B)
+            lda = NomadLDA(mesh=mesh, ring_axes=("worker",), layout=lay,
+                           alpha=50.0 / T, beta=0.01)
+            arrays = lda.init_arrays(seed=0)
+            arrays = lda.sweep(arrays, seed=0)
+            _, n_wt, n_t = lda.global_counts(arrays)
+            assert int(n_t.sum()) == corpus.num_tokens
+            per_word[B] = n_wt.sum(1)
+        np.testing.assert_array_equal(per_word[1], per_word[4])
+
+    def test_mismatched_layout_rejected(self):
+        corpus, _, _ = synthetic.make_corpus(
+            num_docs=20, vocab_size=64, num_topics=8, mean_doc_len=10.0,
+            seed=8)
+        mesh = jax.make_mesh((1,), ("worker",))
+        lay = build_layout(corpus, n_workers=2, T=8)
+        with pytest.raises(ValueError, match="ring has"):
+            NomadLDA(mesh=mesh, ring_axes=("worker",), layout=lay,
+                     alpha=1.0, beta=0.01)
 
 
 @pytest.mark.slow
@@ -128,3 +203,40 @@ class TestMultiDevice:
         assert rep["n_wt_mismatch"] == 0, rep
         assert rep["n_t_mismatch"] == 0, rep
         assert rep["ll_improved"], rep["ll"]
+
+    @pytest.mark.parametrize("inner_mode", ["scan", "fused"])
+    def test_block_queue_ring(self, inner_mode):
+        """B = 4W: each worker circulates a 4-block queue; counts must stay
+        exact and the chain must still mix."""
+        rep = _run_check(4, "stoken", inner_mode=inner_mode, n_blocks=16)
+        assert rep["blocks_per_worker"] == 4
+        assert rep["n_td_mismatch"] == 0, rep
+        assert rep["n_wt_mismatch"] == 0, rep
+        assert rep["n_t_mismatch"] == 0, rep
+        assert rep["ll_improved"], rep["ll"]
+
+    def test_multipod_block_queue(self):
+        """2 pods × 2 workers with B = 2W: the wrap-around queue hop must
+        cross the pod axis exactly."""
+        rep = _run_check(4, "stoken", pods=2, n_blocks=8)
+        assert rep["n_td_mismatch"] == 0, rep
+        assert rep["n_wt_mismatch"] == 0, rep
+        assert rep["n_t_mismatch"] == 0, rep
+        assert rep["ll_improved"], rep["ll"]
+
+    def test_exactness_matrix(self):
+        """The full sync × inner × B matrix on the 8-device mesh: global
+        counts bit-equal to a rebuild from z in every combination."""
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(REPO, "src")
+        env.pop("XLA_FLAGS", None)
+        out = subprocess.run(
+            [sys.executable, "-m", "repro.launch.lda_matrix_check", "8", "2"],
+            capture_output=True, text=True, env=env, timeout=900)
+        assert out.returncode == 0, out.stderr[-3000:]
+        rep = json.loads(out.stdout.strip().splitlines()[-1])
+        assert len(rep["combos"]) == 27
+        bad = [c for c in rep["combos"]
+               if c["n_td_mismatch"] or c["n_wt_mismatch"]
+               or c["n_t_mismatch"] or not c["tokens_preserved"]]
+        assert rep["all_exact"], bad

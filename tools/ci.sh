@@ -1,12 +1,31 @@
 #!/usr/bin/env bash
 # CI gate: import-clean collection, fast kernel/sampler signal, then tier-1.
 #
-#   tools/ci.sh          # collection check + full tier-1 suite
-#   tools/ci.sh --fast   # collection check + `-m "not slow"` subset only
+#   tools/ci.sh               # collection check + full tier-1 suite
+#   tools/ci.sh --fast        # collection check + `-m "not slow"` subset only
+#   tools/ci.sh --bench-smoke # benchmark smoke only: REPRO_BENCH_FAST=1
+#                             # harness run, fails on any ERROR row
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+bench_smoke() {
+    echo "== bench smoke: REPRO_BENCH_FAST=1 python -m benchmarks.run =="
+    local out
+    out=$(REPRO_BENCH_FAST=1 python -m benchmarks.run) || {
+        echo "$out"; echo "bench smoke: harness exited non-zero"; return 1; }
+    echo "$out"
+    if grep -q "ERROR" <<<"$out"; then
+        echo "bench smoke: ERROR rows present"; return 1
+    fi
+}
+
+if [[ "${1:-}" == "--bench-smoke" ]]; then
+    bench_smoke
+    echo "CI OK (bench smoke)"
+    exit 0
+fi
 
 echo "== collection (all test modules must import cleanly) =="
 python -m pytest -q --collect-only >/dev/null
@@ -19,6 +38,7 @@ if [[ "${1:-}" != "--fast" ]]; then
     # instead of re-running everything.
     echo "== tier-1 remainder: slow suite (-m slow) =="
     python -m pytest -x -q -m "slow"
+    bench_smoke
 fi
 
 echo "CI OK"
