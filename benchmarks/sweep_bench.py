@@ -5,14 +5,21 @@ Measures tokens/sec of the three sweep paths —
 * serial ``cgs.sweep_fplda_word`` with ``backend="scan"`` vs ``"fused"``
   (the single-block fused kernel), in-process;
 * the distributed nomad sweep (subprocesses on faked devices) for
-  ``inner_mode`` ∈ {scan, fused} × ``B`` ∈ {W, 4W} — the block-queue ring
-  with one fused ``pallas_call`` per round in fused mode —
+  ``inner_mode`` ∈ {scan, fused} × ``B`` ∈ {W, 4W} × ``ring_mode`` ∈
+  {barrier, pipelined} — the block-queue ring, with the pipelined
+  schedule's early half-queue hop —
 
-and, besides the usual CSV rows, writes ``BENCH_sweep.json`` at the repo
-root so successive PRs leave a diffable perf trajectory (interpret-mode
-numbers: structure, not silicon).
+and, besides the usual CSV rows, maintains ``BENCH_sweep.json`` at the
+repo root: a **history** of per-PR snapshots (``{"history": [{"rev",
+"entries"}, ...]}``) so successive PRs leave a diffable perf trajectory
+(interpret-mode numbers: structure, not silicon).  Full-size runs append
+a snapshot; ``check_regression`` (also ``python -m benchmarks.sweep_bench
+--check-regression``, wired into ``tools/ci.sh --bench-smoke``) compares
+the last two snapshots' nomad rows and fails on a >30% tokens/sec drop.
 
-Env: REPRO_BENCH_FAST=1 shrinks the nomad ring to 2 workers.
+Env: REPRO_BENCH_FAST=1 shrinks the nomad ring to 2 workers (and never
+touches the committed history).  REPRO_BENCH_REGRESSION_PCT overrides the
+regression threshold (default 30).
 """
 from __future__ import annotations
 
@@ -63,25 +70,119 @@ def _nomad_entries(W: int) -> list[dict]:
     env.pop("XLA_FLAGS", None)
     for inner_mode in ("scan", "fused"):
         for B in (W, 4 * W):
-            res = subprocess.run(
-                [sys.executable, "-m", "repro.launch.lda_dist_check",
-                 str(W), "stoken", "1", inner_mode, str(B)],
-                capture_output=True, text=True, env=env, timeout=900)
-            if res.returncode != 0:
-                raise RuntimeError(
-                    f"lda_dist_check W={W} B={B} {inner_mode}: "
-                    + res.stderr[-500:])
-            rep = json.loads(res.stdout.strip().splitlines()[-1])
-            entries.append({
-                "path": "nomad", "backend": inner_mode, "B": B, "W": W,
-                "T": 16, "k": rep["blocks_per_worker"],
-                "n_tokens": rep["n_tokens"],
-                "tokens_per_sec": rep["tokens_per_sec"],
-                "exact": rep["n_td_mismatch"] + rep["n_wt_mismatch"]
-                         + rep["n_t_mismatch"] == 0,
-                "round_imbalance": rep["round_imbalance"],
-            })
+            for ring_mode in ("barrier", "pipelined"):
+                res = subprocess.run(
+                    [sys.executable, "-m", "repro.launch.lda_dist_check",
+                     str(W), "stoken", "1", inner_mode, str(B), ring_mode],
+                    capture_output=True, text=True, env=env, timeout=900)
+                if res.returncode != 0:
+                    raise RuntimeError(
+                        f"lda_dist_check W={W} B={B} {inner_mode} "
+                        f"{ring_mode}: " + res.stderr[-500:])
+                rep = json.loads(res.stdout.strip().splitlines()[-1])
+                entries.append({
+                    "path": "nomad", "backend": inner_mode, "B": B, "W": W,
+                    "ring_mode": ring_mode,
+                    "T": 16, "k": rep["blocks_per_worker"],
+                    "n_tokens": rep["n_tokens"],
+                    "tokens_per_sec": rep["tokens_per_sec"],
+                    "exact": rep["n_td_mismatch"] + rep["n_wt_mismatch"]
+                             + rep["n_t_mismatch"] == 0,
+                    "round_imbalance": rep["round_imbalance"],
+                })
     return entries
+
+
+# ---------------------------------------------------------------------------
+# History bookkeeping + regression gate.
+# ---------------------------------------------------------------------------
+def _load_history() -> dict:
+    """Read BENCH_sweep.json, migrating the pre-history single-snapshot
+    format ({"entries": [...]}) into history[0]."""
+    if not os.path.exists(BENCH_JSON):
+        return {"interpret_mode": True, "history": []}
+    with open(BENCH_JSON) as f:
+        data = json.load(f)
+    if "history" not in data:
+        data = {"interpret_mode": data.get("interpret_mode", True),
+                "history": [{"rev": "pre-history",
+                             "entries": data.get("entries", [])}]}
+    return data
+
+
+def _git_rev() -> str:
+    if os.environ.get("REPRO_BENCH_LABEL"):
+        return os.environ["REPRO_BENCH_LABEL"]
+    try:
+        out = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             capture_output=True, text=True, cwd=REPO,
+                             timeout=30)
+        if out.returncode == 0:
+            return out.stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        pass
+    return "unknown"
+
+
+def _nomad_key(e: dict) -> tuple:
+    return (e.get("backend"), e.get("B"), e.get("W"),
+            e.get("ring_mode", "barrier"))
+
+
+def _serial_baseline(entries: list[dict]) -> float:
+    for e in entries:
+        if e.get("path") == "serial" and e.get("backend") == "scan":
+            return float(e["tokens_per_sec"])
+    return 0.0
+
+
+def check_regression(threshold: float | None = None) -> list[str]:
+    """Compare the last two history snapshots' nomad rows; return a list of
+    human-readable regression messages (empty = gate passes).
+
+    Rows are matched on (backend, B, W, ring_mode); rows without a
+    predecessor (first snapshot, new configurations) are skipped.
+    Snapshots come from whatever machine produced them, so a row fails
+    only when it regresses both **raw** and **normalized** by its own
+    snapshot's serial-scan tokens/sec (same run, same machine): a slower
+    host drops raw but not normalized, a serial-path speedup drops
+    normalized but not raw — only a real distributed-path slowdown drops
+    both.  The threshold is a fraction (default 0.30, env
+    REPRO_BENCH_REGRESSION_PCT=<percent> overrides).
+    """
+    if threshold is None:
+        threshold = float(os.environ.get(
+            "REPRO_BENCH_REGRESSION_PCT", "30")) / 100.0
+    hist = _load_history()["history"]
+    if len(hist) < 2:
+        return []
+    base_old = _serial_baseline(hist[-2]["entries"])
+    base_new = _serial_baseline(hist[-1]["entries"])
+    prev = {_nomad_key(e): e for e in hist[-2]["entries"]
+            if e.get("path") == "nomad"}
+    regressions = []
+    for e in hist[-1]["entries"]:
+        if e.get("path") != "nomad":
+            continue
+        old = prev.get(_nomad_key(e))
+        if old is None or old["tokens_per_sec"] <= 0:
+            continue
+        ratio_raw = e["tokens_per_sec"] / old["tokens_per_sec"]
+        ratio_norm = (((e["tokens_per_sec"] / base_new)
+                       / (old["tokens_per_sec"] / base_old))
+                      if base_old > 0 and base_new > 0 else ratio_raw)
+        ratio = max(ratio_raw, ratio_norm)
+        if ratio < 1.0 - threshold:
+            regressions.append(
+                f"nomad/{e['backend']}/B{e['B']}W{e['W']}/"
+                f"{e.get('ring_mode', 'barrier')}: "
+                f"{old['tokens_per_sec']:.0f} -> "
+                f"{e['tokens_per_sec']:.0f} tok/s "
+                f"({(1 - ratio_raw) * 100:.0f}% raw / "
+                f"{(1 - ratio_norm) * 100:.0f}% serial-normalized drop, "
+                f"limit {threshold * 100:.0f}%; "
+                f"{hist[-2]['rev']} -> {hist[-1]['rev']})")
+    return regressions
 
 
 def run() -> list[str]:
@@ -90,20 +191,52 @@ def run() -> list[str]:
     entries = _serial_entries() + _nomad_entries(W)
     if not fast:
         # Only full-size runs may touch the committed perf trajectory —
-        # the CI smoke's shrunken W=2 ring must not overwrite it.
+        # the CI smoke's shrunken W=2 ring must not overwrite it.  A
+        # re-run at the same rev replaces its own snapshot instead of
+        # growing the history.
+        data = _load_history()
+        rev = _git_rev()
+        if data["history"] and data["history"][-1]["rev"] == rev:
+            data["history"][-1] = {"rev": rev, "entries": entries}
+        else:
+            data["history"].append({"rev": rev, "entries": entries})
         with open(BENCH_JSON, "w") as f:
-            json.dump({"interpret_mode": True, "entries": entries}, f,
-                      indent=1)
+            json.dump(data, f, indent=1)
 
     out = []
     for e in entries:
         tag = (f"sweep/{e['path']}/{e['backend']}"
-               + (f"/B{e['B']}W{e['W']}" if e["path"] == "nomad" else "")
+               + (f"/B{e['B']}W{e['W']}/{e['ring_mode']}"
+                  if e["path"] == "nomad" else "")
                + f"/T{e['T']}")
         us = 1e6 / max(e["tokens_per_sec"], 1e-9)
         out.append(row(tag, us, f"tokens_per_sec={e['tokens_per_sec']:.0f}"))
+        if e["path"] == "nomad" and not e["exact"]:
+            # surface correctness in the smoke gate, not just the JSON:
+            # an inexact distributed sweep must fail `ci.sh --bench-smoke`
+            # (it greps for ERROR rows) even though the subprocess exited 0
+            out.append(row(tag + "/ERROR", -1.0, "counts_inexact"))
     out.append(row("sweep/json", 0.0,
                    ("skipped=fast_mode" if fast else
                     f"wrote={os.path.basename(BENCH_JSON)}")
                    + f";entries={len(entries)}"))
     return out
+
+
+def main() -> None:
+    if "--check-regression" in sys.argv:
+        regs = check_regression()
+        for r in regs:
+            print(f"REGRESSION: {r}")
+        if regs:
+            sys.exit(1)
+        hist = _load_history()["history"]
+        print(f"bench regression gate OK "
+              f"({len(hist)} snapshot(s) in {os.path.basename(BENCH_JSON)})")
+        return
+    for line in run():
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,12 +1,15 @@
 """F+Nomad LDA across 8 (faked) devices — the paper's distributed algorithm.
 
 Run:  PYTHONPATH=src python examples/nomad_distributed.py [n_blocks]
+                                                          [ring_mode]
 Documents sharded across an 8-worker ring; word-topic blocks travel the
 ring as nomadic tokens — by default 4 blocks per worker (B = 4W, the
 paper's blocks >> workers setup; pass n_blocks to override), with each
 worker sweeping its whole block queue every ring round; the s-token
-carries the global topic counts (paper Alg. 4).  Prints LL per sweep +
-exactness check.
+carries the global topic counts (paper Alg. 4).  ring_mode "pipelined"
+(default; pass "barrier" to compare) forwards each round's first
+half-queue while the second half sweeps — same chain bit-for-bit, hop
+off the critical path.  Prints LL per sweep + exactness check.
 """
 import os
 import sys
@@ -34,14 +37,17 @@ def main():
     print(f"devices: {n_dev}; corpus: {corpus.num_tokens} tokens")
 
     n_blocks = int(sys.argv[1]) if len(sys.argv) > 1 else 4 * n_dev
+    ring_mode = sys.argv[2] if len(sys.argv) > 2 else "pipelined"
     mesh = jax.make_mesh((n_dev,), ("worker",))
     layout = build_layout(corpus, n_workers=n_dev, T=T, n_blocks=n_blocks)
     print(f"layout: {layout.W}x{layout.B} cells ({layout.k} blocks/queue), "
           f"pad {layout.pad_fraction:.1%},"
-          f" worst-round imbalance {layout.round_imbalance:.2f}x")
+          f" worst-round imbalance {layout.round_imbalance:.2f}x,"
+          f" ring_mode {ring_mode}")
 
     lda = NomadLDA(mesh=mesh, ring_axes=("worker",), layout=layout,
-                   alpha=alpha, beta=beta, sync_mode="stoken")
+                   alpha=alpha, beta=beta, sync_mode="stoken",
+                   ring_mode=ring_mode)
     arrays = lda.init_arrays(seed=0)
     print(f"initial ll: {lda.log_likelihood(arrays):.0f}")
     for it in range(10):

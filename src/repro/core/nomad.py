@@ -17,6 +17,15 @@ The paper's nomadic framework, mapped to SPMD TPU semantics (DESIGN.md §3):
   keeps ``NomadLayout.round_imbalance`` equal to the ``B = W`` packing
   (DESIGN.md §4).
 
+  Two rotation schedules (``ring_mode``): ``"barrier"`` sweeps the whole
+  queue then hops it in one ``ppermute``; ``"pipelined"`` forwards the
+  first ``half_queue_split(k)`` blocks as soon as their cells finish, so
+  that hop can overlap the second half's sweep — the paper's
+  communication-hides-behind-sampling property on a lock-step mesh.  Cell
+  order and s-token fold point are unchanged, so both schedules run the
+  **bit-identical** per-token chain (asserted across the whole
+  sync × inner × B matrix by ``launch/lda_matrix_check.py``).
+
 * **The s token** τ_s: the only globally shared state is ``s = n_t`` (size
   T).  Three synchronization modes:
 
@@ -154,6 +163,7 @@ def _cell_sweep_vectorized(tok_doc, tok_wrd, tok_valid, tok_bound, z_cell,
 
 def _queue_sweep_fused(tok_doc, tok_wrd, tok_valid, tok_bound, z_q,
                        n_td, n_wt_q, n_t, u, alpha, beta, beta_bar,
+                       cell_start: int = 0, num_cells: int | None = None,
                        interpret: bool = True):
     """Exact per-token chain like :func:`_cell_sweep`, but the worker's whole
     per-round block queue runs as ONE fused ``pallas_call``
@@ -163,21 +173,29 @@ def _queue_sweep_fused(tok_doc, tok_wrd, tok_valid, tok_bound, z_q,
     same chain as ``inner_mode="scan"`` over the same queue.
 
     tok_* / z_q / u: (k, L); n_td: (I,T); n_wt_q: (k,J,T); n_t: (T,).
+    ``cell_start``/``num_cells`` restrict the call to a sub-queue (the
+    pipelined ring's half-queues); returned ``z_q``/``n_wt_q`` then cover
+    only that range.
     """
     from repro.kernels.fused_sweep import fused_sweep_cells
     z_q, n_td, n_wt_q, n_t, _ = fused_sweep_cells(
         tok_doc, tok_wrd, tok_valid, tok_bound, z_q, u, n_td, n_wt_q, n_t,
-        alpha=alpha, beta=beta, beta_bar=beta_bar, interpret=interpret)
+        alpha=alpha, beta=beta, beta_bar=beta_bar,
+        cell_start=cell_start, num_cells=num_cells, interpret=interpret)
     return z_q, n_td, n_wt_q, n_t
 
 
 def _queue_sweep_cells(cell_fn, tok_doc, tok_wrd, tok_valid, tok_bound, z_q,
-                       n_td, n_wt_q, n_t, u, alpha, beta, beta_bar):
+                       n_td, n_wt_q, n_t, u, alpha, beta, beta_bar,
+                       cell_start: int = 0, num_cells: int | None = None):
     """Sweep a worker's k-cell queue with a per-cell function (``scan`` /
     ``vectorized`` inner modes): an inner ``lax.scan`` over the stacked
     cells, the exact chain carried through ``n_td``/``n_t``; each cell's
-    ``z`` row and word-topic block ride as scan xs/ys.  Same shapes as
-    :func:`_queue_sweep_fused`."""
+    ``z`` row and word-topic block ride as scan xs/ys.  Same shapes and
+    sub-queue convention as :func:`_queue_sweep_fused`."""
+    if num_cells is None:
+        num_cells = tok_doc.shape[0] - cell_start
+    sub = lambda a: a[cell_start:cell_start + num_cells]
 
     def cell_body(carry, xs):
         n_td, n_t = carry
@@ -189,7 +207,8 @@ def _queue_sweep_cells(cell_fn, tok_doc, tok_wrd, tok_valid, tok_bound, z_q,
 
     (n_td, n_t), (z_q, n_wt_q) = lax.scan(
         cell_body, (n_td, n_t),
-        (tok_doc, tok_wrd, tok_valid, tok_bound, z_q, n_wt_q, u))
+        (sub(tok_doc), sub(tok_wrd), sub(tok_valid), sub(tok_bound),
+         sub(z_q), sub(n_wt_q), sub(u)))
     return z_q, n_td, n_wt_q, n_t
 
 
@@ -199,7 +218,9 @@ def _queue_sweep_cells(cell_fn, tok_doc, tok_wrd, tok_valid, tok_bound, z_q,
 def nomad_sweep_fn(mesh: Mesh, ring_axes: Sequence[str], *,
                    B: int, T: int, alpha: float, beta: float,
                    beta_bar: float, sync_mode: str = "stoken",
-                   inner_mode: str = "scan", interpret: bool | None = None):
+                   inner_mode: str = "scan", ring_mode: str = "barrier",
+                   interpret: bool | None = None,
+                   collect_lag: bool = False):
     """Build the jittable distributed sweep for ``mesh``.
 
     Ring spans the product of ``ring_axes`` (e.g. ('worker',) or
@@ -217,7 +238,26 @@ def nomad_sweep_fn(mesh: Mesh, ring_axes: Sequence[str], *,
     "vectorized" = beyond-paper batched cell pass (see
     :func:`_cell_sweep_vectorized`).  ``interpret=None`` auto-selects the
     compiled Pallas path on TPU and the interpreter elsewhere.
+
+    ring_mode: "barrier" = sweep all k cells, then hop the whole queue —
+    one ``ppermute`` on the critical path per round.  "pipelined" = sweep
+    the first half-queue (``half_queue_split(k)`` cells), issue its hop
+    immediately, sweep the second half while that collective is in flight,
+    then hop the rest together with the s token (DESIGN.md §4).  The cell
+    order and the s-token fold point are identical in both modes, so the
+    per-token chain is **bit-identical** — only the moment the first
+    half's ``ppermute`` is *issued* moves.  With ``k < 2`` the pipelined
+    schedule degenerates to the barrier one.
+
+    collect_lag: diagnostic mode — the sweep additionally returns a
+    ``(W_rounds, W, 2, T)`` int32 array holding, per round and worker,
+    ``n_t_local`` after the round's s synchronization and the cumulative
+    ``delta_mine``.  Adds no collectives (the exact ``n_t`` is
+    reconstructed offline by summing deltas); used by
+    ``launch/stoken_lag_check.py`` to verify the staleness bound.
     """
+    from repro.data.sharding import half_queue_split
+
     sizes = tuple(int(mesh.shape[ax]) for ax in ring_axes)
     W = int(np.prod(sizes))
     if B % W != 0 or B < W:
@@ -229,6 +269,8 @@ def nomad_sweep_fn(mesh: Mesh, ring_axes: Sequence[str], *,
         raise ValueError(sync_mode)
     if inner_mode not in ("scan", "fused", "vectorized"):
         raise ValueError(inner_mode)
+    if ring_mode not in ("barrier", "pipelined"):
+        raise ValueError(ring_mode)
     if interpret is None:
         from repro.kernels.fused_sweep import default_interpret
         interpret = default_interpret()
@@ -238,6 +280,7 @@ def nomad_sweep_fn(mesh: Mesh, ring_axes: Sequence[str], *,
         cell_fn = {"scan": _cell_sweep,
                    "vectorized": _cell_sweep_vectorized}[inner_mode]
         queue_fn = functools.partial(_queue_sweep_cells, cell_fn)
+    k0 = half_queue_split(k) if ring_mode == "pipelined" else 0
 
     spec_tok = P(tuple(ring_axes), None, None)
     spec_td = P(tuple(ring_axes), None, None)
@@ -261,17 +304,36 @@ def nomad_sweep_fn(mesh: Mesh, ring_axes: Sequence[str], *,
             c = (w_flat + r) % W          # chunk id this queue corresponds to
             b0 = c * k                    # its first global block index
             queue = lambda a: lax.dynamic_slice_in_dim(a[0], b0, k, axis=0)
+            tq = (queue(tok_doc), queue(tok_wrd), queue(tok_valid),
+                  queue(tok_bound))
+            z_q_in = queue(z)
             u = jax.random.uniform(jax.random.fold_in(key, r), (k, L))
             n_t_before = n_t_local
-            z_q, n_td0, n_wt_q, n_t_local = queue_fn(
-                queue(tok_doc), queue(tok_wrd), queue(tok_valid),
-                queue(tok_bound), queue(z), n_td[0], n_wt_q, n_t_local,
-                u, alpha, beta, beta_bar)
+            if k0 > 0:
+                # Pipelined: sweep the first half-queue, hop its blocks
+                # right away — nothing consumes the shifted value until the
+                # next round, so the collective can run concurrently with
+                # the second half's sweep (one extra ppermute per round,
+                # but off the critical path).
+                z_h0, n_td0, nwt_h0, n_t_local = queue_fn(
+                    *tq, z_q_in, n_td[0], n_wt_q, n_t_local, u,
+                    alpha, beta, beta_bar, cell_start=0, num_cells=k0)
+                nwt_h0 = _ring_shift_down(nwt_h0, ring_axes, sizes)
+                z_h1, n_td0, nwt_h1, n_t_local = queue_fn(
+                    *tq, z_q_in, n_td0, n_wt_q, n_t_local, u,
+                    alpha, beta, beta_bar, cell_start=k0, num_cells=k - k0)
+                z_q = jnp.concatenate([z_h0, z_h1], axis=0)
+            else:
+                z_q, n_td0, nwt_swept, n_t_local = queue_fn(
+                    *tq, z_q_in, n_td[0], n_wt_q, n_t_local, u,
+                    alpha, beta, beta_bar)
             n_td = n_td0[None]
             z = lax.dynamic_update_slice_in_dim(z[0], z_q, b0, axis=0)[None]
             delta_mine = delta_mine + (n_t_local - n_t_before)
 
             # --- s synchronization ---------------------------------------
+            # Identical fold point in both ring modes (after the whole
+            # k-cell round) — this is what keeps the chains bit-identical.
             if sync_mode == "allreduce":
                 n_t_local = n_t_start + lax.psum(delta_mine, tuple(ring_axes))
             elif sync_mode == "stoken":
@@ -283,27 +345,39 @@ def nomad_sweep_fn(mesh: Mesh, ring_axes: Sequence[str], *,
                 delta_folded = jnp.where(has_token, delta_mine, delta_folded)
             # "stale": nothing until sweep end.
 
-            # --- rotate nomadic payloads ----------------------------------
-            n_wt_q, s_tok = _ring_shift_down((n_wt_q, s_tok),
-                                             ring_axes, sizes)
+            # --- rotate the remaining nomadic payloads --------------------
+            if k0 > 0:
+                nwt_h1, s_tok = _ring_shift_down((nwt_h1, s_tok),
+                                                 ring_axes, sizes)
+                n_wt_q = jnp.concatenate([nwt_h0, nwt_h1], axis=0)
+            else:
+                n_wt_q, s_tok = _ring_shift_down((nwt_swept, s_tok),
+                                                 ring_axes, sizes)
+            ys = (jnp.stack([n_t_local, delta_mine])[None]
+                  if collect_lag else None)
             return (z, n_td, n_wt_q, n_t_local, delta_mine, s_tok,
-                    delta_folded), None
+                    delta_folded), ys
 
         carry0 = (z, n_td, n_wt_q, n_t, jnp.zeros_like(n_t), s_tok,
                   delta_folded)
-        (z, n_td, n_wt_q, _, delta_mine, _, _), _ = lax.scan(
+        (z, n_td, n_wt_q, _, delta_mine, _, _), lag = lax.scan(
             round_body, carry0, jnp.arange(W, dtype=jnp.int32))
 
         # W shifts = one full loop: every queue is back home, in block order.
         # exact sweep-end resync (additivity of s)
         n_t_out = n_t_start + lax.psum(delta_mine, tuple(ring_axes))
+        if collect_lag:
+            return z, n_td, n_wt_q, n_t_out, lag
         return z, n_td, n_wt_q, n_t_out
 
+    out_specs = (spec_tok, spec_td, spec_wt, spec_rep)
+    if collect_lag:
+        out_specs += (P(None, tuple(ring_axes), None, None),)
     fn = shard_map(
         worker_fn, mesh=mesh,
         in_specs=(spec_tok, spec_tok, spec_tok, spec_tok,
                   spec_tok, spec_td, spec_wt, spec_rep, spec_rep),
-        out_specs=(spec_tok, spec_td, spec_wt, spec_rep),
+        out_specs=out_specs,
         check_vma=False)
     return jax.jit(fn)
 
@@ -319,6 +393,9 @@ class NomadLDA:
     carries a ``k = B/W``-block queue around the ring (paper §4's
     blocks ≫ workers setup).  ``interpret=None`` (the default) compiles the
     ``inner_mode="fused"`` Pallas path on TPU and interprets it elsewhere.
+    ``ring_mode="pipelined"`` overlaps each round's first half-queue hop
+    with the second half's sweep — bit-identical chain to ``"barrier"``
+    (see :func:`nomad_sweep_fn`).
     """
     mesh: Mesh
     ring_axes: tuple
@@ -327,6 +404,7 @@ class NomadLDA:
     beta: float
     sync_mode: str = "stoken"
     inner_mode: str = "scan"
+    ring_mode: str = "barrier"
     interpret: bool | None = None  # Pallas mode for inner_mode="fused"
 
     def __post_init__(self):
@@ -343,7 +421,7 @@ class NomadLDA:
             self.mesh, self.ring_axes, B=lay.B, T=lay.T,
             alpha=self.alpha, beta=self.beta, beta_bar=self.beta_bar,
             sync_mode=self.sync_mode, inner_mode=self.inner_mode,
-            interpret=self.interpret)
+            ring_mode=self.ring_mode, interpret=self.interpret)
         ring = tuple(self.ring_axes)
         self._sh_tok = NamedSharding(self.mesh, P(ring, None, None))
         self._sh_rep = NamedSharding(self.mesh, P())

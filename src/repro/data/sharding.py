@@ -29,7 +29,52 @@ import numpy as np
 from repro.data.corpus import Corpus
 
 __all__ = ["NomadLayout", "counts_from_layout", "lpt_assign",
-           "build_layout"]
+           "build_layout", "half_queue_split"]
+
+
+def half_queue_split(k: int) -> int:
+    """Split point ``k0`` of a ``k``-cell queue for the pipelined ring.
+
+    ``ring_mode="pipelined"`` (``core/nomad.py``) sweeps cells ``[0, k0)``,
+    forwards their blocks immediately, then sweeps ``[k0, k)`` while that
+    hop is in flight.  ``k0 = k // 2`` keeps the two half-queues
+    load-matched: within a ring chunk the ``k`` blocks are themselves
+    LPT-packed (:func:`build_layout`'s hierarchical split), so any
+    contiguous ``k // 2`` of them carry ≈ half the chunk's tokens and the
+    second half's sweep time can actually hide the first half's hop.
+    ``k < 2`` returns 0 — a single-cell queue has nothing to overlap and
+    the pipelined schedule degenerates to the barrier one.
+    """
+    return k // 2 if k >= 2 else 0
+
+
+def _order_bins_for_halves(bins: np.ndarray, weights: np.ndarray,
+                           kq: int, k0: int) -> np.ndarray:
+    """Renumber a chunk's ``kq`` LPT bins so the pipelined half-queues
+    ``[0, k0)`` and ``[k0, kq)`` are load-matched.
+
+    LPT gives near-equal bins but arbitrary ids; under power-law skew one
+    bin can hold most of a chunk's tokens, and if its id landed in the
+    wrong half the pipelined ring would have nothing to overlap.  Greedy
+    capacity-constrained partition (heaviest bin to the lighter half with
+    room) keeps ``|half0 − half1| ≤ max bin load`` — the best any
+    block-granular split can do.  Returns the remapped bin assignment.
+    """
+    loads = np.bincount(bins, weights=weights, minlength=kq)
+    h0, h1 = [], []
+    l0 = l1 = 0.0
+    for b in np.argsort(-loads, kind="stable"):
+        if len(h0) >= k0:
+            h1.append(b); l1 += loads[b]
+        elif len(h1) >= kq - k0:
+            h0.append(b); l0 += loads[b]
+        elif l0 <= l1:
+            h0.append(b); l0 += loads[b]
+        else:
+            h1.append(b); l1 += loads[b]
+    perm = np.empty(kq, np.int64)
+    perm[np.array(h0 + h1, np.int64)] = np.arange(kq)   # old bin → new id
+    return perm[bins].astype(bins.dtype)
 
 
 def lpt_assign(weights: np.ndarray, n_bins: int,
@@ -111,6 +156,39 @@ class NomadLayout:
                 worst = max(worst, active.max() / active.mean())
         return float(worst)
 
+    def half_balance_gaps(self) -> np.ndarray:
+        """(W, 2) per ring chunk: the global-load gap between the two
+        pipelined half-queues, and the chunk's heaviest block load — the
+        bound :func:`_order_bins_for_halves` guarantees (``gap ≤ max``).
+        The single statement of the half-balance invariant the tests
+        assert."""
+        k = self.k
+        k0 = half_queue_split(k)
+        block_loads = self.cell_sizes.sum(axis=0)           # (B,)
+        out = np.zeros((self.W, 2), np.int64)
+        for c in range(self.W):
+            q = block_loads[c * k:(c + 1) * k]
+            out[c] = (abs(int(q[:k0].sum()) - int(q[k0:].sum())),
+                      int(q.max()))
+        return out
+
+    def half_loads(self) -> np.ndarray:
+        """(W_rounds, W, 2) token loads of the two pipelined half-queues.
+
+        Entry ``[r, w]`` is ``(first-half, second-half)`` token counts of
+        the queue worker ``w`` sweeps in ring round ``r`` when split at
+        :func:`half_queue_split`.  With ``k < 2`` the first column is all
+        zero (degenerate split)."""
+        W, k = self.W, self.k
+        k0 = half_queue_split(k)
+        out = np.zeros((W, W, 2), np.int64)
+        for r in range(W):
+            for w in range(W):
+                c = (w + r) % W
+                q = self.cell_sizes[w, c * k:(c + 1) * k]
+                out[r, w] = (q[:k0].sum(), q[k0:].sum())
+        return out
+
 
 def counts_from_layout(lay: NomadLayout, z: np.ndarray, T: int):
     """Rebuild compact global ``(n_td, n_wt, n_t)`` from the padded
@@ -153,10 +231,16 @@ def build_layout(corpus: Corpus, *, n_workers: int, T: int,
         word_assign = chunk_assign
     else:
         kq = B // W
+        k0 = half_queue_split(kq)
         word_assign = np.zeros_like(chunk_assign)
         for c in range(W):
             ids = np.nonzero(chunk_assign == c)[0]
-            word_assign[ids] = c * kq + lpt_assign(freqs[ids], kq, balance)
+            bins = lpt_assign(freqs[ids], kq, balance)
+            if balance and k0 > 0:
+                # order blocks within the chunk so the pipelined ring's
+                # half-queues [0, k0) / [k0, kq) are load-matched
+                bins = _order_bins_for_halves(bins, freqs[ids], kq, k0)
+            word_assign[ids] = c * kq + bins
 
     # Local doc / word index maps.
     I_counts = np.bincount(doc_assign, minlength=W)

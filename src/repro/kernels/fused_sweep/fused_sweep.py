@@ -33,7 +33,11 @@ Two entry points share the tile body:
   only one ``(J, T)`` block is VMEM-resident at a time.  Cross-cell chain
   exactness needs no special handling: a cell's first valid token is always
   a word boundary (``NomadLayout.tok_bound``), which rebuilds the tree from
-  the incoming block's q vector.
+  the incoming block's q vector.  The same property makes the grid freely
+  *splittable*: a call over a sub-queue of ``m ≤ k`` cells (grid
+  ``(m, tiles)``, see ``ops.fused_sweep_cells``'s ``cell_start`` /
+  ``num_cells``) chains bit-identically with the calls for the remaining
+  cells — the pipelined nomad ring sweeps half-queues this way.
 
 Masking follows the nomad cell-sweep convention: ``valid=False`` tokens are
 no-ops (count deltas of 0, leaf rewritten to itself, ``z`` kept), which is

@@ -79,6 +79,7 @@ def fused_sweep_cells(tok_doc: jax.Array, tok_wrd: jax.Array,
                       z: jax.Array, u: jax.Array,
                       n_td: jax.Array, n_wt: jax.Array, n_t: jax.Array, *,
                       alpha: float, beta: float, beta_bar: float,
+                      cell_start: int = 0, num_cells: int | None = None,
                       n_blk: int = N_BLK, interpret: bool = True):
     """Fused F+LDA sweep over a batch of ``k`` padded cells in ONE kernel.
 
@@ -89,16 +90,37 @@ def fused_sweep_cells(tok_doc: jax.Array, tok_wrd: jax.Array,
     cell, and ``n_td``/``n_t``/the F+tree carry across cells, so the result
     is chain-identical to sweeping the cells one after another.
 
+    ``cell_start``/``num_cells`` (static) restrict the call to the
+    sub-queue ``[cell_start, cell_start + num_cells)``: the kernel grid
+    shrinks to ``(num_cells, tiles)`` and the returned ``z'``/``n_wt'``
+    cover only that range (leading dim ``num_cells``).  The pipelined ring
+    (``core/nomad.py``, ``ring_mode="pipelined"``) uses this to sweep a
+    half-queue per call; because every cell's first valid token is a word
+    boundary (which rebuilds the F+tree from the incoming block), splitting
+    a queue across calls is chain-identical to one whole-queue call.
+
     Pads ``L`` to a multiple of ``n_blk`` with masked no-op tokens and
     unpads.  Returns ``(z', n_td', n_wt', n_t', F)``.
     """
     I, T = n_td.shape
-    k, J = n_wt.shape[0], n_wt.shape[1]
+    k_total, J = n_wt.shape[0], n_wt.shape[1]
     if not _is_pow2(T):
         raise ValueError(f"fused sweep needs a power-of-two T, got {T}")
-    if tok_doc.shape[0] != k:
+    if tok_doc.shape[0] != k_total:
         raise ValueError(f"queue length mismatch: tokens have "
-                         f"{tok_doc.shape[0]} cells, n_wt has {k} blocks")
+                         f"{tok_doc.shape[0]} cells, n_wt has {k_total} "
+                         f"blocks")
+    cell_start = int(cell_start)
+    k = k_total - cell_start if num_cells is None else int(num_cells)
+    if cell_start < 0 or k < 0 or cell_start + k > k_total:
+        raise ValueError(
+            f"cell range [{cell_start}, {cell_start + k}) outside the "
+            f"{k_total}-cell queue")
+    if (cell_start, k) != (0, k_total):
+        sub = lambda a: a[cell_start:cell_start + k]
+        tok_doc, tok_wrd = sub(tok_doc), sub(tok_wrd)
+        tok_valid, tok_bound = sub(tok_valid), sub(tok_bound)
+        z, u, n_wt = sub(z), sub(u), sub(n_wt)
     L = tok_doc.shape[1]
     if k == 0 or L == 0:
         return z, n_td, n_wt, n_t, jnp.zeros((2 * T,), jnp.float32)

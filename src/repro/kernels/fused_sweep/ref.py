@@ -81,18 +81,27 @@ def fused_sweep_ref(tok_doc, tok_wrd, tok_valid, tok_bound, z, u,
 
 
 def fused_sweep_cells_ref(tok_doc, tok_wrd, tok_valid, tok_bound, z, u,
-                          n_td, n_wt, n_t, *, alpha, beta, beta_bar):
+                          n_td, n_wt, n_t, *, alpha, beta, beta_bar,
+                          cell_start=0, num_cells=None):
     """Oracle for the cell-batch kernel: the k cells swept one after another
     with ``n_td``/``n_t``/``F`` carried through — same signature/returns as
-    ``fused_sweep_cells_pallas`` (tok_* (k, L); n_wt (k, J, T))."""
-    k = tok_doc.shape[0]
+    ``fused_sweep_cells_pallas`` (tok_* (k, L); n_wt (k, J, T)).
+
+    ``cell_start``/``num_cells`` mirror ``ops.fused_sweep_cells``'s
+    sub-queue restriction: only cells ``[cell_start, cell_start+num_cells)``
+    are swept and returned."""
+    k_total = tok_doc.shape[0]
+    if num_cells is None:
+        num_cells = k_total - cell_start
     z_rows, nwt_rows = [], []
     F = jnp.zeros((2 * n_t.shape[-1],), F32)
-    for c in range(k):
+    for c in range(cell_start, cell_start + num_cells):
         z_c, n_td, nwt_c, n_t, F = fused_sweep_ref(
             tok_doc[c], tok_wrd[c], tok_valid[c], tok_bound[c], z[c], u[c],
             n_td, n_wt[c], n_t, alpha=alpha, beta=beta, beta_bar=beta_bar,
             F0=F)
         z_rows.append(z_c)
         nwt_rows.append(nwt_c)
+    if not z_rows:
+        return (z[:0], n_td, n_wt[:0], n_t, F)
     return (jnp.stack(z_rows), n_td, jnp.stack(nwt_rows), n_t, F)

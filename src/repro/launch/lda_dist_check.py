@@ -1,7 +1,7 @@
 """Multi-device Nomad LDA correctness check (run as a subprocess).
 
 Usage:  python -m repro.launch.lda_dist_check \
-            [n_devices] [sync_mode] [pods] [inner_mode] [n_blocks]
+            [n_devices] [sync_mode] [pods] [inner_mode] [n_blocks] [ring_mode]
 
 Sets XLA_FLAGS *before* importing jax (the only supported way to fake a
 multi-device CPU platform), runs sweeps of Nomad F+LDA on a synthetic
@@ -19,6 +19,7 @@ def main() -> None:
     pods = int(sys.argv[3]) if len(sys.argv) > 3 else 1
     inner_mode = sys.argv[4] if len(sys.argv) > 4 else "scan"
     n_blocks = int(sys.argv[5]) if len(sys.argv) > 5 else n_dev
+    ring_mode = sys.argv[6] if len(sys.argv) > 6 else "barrier"
 
     os.environ["XLA_FLAGS"] = (
         f"--xla_force_host_platform_device_count={n_dev} "
@@ -51,7 +52,7 @@ def main() -> None:
                           n_blocks=n_blocks)
     lda = NomadLDA(mesh=mesh, ring_axes=ring_axes, layout=layout,
                    alpha=alpha, beta=beta, sync_mode=sync_mode,
-                   inner_mode=inner_mode)
+                   inner_mode=inner_mode, ring_mode=ring_mode)
     arrays = lda.init_arrays(seed=0)
 
     n_sweeps = 4
@@ -83,6 +84,7 @@ def main() -> None:
         "n_devices": n_dev,
         "sync_mode": sync_mode,
         "inner_mode": inner_mode,
+        "ring_mode": ring_mode,
         "pods": pods,
         "n_blocks": layout.B,
         "blocks_per_worker": layout.k,

@@ -1,0 +1,112 @@
+"""Direct unit check of the flat-ring payload hop (run as a subprocess).
+
+Usage:  python -m repro.launch.ring_shift_check [n_devices] [pods]
+
+``core/nomad.py::_ring_shift_down`` is the one collective the nomad ring is
+built on; until now it was only covered indirectly through whole sweeps.
+This check exercises it directly on a faked multi-device mesh — flat
+(``('worker',)``) or two-axis (``('pod', 'worker')``) — and verifies the
+ring semantics payload-by-payload:
+
+* **one shift** moves the value at flat position ``i+1 (mod W)`` to
+  position ``i`` (blocks travel toward lower worker index);  on the
+  two-axis mesh the wrap-around element of each pod must cross the pod
+  axis (worker ``n_inner−1`` of pod ``p`` receives from worker 0 of pod
+  ``p+1``), which is exactly the boundary-fix branch of the helper;
+* **W shifts** restore the identity — one full loop of the ring;
+* a **pytree payload** (array + vector pair, like ``(n_wt_q, s_tok)``)
+  moves as one unit.
+
+Prints one JSON report with per-check mismatch counts.
+"""
+import json
+import os
+import sys
+
+
+def main() -> None:
+    n_dev = int(sys.argv[1]) if len(sys.argv) > 1 else 8
+    pods = int(sys.argv[2]) if len(sys.argv) > 2 else 1
+
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={n_dev} "
+        + os.environ.get("XLA_FLAGS", ""))
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+    from repro.core.nomad import _flat_index, _ring_shift_down
+
+    assert len(jax.devices()) == n_dev, jax.devices()
+
+    if pods > 1:
+        mesh = jax.make_mesh((pods, n_dev // pods), ("pod", "worker"))
+        ring_axes = ("pod", "worker")
+    else:
+        mesh = jax.make_mesh((n_dev,), ("worker",))
+        ring_axes = ("worker",)
+    sizes = tuple(int(mesh.shape[ax]) for ax in ring_axes)
+    W = n_dev
+    D = 4                                   # payload vector length
+
+    def worker_fn(_x):
+        # Payload identifies its home position: (pos, pos·10 + lane).
+        pos = _flat_index(ring_axes, sizes)
+        scalar = jnp.full((1,), pos, jnp.int32)
+        vec = (pos * 10 + jnp.arange(D, dtype=jnp.int32))[None]
+
+        one_s, one_v = _ring_shift_down((scalar, vec), ring_axes, sizes)
+
+        full_s, full_v = scalar, vec
+        for _ in range(W):
+            full_s, full_v = _ring_shift_down((full_s, full_v),
+                                              ring_axes, sizes)
+        return one_s, one_v, full_s, full_v
+
+    spec = P(tuple(ring_axes))
+    spec_v = P(tuple(ring_axes), None)
+    fn = shard_map(
+        worker_fn, mesh=mesh,
+        in_specs=(spec,),
+        out_specs=(spec, spec_v, spec, spec_v),
+        check_vma=False)
+    one_s, one_v, full_s, full_v = jax.jit(fn)(
+        jnp.zeros((n_dev,), jnp.int32))
+
+    one_s, one_v = np.asarray(one_s), np.asarray(one_v)
+    full_s, full_v = np.asarray(full_s), np.asarray(full_v)
+    pos = np.arange(W)
+    want_s = (pos + 1) % W                      # i receives from i+1
+    want_v = want_s[:, None] * 10 + np.arange(D)[None, :]
+
+    # Wrap-around elements that must have crossed the pod axis: the last
+    # worker of each pod receives from worker 0 of the *next* pod.
+    if pods > 1:
+        n_inner = sizes[-1]
+        boundary = pos[pos % n_inner == n_inner - 1]
+        cross_pod_ok = bool(
+            (one_s[boundary] == (boundary + 1) % W).all()
+            and (boundary // n_inner != ((boundary + 1) % W) // n_inner
+                 ).all())
+    else:
+        cross_pod_ok = True                     # no pod axis to cross
+
+    report = {
+        "n_devices": n_dev,
+        "pods": pods,
+        "ring_axes": list(ring_axes),
+        "one_shift_mismatch": int((one_s != want_s).sum()),
+        "one_shift_vec_mismatch": int((one_v != want_v).sum()),
+        "identity_mismatch": int((full_s != pos).sum()),
+        "identity_vec_mismatch": int(
+            (full_v != pos[:, None] * 10 + np.arange(D)[None, :]).sum()),
+        "cross_pod_ok": cross_pod_ok,
+    }
+    print(json.dumps(report))
+
+
+if __name__ == "__main__":
+    main()

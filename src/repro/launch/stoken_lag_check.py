@@ -1,0 +1,162 @@
+"""s-token staleness check (run as a subprocess).
+
+Usage:  python -m repro.launch.stoken_lag_check [n_devices] [inner_mode]
+                                                [n_blocks]
+
+``sync_mode="stoken"`` lets every worker sample against a **stale** working
+copy of the global topic counts — the paper's Alg. 4, whose correctness
+argument is that the staleness is *bounded*: a worker's copy is refreshed
+every ``W`` rounds, and the information it carries about any other worker
+is at most ``W−1`` ring rounds (= ``(W−1)·k`` cell sweeps) old at the
+moment the token is received (DESIGN.md §4).
+
+This check instruments one sweep with ``nomad_sweep_fn(collect_lag=True)``
+— which records, per round and worker, ``n_t_local`` after the round's
+synchronization and the cumulative own-delta ``delta_mine``, adding **no**
+collectives — and verifies, in numpy, for BOTH ring modes:
+
+* **fold schedule, exactly.**  The s token visits workers in ring order
+  (holder of round ``ρ`` is ``(−ρ) mod W``), so worker ``w``'s copy at the
+  end of round ``r`` must equal
+  ``n_t0 + delta_mine[r, w] + Σ_{w'≠w} delta_mine[ρ'', w']`` with
+  ``ρ'' = r_h − ((w'−w) mod W)`` and ``r_h`` the worker's last hold round
+  (terms with ``ρ'' < 0`` drop — the token hadn't reached ``w'`` yet).
+  Asserted bit-exactly; this pins the fold point of both ring schedules.
+* **staleness bound.**  The L1 gap between the copy and the exact counts
+  (``n_t0 + Σ_w delta_mine[r, w]``) is at most twice the number of tokens
+  in the cell sweeps the copy has not seen — computed exactly from the
+  deterministic schedule and ``layout.cell_sizes``.  Per source worker the
+  unseen window is ≤ ``W−1`` rounds (``(W−1)·k`` cells) at fold rounds,
+  and ≤ ``2(W−1)`` rounds between folds (up to ``W−1`` rounds of token
+  age at receipt + up to ``W−1`` rounds holding the copy).
+* **ring-mode equivalence.**  The pipelined ring's lag trace is
+  bit-identical to the barrier ring's — pipelining moves only when the
+  first half-queue's hop is issued, not what any worker's copy contains.
+
+Prints one JSON report with per-check booleans and summary magnitudes.
+"""
+import json
+import os
+import sys
+
+
+def main() -> None:
+    n_dev = int(sys.argv[1]) if len(sys.argv) > 1 else 8
+    inner_mode = sys.argv[2] if len(sys.argv) > 2 else "scan"
+    n_blocks = int(sys.argv[3]) if len(sys.argv) > 3 else 2 * n_dev
+
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={n_dev} "
+        + os.environ.get("XLA_FLAGS", ""))
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.nomad import NomadLDA, nomad_sweep_fn
+    from repro.data import synthetic
+    from repro.data.sharding import build_layout
+
+    assert len(jax.devices()) == n_dev, jax.devices()
+
+    T = 16
+    W = n_dev
+    alpha, beta = 50.0 / T, 0.01
+    corpus, _, _ = synthetic.make_corpus(
+        num_docs=120, vocab_size=256, num_topics=T, mean_doc_len=30.0, seed=3)
+    mesh = jax.make_mesh((n_dev,), ("worker",))
+    layout = build_layout(corpus, n_workers=n_dev, T=T, n_blocks=n_blocks)
+    k = layout.k
+
+    lda = NomadLDA(mesh=mesh, ring_axes=("worker",), layout=layout,
+                   alpha=alpha, beta=beta, sync_mode="stoken",
+                   inner_mode=inner_mode)
+    arrays = lda.init_arrays(seed=0)
+    n_t0 = np.asarray(arrays["n_t"]).astype(np.int64)
+
+    diags = {}
+    for ring_mode in ("barrier", "pipelined"):
+        sweep = nomad_sweep_fn(
+            mesh, ("worker",), B=layout.B, T=T, alpha=alpha, beta=beta,
+            beta_bar=lda.beta_bar, sync_mode="stoken",
+            inner_mode=inner_mode, ring_mode=ring_mode, collect_lag=True)
+        *_, diag = sweep(
+            arrays["tok_doc"], arrays["tok_wrd"], arrays["tok_valid"],
+            arrays["tok_bound"], arrays["z"], arrays["n_td"],
+            arrays["n_wt"], arrays["n_t"], jnp.int32(0))
+        diags[ring_mode] = np.asarray(diag).astype(np.int64)
+
+    ring_modes_identical = bool(
+        (diags["barrier"] == diags["pipelined"]).all())
+
+    diag = diags["barrier"]               # (W_rounds, W, 2, T)
+    local = diag[:, :, 0]                 # n_t_local after round sync
+    delta = diag[:, :, 1]                 # cumulative delta_mine
+    exact = n_t0[None] + delta.sum(axis=1)            # (W_rounds, T)
+
+    def round_tokens(w, rho):
+        c = (w + rho) % W
+        return int(layout.cell_sizes[w, c * k:(c + 1) * k].sum())
+
+    fold_schedule_exact = True
+    lag_within_bound = True
+    lag_max = 0
+    bound_max = 0
+    lag_nonzero = False
+    fold_window_max = 0                   # unseen rounds/source at folds
+    window_max = 0                        # unseen rounds/source, any round
+    for r in range(W):
+        for w in range(W):
+            r_h0 = (-w) % W               # worker w's first hold round
+            held = r >= r_h0
+            r_h = r_h0 + ((r - r_h0) // W) * W if held else None
+            expected = n_t0 + delta[r, w]
+            missing_tokens = 0
+            for w2 in range(W):
+                if w2 == w:
+                    continue
+                d = (w2 - w) % W
+                rho = (r_h - d) if held else -1
+                if rho >= 0:
+                    expected = expected + delta[rho, w2]
+                unseen_lo = max(rho + 1, 0)
+                window = r - unseen_lo + 1
+                window_max = max(window_max, window)
+                if held and r == r_h:
+                    fold_window_max = max(fold_window_max, window)
+                missing_tokens += sum(
+                    round_tokens(w2, rho2) for rho2 in range(unseen_lo, r + 1))
+            if (local[r, w] != expected).any():
+                fold_schedule_exact = False
+            lag = int(np.abs(local[r, w] - exact[r]).sum())
+            bound = 2 * missing_tokens    # one token move: ±1 at two coords
+            lag_max = max(lag_max, lag)
+            bound_max = max(bound_max, bound)
+            lag_nonzero = lag_nonzero or lag > 0
+            if lag > bound:
+                lag_within_bound = False
+
+    report = {
+        "n_devices": n_dev,
+        "inner_mode": inner_mode,
+        "n_blocks": layout.B,
+        "k": k,
+        "ring_modes_identical": ring_modes_identical,
+        "fold_schedule_exact": fold_schedule_exact,
+        "lag_within_bound": lag_within_bound,
+        "lag_nonzero": lag_nonzero,
+        "lag_max_l1": lag_max,
+        "bound_max_l1": bound_max,
+        # unseen-window sizes, in rounds per source worker (k cells each):
+        "fold_window_rounds_max": fold_window_max,
+        "fold_window_rounds_bound": W - 1,        # the documented bound
+        "window_rounds_max": window_max,
+        "window_rounds_bound": 2 * (W - 1),
+        "documented_bound_ok": fold_window_max <= W - 1
+                               and window_max <= 2 * (W - 1),
+    }
+    print(json.dumps(report))
+
+
+if __name__ == "__main__":
+    main()

@@ -231,6 +231,53 @@ class TestCellBatchKernel:
         for a, b in zip(base, tiled):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
+    @pytest.mark.parametrize("split", [1, 2, 3])
+    def test_sub_queue_calls_chain_like_whole_queue(self, split):
+        """cell_start/num_cells (the pipelined ring's half-queues): sweeping
+        [0, split) then [split, k) in two calls must reproduce the whole-
+        queue call bit-for-bit — the boundary rebuild makes the split free."""
+        from repro.kernels.fused_sweep import fused_sweep_cells
+        T = 16
+        args = self._queue_setup(T=T, B=4)
+        kw = dict(alpha=50.0 / T, beta=0.01, beta_bar=0.01 * 60)
+        whole = fused_sweep_cells(*args, **kw)
+
+        tok_doc, tok_wrd, tok_valid, tok_bound, z, u, n_td, n_wt, n_t = args
+        k = tok_doc.shape[0]
+        z0, n_td0, nwt0, n_t0, _ = fused_sweep_cells(
+            *args, cell_start=0, num_cells=split, **kw)
+        assert z0.shape[0] == split and nwt0.shape[0] == split
+        z1, n_td1, nwt1, n_t1, _ = fused_sweep_cells(
+            tok_doc, tok_wrd, tok_valid, tok_bound, z, u,
+            n_td0, n_wt, n_t0, cell_start=split, num_cells=k - split, **kw)
+        got = (jnp.concatenate([z0, z1]), n_td1,
+               jnp.concatenate([nwt0, nwt1]), n_t1)
+        for a, b in zip(got, whole[:4]):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_sub_queue_matches_ref_oracle(self):
+        from repro.kernels.fused_sweep import fused_sweep_cells
+        from repro.kernels.fused_sweep.ref import fused_sweep_cells_ref
+        T = 16
+        args = self._queue_setup(T=T, B=4, seed=17)
+        kw = dict(alpha=50.0 / T, beta=0.01, beta_bar=0.01 * 60,
+                  cell_start=1, num_cells=2)
+        got = fused_sweep_cells(*args, **kw)
+        ref = fused_sweep_cells_ref(*args, **kw)
+        assert got[0].shape[0] == 2
+        for a, b in zip(got, ref):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_bad_cell_range_rejected(self):
+        from repro.kernels.fused_sweep import fused_sweep_cells
+        T = 16
+        args = self._queue_setup(T=T, B=4)
+        kw = dict(alpha=50.0 / T, beta=0.01, beta_bar=0.01 * 60)
+        for cell_start, num_cells in ((-1, 2), (3, 2), (0, 5)):
+            with pytest.raises(ValueError, match="cell range"):
+                fused_sweep_cells(*args, cell_start=cell_start,
+                                  num_cells=num_cells, **kw)
+
     def test_queue_length_mismatch_rejected(self):
         from repro.kernels.fused_sweep import fused_sweep_cells
         T = 8

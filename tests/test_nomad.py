@@ -21,17 +21,22 @@ from repro.data.sharding import build_layout, lpt_assign
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def _run_check(n_dev, sync_mode, pods=1, inner_mode="scan", n_blocks=None):
+def _run_module(module, *args):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(REPO, "src")
     env.pop("XLA_FLAGS", None)
     out = subprocess.run(
-        [sys.executable, "-m", "repro.launch.lda_dist_check",
-         str(n_dev), sync_mode, str(pods), inner_mode,
-         str(n_dev if n_blocks is None else n_blocks)],
+        [sys.executable, "-m", module, *map(str, args)],
         capture_output=True, text=True, env=env, timeout=900)
     assert out.returncode == 0, out.stderr[-3000:]
     return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def _run_check(n_dev, sync_mode, pods=1, inner_mode="scan", n_blocks=None,
+               ring_mode="barrier"):
+    return _run_module(
+        "repro.launch.lda_dist_check", n_dev, sync_mode, pods, inner_mode,
+        n_dev if n_blocks is None else n_blocks, ring_mode)
 
 
 class TestLayout:
@@ -99,6 +104,40 @@ class TestLayout:
             with pytest.raises(ValueError, match="multiple"):
                 build_layout(corpus, n_workers=4, T=8, n_blocks=bad)
 
+    def test_half_queue_split_points(self):
+        from repro.data.sharding import half_queue_split
+        assert half_queue_split(0) == 0
+        assert half_queue_split(1) == 0          # degenerate: no overlap
+        for k in range(2, 10):
+            k0 = half_queue_split(k)
+            assert 0 < k0 < k and k0 == k // 2
+
+    def test_half_loads_balanced_on_zipf(self):
+        """The pipelined split must produce load-matched half-queues even
+        under power-law word skew: within each chunk the blocks are ordered
+        (``_order_bins_for_halves``) so the halves differ by at most one
+        block's load — the best any block-granular split can do."""
+        from repro.data.corpus import Corpus
+        rng = np.random.default_rng(11)
+        doc_ids = np.repeat(np.arange(200), 12)
+        word_ids = np.minimum(rng.zipf(1.3, size=doc_ids.shape[0]), 500) - 1
+        corpus = Corpus(doc_ids=doc_ids.astype(np.int32),
+                        word_ids=word_ids.astype(np.int32),
+                        num_docs=200, num_words=500)
+        lay = build_layout(corpus, n_workers=4, T=8, n_blocks=16)  # k = 4
+        halves = lay.half_loads()                # (W_rounds, W, 2)
+        W, k = lay.W, lay.k
+        # the two halves together are exactly the round loads
+        for r in range(W):
+            for w in range(W):
+                c = (w + r) % W
+                assert halves[r, w].sum() == \
+                    lay.cell_sizes[w, c * k:(c + 1) * k].sum()
+        # at the granularity the split is enforced (global block loads),
+        # the halves differ by at most the heaviest block of the chunk
+        gaps = lay.half_balance_gaps()
+        assert (gaps[:, 0] <= gaps[:, 1]).all(), gaps
+
     def test_boundaries_mark_distinct_words_per_cell(self):
         corpus, _, _ = synthetic.make_corpus(
             num_docs=30, vocab_size=64, num_topics=8, mean_doc_len=15.0,
@@ -116,10 +155,13 @@ class TestSingleDeviceRing:
     """W=1: the nomad machinery must reduce to serial F+LDA semantics,
     for any queue length k = B (the whole ring is one worker)."""
 
-    @pytest.mark.parametrize("n_blocks,inner_mode", [
-        (1, "scan"), (4, "scan"), (4, "fused"), (4, "vectorized"),
+    @pytest.mark.parametrize("n_blocks,inner_mode,ring_mode", [
+        (1, "scan", "barrier"), (4, "scan", "barrier"),
+        (4, "fused", "barrier"), (4, "vectorized", "barrier"),
+        (1, "scan", "pipelined"), (4, "scan", "pipelined"),
+        (4, "fused", "pipelined"),
     ])
-    def test_invariants_and_ll(self, n_blocks, inner_mode):
+    def test_invariants_and_ll(self, n_blocks, inner_mode, ring_mode):
         T = 8
         corpus, _, _ = synthetic.make_corpus(
             num_docs=60, vocab_size=128, num_topics=T, mean_doc_len=25.0,
@@ -127,7 +169,8 @@ class TestSingleDeviceRing:
         mesh = jax.make_mesh((1,), ("worker",))
         lay = build_layout(corpus, n_workers=1, T=T, n_blocks=n_blocks)
         lda = NomadLDA(mesh=mesh, ring_axes=("worker",), layout=lay,
-                       alpha=50.0 / T, beta=0.01, inner_mode=inner_mode)
+                       alpha=50.0 / T, beta=0.01, inner_mode=inner_mode,
+                       ring_mode=ring_mode)
         arrays = lda.init_arrays(seed=0)
         ll0 = lda.log_likelihood(arrays)
         for it in range(3):
@@ -161,6 +204,31 @@ class TestSingleDeviceRing:
             per_word[B] = n_wt.sum(1)
         np.testing.assert_array_equal(per_word[1], per_word[4])
 
+    @pytest.mark.parametrize("inner_mode", ["scan", "fused", "vectorized"])
+    def test_pipelined_is_bit_identical_to_barrier(self, inner_mode):
+        """The tentpole invariant, in-process: the pipelined schedule only
+        moves when the first half-queue's hop is issued — the per-token
+        chain (z, all count tables) must be bit-equal to the barrier ring."""
+        T = 8
+        corpus, _, _ = synthetic.make_corpus(
+            num_docs=40, vocab_size=96, num_topics=T, mean_doc_len=15.0,
+            seed=12)
+        mesh = jax.make_mesh((1,), ("worker",))
+        lay = build_layout(corpus, n_workers=1, T=T, n_blocks=4)
+        res = {}
+        for ring_mode in ("barrier", "pipelined"):
+            lda = NomadLDA(mesh=mesh, ring_axes=("worker",), layout=lay,
+                           alpha=50.0 / T, beta=0.01, inner_mode=inner_mode,
+                           ring_mode=ring_mode)
+            arrays = lda.init_arrays(seed=0)
+            for it in range(2):
+                arrays = lda.sweep(arrays, seed=it)
+            res[ring_mode] = arrays
+        for name in ("z", "n_td", "n_wt", "n_t"):
+            np.testing.assert_array_equal(
+                np.asarray(res["barrier"][name]),
+                np.asarray(res["pipelined"][name]))
+
     def test_mismatched_layout_rejected(self):
         corpus, _, _ = synthetic.make_corpus(
             num_docs=20, vocab_size=64, num_topics=8, mean_doc_len=10.0,
@@ -170,6 +238,16 @@ class TestSingleDeviceRing:
         with pytest.raises(ValueError, match="ring has"):
             NomadLDA(mesh=mesh, ring_axes=("worker",), layout=lay,
                      alpha=1.0, beta=0.01)
+
+    def test_invalid_ring_mode_rejected(self):
+        corpus, _, _ = synthetic.make_corpus(
+            num_docs=20, vocab_size=64, num_topics=8, mean_doc_len=10.0,
+            seed=8)
+        mesh = jax.make_mesh((1,), ("worker",))
+        lay = build_layout(corpus, n_workers=1, T=8)
+        with pytest.raises(ValueError, match="overlapped"):
+            NomadLDA(mesh=mesh, ring_axes=("worker",), layout=lay,
+                     alpha=1.0, beta=0.01, ring_mode="overlapped")
 
 
 @pytest.mark.slow
@@ -204,39 +282,107 @@ class TestMultiDevice:
         assert rep["n_t_mismatch"] == 0, rep
         assert rep["ll_improved"], rep["ll"]
 
-    @pytest.mark.parametrize("inner_mode", ["scan", "fused"])
-    def test_block_queue_ring(self, inner_mode):
+    @pytest.mark.parametrize("inner_mode,ring_mode", [
+        ("scan", "barrier"), ("fused", "barrier"),
+        ("scan", "pipelined"), ("fused", "pipelined"),
+    ])
+    def test_block_queue_ring(self, inner_mode, ring_mode):
         """B = 4W: each worker circulates a 4-block queue; counts must stay
-        exact and the chain must still mix."""
-        rep = _run_check(4, "stoken", inner_mode=inner_mode, n_blocks=16)
+        exact and the chain must still mix — in both ring schedules."""
+        rep = _run_check(4, "stoken", inner_mode=inner_mode, n_blocks=16,
+                         ring_mode=ring_mode)
         assert rep["blocks_per_worker"] == 4
         assert rep["n_td_mismatch"] == 0, rep
         assert rep["n_wt_mismatch"] == 0, rep
         assert rep["n_t_mismatch"] == 0, rep
         assert rep["ll_improved"], rep["ll"]
 
-    def test_multipod_block_queue(self):
+    @pytest.mark.parametrize("ring_mode", ["barrier", "pipelined"])
+    def test_multipod_block_queue(self, ring_mode):
         """2 pods × 2 workers with B = 2W: the wrap-around queue hop must
-        cross the pod axis exactly."""
-        rep = _run_check(4, "stoken", pods=2, n_blocks=8)
+        cross the pod axis exactly (in pipelined mode, twice per round)."""
+        rep = _run_check(4, "stoken", pods=2, n_blocks=8,
+                         ring_mode=ring_mode)
         assert rep["n_td_mismatch"] == 0, rep
         assert rep["n_wt_mismatch"] == 0, rep
         assert rep["n_t_mismatch"] == 0, rep
         assert rep["ll_improved"], rep["ll"]
 
-    def test_exactness_matrix(self):
-        """The full sync × inner × B matrix on the 8-device mesh: global
-        counts bit-equal to a rebuild from z in every combination."""
+    def test_non_multiple_n_blocks_rejected_end_to_end(self):
+        """B % W != 0 must die in the launch path too, not just in
+        build_layout unit tests."""
         env = dict(os.environ)
         env["PYTHONPATH"] = os.path.join(REPO, "src")
         env.pop("XLA_FLAGS", None)
         out = subprocess.run(
-            [sys.executable, "-m", "repro.launch.lda_matrix_check", "8", "2"],
+            [sys.executable, "-m", "repro.launch.lda_dist_check",
+             "4", "stoken", "1", "scan", "6"],
             capture_output=True, text=True, env=env, timeout=900)
-        assert out.returncode == 0, out.stderr[-3000:]
-        rep = json.loads(out.stdout.strip().splitlines()[-1])
-        assert len(rep["combos"]) == 27
+        assert out.returncode != 0
+        assert "multiple" in out.stderr
+
+    def test_exactness_matrix(self):
+        """The full sync × inner × B × ring matrix on the 8-device mesh:
+        global counts bit-equal to a rebuild from z in every combination,
+        and the pipelined ring bit-equal to the barrier ring in every
+        (sync, inner, B) cell."""
+        rep = _run_module("repro.launch.lda_matrix_check", 8, 2)
+        assert len(rep["combos"]) == 54
+        rings = {c["ring_mode"] for c in rep["combos"]}
+        assert rings == {"barrier", "pipelined"}
+        cross = [c for c in rep["combos"] if "vs_barrier_z_mismatch" in c]
+        assert len(cross) == 27
         bad = [c for c in rep["combos"]
                if c["n_td_mismatch"] or c["n_wt_mismatch"]
-               or c["n_t_mismatch"] or not c["tokens_preserved"]]
+               or c["n_t_mismatch"] or not c["tokens_preserved"]
+               or c.get("vs_barrier_z_mismatch", 0)
+               or c.get("vs_barrier_n_wt_mismatch", 0)
+               or c.get("vs_barrier_n_t_mismatch", 0)]
         assert rep["all_exact"], bad
+
+
+@pytest.mark.slow
+class TestRingShift:
+    """Direct unit coverage of ``_ring_shift_down`` (previously only hit
+    through whole sweeps)."""
+
+    def test_flat_ring(self):
+        rep = _run_module("repro.launch.ring_shift_check", 8, 1)
+        assert rep["one_shift_mismatch"] == 0, rep
+        assert rep["one_shift_vec_mismatch"] == 0, rep
+        assert rep["identity_mismatch"] == 0, rep
+        assert rep["identity_vec_mismatch"] == 0, rep
+
+    def test_two_axis_ring_crosses_pod_boundary(self):
+        """('pod','worker') mesh: one shift moves flat position i+1 → i,
+        the wrap-around element crosses the pod axis, and W shifts restore
+        the identity."""
+        rep = _run_module("repro.launch.ring_shift_check", 8, 2)
+        assert rep["ring_axes"] == ["pod", "worker"]
+        assert rep["one_shift_mismatch"] == 0, rep
+        assert rep["one_shift_vec_mismatch"] == 0, rep
+        assert rep["identity_mismatch"] == 0, rep
+        assert rep["identity_vec_mismatch"] == 0, rep
+        assert rep["cross_pod_ok"], rep
+
+
+@pytest.mark.slow
+class TestStokenStaleness:
+    """The s-token working copy is stale but boundedly so (paper Alg. 4):
+    instrumented sweeps must match the fold schedule exactly and never
+    exceed the documented (W−1)·k-cell staleness bound — and the pipelined
+    ring must produce the bit-identical lag trace."""
+
+    @pytest.mark.parametrize("n_dev,inner_mode,n_blocks", [
+        (8, "scan", 16), (4, "fused", 8),
+    ])
+    def test_lag_bounded_and_ring_mode_invariant(self, n_dev, inner_mode,
+                                                 n_blocks):
+        rep = _run_module("repro.launch.stoken_lag_check",
+                          n_dev, inner_mode, n_blocks)
+        assert rep["fold_schedule_exact"], rep
+        assert rep["lag_within_bound"], rep
+        assert rep["lag_nonzero"], rep          # the check isn't vacuous
+        assert rep["documented_bound_ok"], rep
+        assert rep["fold_window_rounds_max"] <= rep["n_devices"] - 1, rep
+        assert rep["ring_modes_identical"], rep

@@ -1,0 +1,105 @@
+"""Property-based tests for the hierarchical-LPT nomad layout.
+
+The block count ``B`` is supposed to be a *free* scaling knob (DESIGN.md
+§3/§4): for any corpus shape and any multiple ``B = m·W``,
+
+* the per-round queue loads — and hence ``round_imbalance`` — are exactly
+  those of the ``B = W`` packing (words are LPT-packed into ``W`` ring
+  chunks first, then each chunk is split into ``k`` blocks);
+* the rotation schedule visits every ``(worker, block)`` pair exactly once
+  per sweep, and the layout places every corpus token exactly once;
+* the pipelined half-queues partition each queue and are load-matched to
+  within one block's load (``_order_bins_for_halves``);
+* any ``B`` that is not a positive multiple of ``W`` is rejected.
+
+Runs under real ``hypothesis`` when installed — CI servers export
+``REPRO_CI_INSTALL_HYPOTHESIS=1`` so ``tools/ci.sh`` installs it and these
+run un-shimmed; hermetic/offline containers (the default) fall back to the
+deterministic shim from ``tests/conftest.py``, which caps the example
+count (REPRO_SHIM_MAX_EXAMPLES, default 10).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.data import synthetic
+from repro.data.sharding import build_layout, half_queue_split
+
+
+def _corpus(num_docs, vocab, seed):
+    corpus, _, _ = synthetic.make_corpus(
+        num_docs=num_docs, vocab_size=vocab, num_topics=8,
+        mean_doc_len=12.0, seed=seed)
+    return corpus
+
+
+class TestHierarchicalLPT:
+    @settings(max_examples=20, deadline=None)
+    @given(W=st.integers(2, 5), mult=st.integers(2, 4),
+           num_docs=st.integers(12, 60), vocab=st.integers(32, 128),
+           seed=st.integers(0, 10))
+    def test_round_imbalance_is_free_in_B(self, W, mult, num_docs, vocab,
+                                          seed):
+        corpus = _corpus(num_docs, vocab, seed)
+        lay_w = build_layout(corpus, n_workers=W, T=8, n_blocks=W)
+        lay_b = build_layout(corpus, n_workers=W, T=8, n_blocks=mult * W)
+        # chunk membership is identical, so the per-round loads — integer
+        # token counts — agree exactly, and so does the float statistic
+        assert lay_b.round_imbalance == lay_w.round_imbalance
+
+    @settings(max_examples=20, deadline=None)
+    @given(W=st.integers(1, 5), mult=st.integers(1, 4),
+           num_docs=st.integers(12, 60), vocab=st.integers(32, 128),
+           seed=st.integers(0, 10))
+    def test_schedule_visits_each_pair_once_and_covers_tokens(
+            self, W, mult, num_docs, vocab, seed):
+        corpus = _corpus(num_docs, vocab, seed)
+        lay = build_layout(corpus, n_workers=W, T=8, n_blocks=mult * W)
+        k = lay.k
+        visited = set()
+        for r in range(W):
+            for w in range(W):
+                c = (w + r) % W
+                for b in range(c * k, (c + 1) * k):
+                    assert (w, b) not in visited
+                    visited.add((w, b))
+        assert len(visited) == W * lay.B
+        # every token placed exactly once, word→block map respected
+        assert int(lay.tok_valid.sum()) == corpus.num_tokens
+        w_i, b_i, l_i = np.nonzero(lay.tok_valid)
+        gw = lay.word_of_block[b_i, lay.tok_wrd[w_i, b_i, l_i]]
+        np.testing.assert_array_equal(gw, lay.tok_gwrd[w_i, b_i, l_i])
+        assert (lay.word_assign[gw] == b_i).all()
+
+    @settings(max_examples=20, deadline=None)
+    @given(W=st.integers(2, 5), mult=st.integers(2, 4),
+           num_docs=st.integers(12, 60), vocab=st.integers(32, 128),
+           seed=st.integers(0, 10))
+    def test_half_queues_partition_and_balance(self, W, mult, num_docs,
+                                               vocab, seed):
+        corpus = _corpus(num_docs, vocab, seed)
+        lay = build_layout(corpus, n_workers=W, T=8, n_blocks=mult * W)
+        k = lay.k
+        k0 = half_queue_split(k)
+        assert 0 < k0 < k
+        halves = lay.half_loads()
+        # the halves partition every round's queue load exactly
+        for r in range(W):
+            for w in range(W):
+                c = (w + r) % W
+                assert halves[r, w].sum() == \
+                    lay.cell_sizes[w, c * k:(c + 1) * k].sum()
+        # greedy half ordering: per chunk, |half0 − half1| ≤ max block load
+        gaps = lay.half_balance_gaps()
+        assert (gaps[:, 0] <= gaps[:, 1]).all(), gaps
+
+    @settings(max_examples=20, deadline=None)
+    @given(W=st.integers(2, 6), B=st.integers(0, 40),
+           seed=st.integers(0, 5))
+    def test_non_multiple_B_rejected(self, W, B, seed):
+        from hypothesis import assume
+        assume(B % W != 0 or B < W)
+        corpus = _corpus(20, 64, seed)
+        with pytest.raises(ValueError, match="multiple"):
+            build_layout(corpus, n_workers=W, T=8, n_blocks=B)
