@@ -5,9 +5,11 @@ Measures tokens/sec of the three sweep paths —
 * serial ``cgs.sweep_fplda_word`` with ``backend="scan"`` vs ``"fused"``
   (the single-block fused kernel), in-process;
 * the distributed nomad sweep (subprocesses on faked devices) for
-  ``inner_mode`` ∈ {scan, fused} × ``B`` ∈ {W, 4W} × ``ring_mode`` ∈
-  {barrier, pipelined} — the block-queue ring, with the pipelined
-  schedule's early half-queue hop —
+  ``inner_mode`` ∈ {scan, fused} × ``B`` ∈ {W, 4W, 16W} × ``ring_mode`` ∈
+  {barrier, pipelined} × ``layout`` ∈ {dense, ragged} — the block-queue
+  ring; every nomad entry records the layout's ``pad_fraction`` and
+  ``total_tiles`` so the dense-padding blowup (and the ragged fix) stays
+  visible in the trajectory —
 
 and, besides the usual CSV rows, maintains ``BENCH_sweep.json`` at the
 repo root: a **history** of per-PR snapshots (``{"history": [{"rev",
@@ -15,11 +17,21 @@ repo root: a **history** of per-PR snapshots (``{"history": [{"rev",
 (interpret-mode numbers: structure, not silicon).  Full-size runs append
 a snapshot; ``check_regression`` (also ``python -m benchmarks.sweep_bench
 --check-regression``, wired into ``tools/ci.sh --bench-smoke``) compares
-the last two snapshots' nomad rows and fails on a >30% tokens/sec drop.
+the last two snapshots' nomad rows and fails on a >30% tokens/sec drop,
+and additionally runs the **padding-blowup canary**: ragged nomad-fused
+tokens/sec at B=4W must not fall below B=W by more than the canary
+threshold, judged on the dedicated *interleaved* measurement
+(``launch/lda_canary_check``, a ``"canary"`` entry in the snapshot)
+whose ratio is immune to the cross-subprocess host-contention noise of
+the per-config rows (``--skip-canary`` / REPRO_BENCH_SKIP_CANARY=1
+disables; the dense rows are exempt — they *are* the documented blowup).
 
-Env: REPRO_BENCH_FAST=1 shrinks the nomad ring to 2 workers (and never
-touches the committed history).  REPRO_BENCH_REGRESSION_PCT overrides the
-regression threshold (default 30).
+Env: REPRO_BENCH_FAST=1 shrinks the nomad ring to 2 workers and the combo
+matrix to the fused hot path (and never touches the committed history).
+REPRO_BENCH_REGRESSION_PCT overrides the regression threshold (default
+30); REPRO_BENCH_CANARY_PCT the canary threshold (default 30 — see
+``_check_canary`` for why interpret-mode grid-step overhead rules out
+the tighter gate the padding math alone would allow).
 """
 from __future__ import annotations
 
@@ -63,34 +75,52 @@ def _serial_entries(T: int = SERIAL_T) -> list[dict]:
     return entries
 
 
-def _nomad_entries(W: int) -> list[dict]:
+def _nomad_entries(W: int, fast: bool = False) -> list[dict]:
     entries = []
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(REPO, "src")
     env.pop("XLA_FLAGS", None)
-    for inner_mode in ("scan", "fused"):
-        for B in (W, 4 * W):
-            for ring_mode in ("barrier", "pipelined"):
-                res = subprocess.run(
-                    [sys.executable, "-m", "repro.launch.lda_dist_check",
-                     str(W), "stoken", "1", inner_mode, str(B), ring_mode],
-                    capture_output=True, text=True, env=env, timeout=900)
-                if res.returncode != 0:
-                    raise RuntimeError(
-                        f"lda_dist_check W={W} B={B} {inner_mode} "
-                        f"{ring_mode}: " + res.stderr[-500:])
-                rep = json.loads(res.stdout.strip().splitlines()[-1])
-                entries.append({
-                    "path": "nomad", "backend": inner_mode, "B": B, "W": W,
-                    "ring_mode": ring_mode,
-                    "T": 16, "k": rep["blocks_per_worker"],
-                    "n_tokens": rep["n_tokens"],
-                    "tokens_per_sec": rep["tokens_per_sec"],
-                    "exact": rep["n_td_mismatch"] + rep["n_wt_mismatch"]
-                             + rep["n_t_mismatch"] == 0,
-                    "round_imbalance": rep["round_imbalance"],
-                })
+    # fast (CI smoke) keeps the matrix small but still covers both layouts
+    # on the fused hot path, so the pad_fraction delta is always reported.
+    inner_modes = ("fused",) if fast else ("scan", "fused")
+    b_mults = (1, 4) if fast else (1, 4, 16)
+    for layout in ("dense", "ragged"):
+        for inner_mode in inner_modes:
+            for B in (m * W for m in b_mults):
+                for ring_mode in ("barrier", "pipelined"):
+                    res = subprocess.run(
+                        [sys.executable, "-m",
+                         "repro.launch.lda_dist_check",
+                         str(W), "stoken", "1", inner_mode, str(B),
+                         ring_mode, layout],
+                        capture_output=True, text=True, env=env,
+                        timeout=900)
+                    if res.returncode != 0:
+                        raise RuntimeError(
+                            f"lda_dist_check W={W} B={B} {inner_mode} "
+                            f"{ring_mode} {layout}: " + res.stderr[-500:])
+                    rep = json.loads(res.stdout.strip().splitlines()[-1])
+                    entries.append({
+                        "path": "nomad", "backend": inner_mode, "B": B,
+                        "W": W, "ring_mode": ring_mode, "layout": layout,
+                        "T": 16, "k": rep["blocks_per_worker"],
+                        "n_tokens": rep["n_tokens"],
+                        "tokens_per_sec": rep["tokens_per_sec"],
+                        "exact": rep["n_td_mismatch"] + rep["n_wt_mismatch"]
+                                 + rep["n_t_mismatch"] == 0,
+                        "round_imbalance": rep["round_imbalance"],
+                        "pad_fraction": rep["pad_fraction"],
+                        "total_tiles": rep["total_tiles"],
+                        "ref_sweep_sec": rep["ref_sweep_sec"],
+                    })
     return entries
+
+
+# Timing-methodology epoch of the snapshots this harness writes.  Rows are
+# only gated against a previous snapshot from the SAME epoch: comparing
+# e.g. median-of-6 rows against the pre-PR4 total-of-3 rows would gate a
+# measurement change, not a perf change.
+TIMING_EPOCH = "median6+ref"
 
 
 # ---------------------------------------------------------------------------
@@ -125,8 +155,9 @@ def _git_rev() -> str:
 
 
 def _nomad_key(e: dict) -> tuple:
+    # pre-ragged snapshots carry no layout key: those rows are dense
     return (e.get("backend"), e.get("B"), e.get("W"),
-            e.get("ring_mode", "barrier"))
+            e.get("ring_mode", "barrier"), e.get("layout", "dense"))
 
 
 def _serial_baseline(entries: list[dict]) -> float:
@@ -140,27 +171,38 @@ def check_regression(threshold: float | None = None) -> list[str]:
     """Compare the last two history snapshots' nomad rows; return a list of
     human-readable regression messages (empty = gate passes).
 
-    Rows are matched on (backend, B, W, ring_mode); rows without a
-    predecessor (first snapshot, new configurations) are skipped.
-    Snapshots come from whatever machine produced them, so a row fails
-    only when it regresses both **raw** and **normalized** by its own
-    snapshot's serial-scan tokens/sec (same run, same machine): a slower
-    host drops raw but not normalized, a serial-path speedup drops
-    normalized but not raw — only a real distributed-path slowdown drops
-    both.  The threshold is a fraction (default 0.30, env
-    REPRO_BENCH_REGRESSION_PCT=<percent> overrides).
+    Rows are matched on (backend, B, W, ring_mode, layout); rows without
+    a predecessor (first snapshot, new configurations) are skipped, and
+    the pairwise gate only runs when both snapshots share the same
+    ``timing`` methodology epoch (a methodology change is not a perf
+    change).  Snapshots come from whatever machine produced them — and a
+    shared host can be 2-3x slower for one whole subprocess than the
+    next — so a row fails only when it regresses under **every**
+    normalization available: raw, normalized by its snapshot's
+    serial-scan tokens/sec (host speed at snapshot time), and normalized
+    by the row's own in-process reference clock
+    (``tokens_per_sec · ref_sweep_sec``, which cancels the contention of
+    the very subprocess that produced the row).  The threshold is a
+    fraction (default 0.30, env REPRO_BENCH_REGRESSION_PCT=<percent>
+    overrides).
     """
     if threshold is None:
         threshold = float(os.environ.get(
             "REPRO_BENCH_REGRESSION_PCT", "30")) / 100.0
     hist = _load_history()["history"]
+    regressions = _check_canary(hist)
     if len(hist) < 2:
-        return []
+        return regressions
+    if hist[-2].get("timing") != hist[-1].get("timing"):
+        print(f"bench gate: timing epoch changed "
+              f"({hist[-2].get('timing', 'pre-median6')} -> "
+              f"{hist[-1].get('timing', 'pre-median6')}); pairwise row "
+              f"gate skipped for this window, canary still active")
+        return regressions
     base_old = _serial_baseline(hist[-2]["entries"])
     base_new = _serial_baseline(hist[-1]["entries"])
     prev = {_nomad_key(e): e for e in hist[-2]["entries"]
             if e.get("path") == "nomad"}
-    regressions = []
     for e in hist[-1]["entries"]:
         if e.get("path") != "nomad":
             continue
@@ -172,6 +214,10 @@ def check_regression(threshold: float | None = None) -> list[str]:
                        / (old["tokens_per_sec"] / base_old))
                       if base_old > 0 and base_new > 0 else ratio_raw)
         ratio = max(ratio_raw, ratio_norm)
+        if e.get("ref_sweep_sec", 0) > 0 and old.get("ref_sweep_sec", 0) > 0:
+            ratio = max(ratio,
+                        (e["tokens_per_sec"] * e["ref_sweep_sec"])
+                        / (old["tokens_per_sec"] * old["ref_sweep_sec"]))
         if ratio < 1.0 - threshold:
             regressions.append(
                 f"nomad/{e['backend']}/B{e['B']}W{e['W']}/"
@@ -185,10 +231,95 @@ def check_regression(threshold: float | None = None) -> list[str]:
     return regressions
 
 
+def _canary_entry(W: int) -> dict:
+    """Run the interleaved B=W vs B=4W ragged-fused canary measurement
+    (``repro.launch.lda_canary_check``) and return its bench entry."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.launch.lda_canary_check", str(W)],
+        capture_output=True, text=True, env=env, timeout=900)
+    if res.returncode != 0:
+        raise RuntimeError(f"lda_canary_check W={W}: " + res.stderr[-500:])
+    rep = json.loads(res.stdout.strip().splitlines()[-1])
+    return {"path": "canary", "W": W,
+            "tokens_per_sec_w": rep["tokens_per_sec_w"],
+            "tokens_per_sec_4w": rep["tokens_per_sec_4w"],
+            "ratio_4w_over_w": rep["ratio_4w_over_w"]}
+
+
+def _check_canary(hist: list[dict]) -> list[str]:
+    """The padding-blowup canary: in the latest snapshot, ragged
+    nomad-fused tokens/sec at B=4W must not fall more than the threshold
+    (default 30%, REPRO_BENCH_CANARY_PCT) below B=W.
+
+    This is the signal the dense layout silently tripped for two PRs —
+    B is supposed to be a free scaling knob (DESIGN.md §4), and with the
+    ragged tile streams the per-round slot count no longer grows with B.
+    The gated ratio comes from the dedicated **interleaved** measurement
+    (``lda_canary_check``: both configs alternate single sweeps in one
+    process, so host contention cancels out of the ratio) — the separate
+    per-config nomad rows carry far too much cross-subprocess timing
+    noise for any tight gate.  The default threshold is 30%, not the 10%
+    the padding math alone would allow: in interpret mode every extra
+    grid step costs ~tens of µs of interpreter overhead (absent on real
+    silicon), and on the toy canary corpus B=4W runs ~4x the grid steps
+    of B=W, which measures as a stable ~15-30% ratio deficit
+    (0.71-0.86 observed).  The dense-style blowup this canary exists to
+    catch costs ≥50% at B=4W, so 30% cleanly separates the two; tighten
+    via REPRO_BENCH_CANARY_PCT on a quiet host or compiled TPU.  Dense
+    rows are exempt: their blowup is the documented failure mode the
+    ragged layout avoids.  Skipped entirely with --skip-canary /
+    REPRO_BENCH_SKIP_CANARY=1 (e.g. while bisecting an unrelated drop).
+    """
+    if os.environ.get("REPRO_BENCH_SKIP_CANARY"):
+        return []
+    threshold = float(os.environ.get("REPRO_BENCH_CANARY_PCT", "30")) / 100.0
+    if not hist:
+        return []
+    out = []
+    for e in hist[-1]["entries"]:
+        if e.get("path") != "canary":
+            continue
+        ratio = e["ratio_4w_over_w"]
+        if ratio < 1.0 - threshold:
+            out.append(
+                f"canary nomad/fused/ragged W={e['W']}: B=4W "
+                f"({e['tokens_per_sec_4w']:.0f} tok/s) is "
+                f"{(1 - ratio) * 100:.0f}% below B=W "
+                f"({e['tokens_per_sec_w']:.0f} tok/s, interleaved), limit "
+                f"{threshold * 100:.0f}% — the padding blowup is back "
+                f"({hist[-1]['rev']})")
+    return out
+
+
+def _pad_fraction_summary(entries: list[dict]) -> str | None:
+    """One-line dense-vs-ragged pad_fraction comparison at the largest B
+    both layouts ran (the number `tools/ci.sh --bench-smoke` prints)."""
+    pads = {}
+    for e in entries:
+        if e.get("path") == "nomad" and "pad_fraction" in e:
+            pads.setdefault(e["B"], {})[e.get("layout", "dense")] = \
+                e["pad_fraction"]
+    both = [b for b, d in pads.items() if {"dense", "ragged"} <= set(d)]
+    if not both:
+        return None
+    b = max(both)
+    d, r = pads[b]["dense"], pads[b]["ragged"]
+    return (f"pad_fraction@B={b}: dense={d:.3f} ragged={r:.3f} "
+            f"delta={d - r:+.3f}")
+
+
 def run() -> list[str]:
     fast = bool(os.environ.get("REPRO_BENCH_FAST"))
     W = 2 if fast else 4
-    entries = _serial_entries() + _nomad_entries(W)
+    entries = _serial_entries() + _nomad_entries(W, fast=fast)
+    if not os.environ.get("REPRO_BENCH_SKIP_CANARY"):
+        # skipping the canary skips the measurement too, not just the
+        # gate — and leaves no canary entry in the snapshot to be judged
+        # by a later un-flagged --check-regression
+        entries.append(_canary_entry(W))
     if not fast:
         # Only full-size runs may touch the committed perf trajectory —
         # the CI smoke's shrunken W=2 ring must not overwrite it.  A
@@ -196,26 +327,41 @@ def run() -> list[str]:
         # growing the history.
         data = _load_history()
         rev = _git_rev()
+        snap = {"rev": rev, "timing": TIMING_EPOCH, "entries": entries}
         if data["history"] and data["history"][-1]["rev"] == rev:
-            data["history"][-1] = {"rev": rev, "entries": entries}
+            data["history"][-1] = snap
         else:
-            data["history"].append({"rev": rev, "entries": entries})
+            data["history"].append(snap)
         with open(BENCH_JSON, "w") as f:
             json.dump(data, f, indent=1)
 
     out = []
     for e in entries:
+        if e["path"] == "canary":
+            out.append(row(
+                f"sweep/canary/ragged_fused/W{e['W']}", 0.0,
+                f"ratio_4w_over_w={e['ratio_4w_over_w']:.3f};"
+                f"w={e['tokens_per_sec_w']:.0f};"
+                f"4w={e['tokens_per_sec_4w']:.0f}"))
+            continue
         tag = (f"sweep/{e['path']}/{e['backend']}"
-               + (f"/B{e['B']}W{e['W']}/{e['ring_mode']}"
+               + (f"/B{e['B']}W{e['W']}/{e['ring_mode']}/{e['layout']}"
                   if e["path"] == "nomad" else "")
                + f"/T{e['T']}")
         us = 1e6 / max(e["tokens_per_sec"], 1e-9)
-        out.append(row(tag, us, f"tokens_per_sec={e['tokens_per_sec']:.0f}"))
+        extra = f"tokens_per_sec={e['tokens_per_sec']:.0f}"
+        if e["path"] == "nomad":
+            extra += (f";pad_fraction={e['pad_fraction']:.3f}"
+                      f";total_tiles={e['total_tiles']}")
+        out.append(row(tag, us, extra))
         if e["path"] == "nomad" and not e["exact"]:
             # surface correctness in the smoke gate, not just the JSON:
             # an inexact distributed sweep must fail `ci.sh --bench-smoke`
             # (it greps for ERROR rows) even though the subprocess exited 0
             out.append(row(tag + "/ERROR", -1.0, "counts_inexact"))
+    pad_line = _pad_fraction_summary(entries)
+    if pad_line:
+        out.append(row("sweep/pad_fraction", 0.0, pad_line))
     out.append(row("sweep/json", 0.0,
                    ("skipped=fast_mode" if fast else
                     f"wrote={os.path.basename(BENCH_JSON)}")
@@ -224,6 +370,8 @@ def run() -> list[str]:
 
 
 def main() -> None:
+    if "--skip-canary" in sys.argv:
+        os.environ["REPRO_BENCH_SKIP_CANARY"] = "1"
     if "--check-regression" in sys.argv:
         regs = check_regression()
         for r in regs:
@@ -232,7 +380,9 @@ def main() -> None:
             sys.exit(1)
         hist = _load_history()["history"]
         print(f"bench regression gate OK "
-              f"({len(hist)} snapshot(s) in {os.path.basename(BENCH_JSON)})")
+              f"({len(hist)} snapshot(s) in {os.path.basename(BENCH_JSON)}"
+              + (", canary skipped)"
+                 if os.environ.get("REPRO_BENCH_SKIP_CANARY") else ")"))
         return
     for line in run():
         print(line)

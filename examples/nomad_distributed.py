@@ -2,6 +2,7 @@
 
 Run:  PYTHONPATH=src python examples/nomad_distributed.py [n_blocks]
                                                           [ring_mode]
+                                                          [layout]
 Documents sharded across an 8-worker ring; word-topic blocks travel the
 ring as nomadic tokens — by default 4 blocks per worker (B = 4W, the
 paper's blocks >> workers setup; pass n_blocks to override), with each
@@ -9,7 +10,10 @@ worker sweeping its whole block queue every ring round; the s-token
 carries the global topic counts (paper Alg. 4).  ring_mode "pipelined"
 (default; pass "barrier" to compare) forwards each round's first
 half-queue while the second half sweeps — same chain bit-for-bit, hop
-off the critical path.  Prints LL per sweep + exactness check.
+off the critical path.  layout "ragged" (default; pass "dense" to
+compare) stores each worker's queue as a CSR-style tile stream, so
+padding — and with it tokens/sec — no longer degrades as n_blocks
+grows.  Prints LL per sweep + exactness check.
 """
 import os
 import sys
@@ -38,10 +42,12 @@ def main():
 
     n_blocks = int(sys.argv[1]) if len(sys.argv) > 1 else 4 * n_dev
     ring_mode = sys.argv[2] if len(sys.argv) > 2 else "pipelined"
+    layout_kind = sys.argv[3] if len(sys.argv) > 3 else "ragged"
     mesh = jax.make_mesh((n_dev,), ("worker",))
-    layout = build_layout(corpus, n_workers=n_dev, T=T, n_blocks=n_blocks)
-    print(f"layout: {layout.W}x{layout.B} cells ({layout.k} blocks/queue), "
-          f"pad {layout.pad_fraction:.1%},"
+    layout = build_layout(corpus, n_workers=n_dev, T=T, n_blocks=n_blocks,
+                          layout=layout_kind)
+    print(f"layout: {layout.W}x{layout.B} cells ({layout.k} blocks/queue, "
+          f"{layout.kind}), pad {layout.pad_fraction:.1%},"
           f" worst-round imbalance {layout.round_imbalance:.2f}x,"
           f" ring_mode {ring_mode}")
 

@@ -48,6 +48,13 @@ The paper's nomadic framework, mapped to SPMD TPU semantics (DESIGN.md §3):
 
 The per-round compute is the word-by-word F+LDA cell sweep (Alg. 3) over the
 padded cell, with the same F+tree q-term maintenance as the serial version.
+
+Two token geometries feed that sweep (``NomadLayout.kind``, DESIGN.md §4):
+the **dense** ``(W, B, L)`` cell grid, and the **ragged** ``(W, W, S)``
+per-chunk tile streams whose padding stays bounded by the tile size for any
+``B``.  Initial assignments and per-token uniforms are derived from
+canonical token coordinates (not array positions), so the two layouts run
+**bit-identical** chains — the layout is purely a storage/throughput choice.
 """
 from __future__ import annotations
 
@@ -104,6 +111,22 @@ def _ring_shift_down(x, axes: Sequence[str], sizes: Sequence[int]):
 
 
 # ---------------------------------------------------------------------------
+# Layout-independent per-token uniforms.
+# ---------------------------------------------------------------------------
+def _token_uniforms(key, uids):
+    """Counter-mode uniforms: one draw per token id, independent of the
+    array geometry the ids arrive in.
+
+    ``uid = global_block·L + slot`` names a token by its canonical cell
+    coordinates, so the dense grid and the ragged stream draw the *same*
+    uniform for the same token — the property that makes the two layouts'
+    Gibbs chains bit-identical (and padding slots' draws harmless: they
+    are computed but discarded by the valid mask)."""
+    keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(key, uids.ravel())
+    return jax.vmap(jax.random.uniform)(keys).reshape(uids.shape)
+
+
+# ---------------------------------------------------------------------------
 # Per-cell word-by-word F+LDA sweep (Alg. 3 with masking + local indices).
 # ---------------------------------------------------------------------------
 def _cell_sweep(tok_doc, tok_wrd, tok_valid, tok_bound, z_cell,
@@ -126,25 +149,26 @@ def _cell_sweep(tok_doc, tok_wrd, tok_valid, tok_bound, z_cell,
     return z_cell, n_td, n_wt, n_t
 
 
-def _cell_sweep_vectorized(tok_doc, tok_wrd, tok_valid, tok_bound, z_cell,
-                           n_td, n_wt, n_t, u, alpha, beta, beta_bar):
-    """Beyond-paper TPU mode (DESIGN §3 last row): the whole cell is sampled
-    in one batched pass against counts frozen at cell start (minus each
-    token's own contribution — the standard delayed/minibatch CGS, AD-LDA
-    style *within* a cell), then the count deltas are applied exactly.
+def _vectorized_pass(doc_idx, wrd_idx, mask, z, n_td, n_wt, n_t, u,
+                     alpha, beta, beta_bar):
+    """One batched delayed-count pass over a flat token segment: every
+    ``mask``-selected token is sampled against the counts as of entry
+    (minus its own contribution — the standard delayed/minibatch CGS),
+    then the deltas are applied exactly (batched scatter-add, duplicates
+    accumulate).  Unmasked tokens are exact no-ops.
 
-    Trades the paper's per-token exact chain for full 8×128-lane VPU
-    utilization — the dense conditional here is exactly what the
-    ``lda_scores`` Pallas kernel computes per tile.  Staleness ≤ one cell;
-    cross-cell/nomad semantics unchanged.
+    The single definition both vectorized inner modes share: the dense
+    grid passes one cell with ``mask = tok_valid``, the ragged stream
+    passes the whole segment with ``mask`` selecting one cell — keeping
+    the float-op order identical is what makes the two layouts'
+    vectorized chains bit-equal.
     """
-    L = tok_doc.shape[0]
     T = n_t.shape[-1]
-    one = tok_valid.astype(jnp.int32)
-    z_oh = jax.nn.one_hot(z_cell, T, dtype=jnp.int32) * one[:, None]
+    one = mask.astype(jnp.int32)
+    z_oh = jax.nn.one_hot(z, T, dtype=jnp.int32) * one[:, None]
 
-    ntd_rows = n_td[tok_doc] - z_oh                    # (L,T) self-excluded
-    nwt_rows = n_wt[tok_wrd] - z_oh
+    ntd_rows = n_td[doc_idx] - z_oh                    # (L,T) self-excluded
+    nwt_rows = n_wt[wrd_idx] - z_oh
     nt_rows = n_t[None, :] - z_oh
 
     p = ((ntd_rows.astype(F32) + alpha)
@@ -152,13 +176,29 @@ def _cell_sweep_vectorized(tok_doc, tok_wrd, tok_valid, tok_bound, z_cell,
          / (nt_rows.astype(F32) + beta_bar))
     c = jnp.cumsum(p, axis=-1)
     draw = jnp.sum(c <= (u * c[:, -1])[:, None], axis=-1).astype(jnp.int32)
-    z_new = jnp.where(tok_valid, jnp.clip(draw, 0, T - 1), z_cell)
+    z_new = jnp.where(mask, jnp.clip(draw, 0, T - 1), z)
 
-    # exact delta application (batched scatter-add, duplicates accumulate)
-    n_td = n_td.at[tok_doc, z_cell].add(-one).at[tok_doc, z_new].add(one)
-    n_wt = n_wt.at[tok_wrd, z_cell].add(-one).at[tok_wrd, z_new].add(one)
-    n_t = n_t.at[z_cell].add(-one).at[z_new].add(one)
+    n_td = n_td.at[doc_idx, z].add(-one).at[doc_idx, z_new].add(one)
+    n_wt = n_wt.at[wrd_idx, z].add(-one).at[wrd_idx, z_new].add(one)
+    n_t = n_t.at[z].add(-one).at[z_new].add(one)
     return z_new, n_td, n_wt, n_t
+
+
+def _cell_sweep_vectorized(tok_doc, tok_wrd, tok_valid, tok_bound, z_cell,
+                           n_td, n_wt, n_t, u, alpha, beta, beta_bar):
+    """Beyond-paper TPU mode (DESIGN §3 last row): the whole cell is sampled
+    in one batched pass against counts frozen at cell start (minus each
+    token's own contribution — the standard delayed/minibatch CGS, AD-LDA
+    style *within* a cell), then the count deltas are applied exactly
+    (:func:`_vectorized_pass`).
+
+    Trades the paper's per-token exact chain for full 8×128-lane VPU
+    utilization — the dense conditional here is exactly what the
+    ``lda_scores`` Pallas kernel computes per tile.  Staleness ≤ one cell;
+    cross-cell/nomad semantics unchanged.
+    """
+    return _vectorized_pass(tok_doc, tok_wrd, tok_valid, z_cell,
+                            n_td, n_wt, n_t, u, alpha, beta, beta_bar)
 
 
 def _queue_sweep_fused(tok_doc, tok_wrd, tok_valid, tok_bound, z_q,
@@ -213,6 +253,84 @@ def _queue_sweep_cells(cell_fn, tok_doc, tok_wrd, tok_valid, tok_bound, z_q,
 
 
 # ---------------------------------------------------------------------------
+# Ragged-stream queue sweeps (NomadLayout kind="ragged", DESIGN.md §4/§7):
+# tok_* / z / u are flat (S,) per-chunk streams, cot the (S//tile,)
+# tile→cell map; same sub-range convention as the dense queue sweeps but
+# expressed as (tile_start, num_tiles) + (cell_start, num_cells).
+# ---------------------------------------------------------------------------
+def _queue_sweep_ragged_fused(tok_doc, tok_wrd, tok_valid, tok_bound, z_s,
+                              n_td, n_wt_q, n_t, u, cot,
+                              alpha, beta, beta_bar, *, tile,
+                              tile_start=0, num_tiles=None,
+                              cell_start=0, num_cells=None,
+                              interpret: bool = True):
+    """The ragged nomad hot path: the worker's whole per-round stream as
+    ONE flat-grid ``pallas_call`` with scalar-prefetch block paging
+    (:func:`repro.kernels.fused_sweep.fused_sweep_ragged`).  Bit-exact
+    same chain as the dense queue sweeps over the same tokens."""
+    from repro.kernels.fused_sweep import fused_sweep_ragged
+    z_s, n_td, n_wt_q, n_t, _ = fused_sweep_ragged(
+        tok_doc, tok_wrd, tok_valid, tok_bound, z_s, u, cot,
+        n_td, n_wt_q, n_t, alpha=alpha, beta=beta, beta_bar=beta_bar,
+        n_blk=tile, tile_start=tile_start, num_tiles=num_tiles,
+        cell_start=cell_start, num_cells=num_cells, interpret=interpret)
+    return z_s, n_td, n_wt_q, n_t
+
+
+def _queue_sweep_ragged_scan(tok_doc, tok_wrd, tok_valid, tok_bound, z_s,
+                             n_td, n_wt_q, n_t, u, cot,
+                             alpha, beta, beta_bar, *, tile,
+                             tile_start=0, num_tiles=None,
+                             cell_start=0, num_cells=None):
+    """Exact per-token chain over the ragged stream: one ``lax.scan``
+    (the shared oracle) with the queue's blocks flattened to a
+    ``(k·J, T)`` table — the same float ops in the same order as the
+    dense ``"scan"`` mode over the same tokens."""
+    from repro.kernels.fused_sweep.ref import fused_sweep_ragged_ref
+    z_s, n_td, n_wt_q, n_t, _ = fused_sweep_ragged_ref(
+        tok_doc, tok_wrd, tok_valid, tok_bound, z_s, u, cot,
+        n_td, n_wt_q, n_t, alpha=alpha, beta=beta, beta_bar=beta_bar,
+        n_blk=tile, tile_start=tile_start, num_tiles=num_tiles,
+        cell_start=cell_start, num_cells=num_cells)
+    return z_s, n_td, n_wt_q, n_t
+
+
+def _queue_sweep_ragged_vectorized(tok_doc, tok_wrd, tok_valid, tok_bound,
+                                   z_s, n_td, n_wt_q, n_t, u, cot,
+                                   alpha, beta, beta_bar, *, tile,
+                                   tile_start=0, num_tiles=None,
+                                   cell_start=0, num_cells=None):
+    """Beyond-paper batched mode on the ragged stream: one masked pass per
+    cell over the stream segment (:func:`_vectorized_pass`), counts frozen
+    at cell start — the same per-cell freeze points (and bit-identical
+    draws) as :func:`_cell_sweep_vectorized` on the dense grid."""
+    k_total, J, T = n_wt_q.shape
+    r_total = cot.shape[0]
+    nt_ = r_total - tile_start if num_tiles is None else int(num_tiles)
+    nc = k_total - cell_start if num_cells is None else int(num_cells)
+    lo, hi = tile_start * tile, (tile_start + nt_) * tile
+    sub = lambda a: a[lo:hi]
+    cell_tok = jnp.repeat(cot[tile_start:tile_start + nt_] - cell_start,
+                          tile, total_repeat_length=nt_ * tile)
+    doc_seg, valid_seg = sub(tok_doc), sub(tok_valid)
+    wrd_flat = cell_tok * J + sub(tok_wrd)
+    u_seg = sub(u)
+    nwt_flat = n_wt_q[cell_start:cell_start + nc].reshape(nc * J, T)
+
+    def cell_body(carry, j):
+        z_s, n_td, nwt_flat, n_t = carry
+        mask = valid_seg & (cell_tok == j)
+        return _vectorized_pass(doc_seg, wrd_flat, mask, z_s,
+                                n_td, nwt_flat, n_t, u_seg,
+                                alpha, beta, beta_bar), None
+
+    (z_seg, n_td, nwt_flat, n_t), _ = lax.scan(
+        cell_body, (sub(z_s), n_td, nwt_flat, n_t),
+        jnp.arange(nc, dtype=jnp.int32))
+    return z_seg, n_td, nwt_flat.reshape(nc, J, T), n_t
+
+
+# ---------------------------------------------------------------------------
 # The distributed sweep.
 # ---------------------------------------------------------------------------
 def nomad_sweep_fn(mesh: Mesh, ring_axes: Sequence[str], *,
@@ -220,7 +338,10 @@ def nomad_sweep_fn(mesh: Mesh, ring_axes: Sequence[str], *,
                    beta_bar: float, sync_mode: str = "stoken",
                    inner_mode: str = "scan", ring_mode: str = "barrier",
                    interpret: bool | None = None,
-                   collect_lag: bool = False):
+                   collect_lag: bool = False,
+                   layout_kind: str = "dense", tile: int = 0,
+                   n_tiles: int = 0, tile_split: int = 0,
+                   rng_stride: int = 0):
     """Build the jittable distributed sweep for ``mesh``.
 
     Ring spans the product of ``ring_axes`` (e.g. ('worker',) or
@@ -255,6 +376,17 @@ def nomad_sweep_fn(mesh: Mesh, ring_axes: Sequence[str], *,
     ``delta_mine``.  Adds no collectives (the exact ``n_t`` is
     reconstructed offline by summing deltas); used by
     ``launch/stoken_lag_check.py`` to verify the staleness bound.
+
+    layout_kind: the token geometry the sweep operates on (DESIGN.md §4).
+    ``"dense"``: tok_* are the padded ``(W, B, L)`` cell grid.
+    ``"ragged"``: tok_* are the ``(W, W, S)`` per-chunk tile streams and
+    the returned sweep takes two extra trailing arguments,
+    ``cell_of_tile`` ``(W, W, n_tiles)`` and ``tok_slot`` ``(W, W, S)``;
+    ``tile``/``n_tiles``/``tile_split`` are the layout's static tile
+    geometry and ``rng_stride`` its ``L``.  Both layouts draw uniforms
+    per canonical token id (:func:`_token_uniforms`), so for the same
+    corpus, seed and modes their per-token chains are **bit-identical**
+    (asserted across the whole matrix by ``launch/lda_matrix_check.py``).
     """
     from repro.data.sharding import half_queue_split
 
@@ -271,16 +403,35 @@ def nomad_sweep_fn(mesh: Mesh, ring_axes: Sequence[str], *,
         raise ValueError(inner_mode)
     if ring_mode not in ("barrier", "pipelined"):
         raise ValueError(ring_mode)
+    if layout_kind not in ("dense", "ragged"):
+        raise ValueError(layout_kind)
+    ragged = layout_kind == "ragged"
+    if ragged and (tile < 1 or n_tiles < 1 or rng_stride < 1):
+        raise ValueError(
+            f"ragged sweep needs the layout's tile geometry; got "
+            f"tile={tile}, n_tiles={n_tiles}, rng_stride={rng_stride}")
     if interpret is None:
         from repro.kernels.fused_sweep import default_interpret
         interpret = default_interpret()
-    if inner_mode == "fused":
+    if ragged:
+        if inner_mode == "fused":
+            queue_fn = functools.partial(_queue_sweep_ragged_fused,
+                                         tile=tile, interpret=interpret)
+        else:
+            queue_fn = functools.partial(
+                {"scan": _queue_sweep_ragged_scan,
+                 "vectorized": _queue_sweep_ragged_vectorized}[inner_mode],
+                tile=tile)
+    elif inner_mode == "fused":
         queue_fn = functools.partial(_queue_sweep_fused, interpret=interpret)
     else:
         cell_fn = {"scan": _cell_sweep,
                    "vectorized": _cell_sweep_vectorized}[inner_mode]
         queue_fn = functools.partial(_queue_sweep_cells, cell_fn)
     k0 = half_queue_split(k) if ring_mode == "pipelined" else 0
+    # the static tile index of the ragged half split (0 degenerates to the
+    # barrier schedule, exactly like k0 = 0 on the dense grid)
+    r0 = tile_split if (ragged and k0 > 0) else 0
 
     spec_tok = P(tuple(ring_axes), None, None)
     spec_td = P(tuple(ring_axes), None, None)
@@ -288,12 +439,16 @@ def nomad_sweep_fn(mesh: Mesh, ring_axes: Sequence[str], *,
     spec_rep = P()
 
     def worker_fn(tok_doc, tok_wrd, tok_valid, tok_bound,
-                  z, n_td, n_wt_q, n_t, seed):
-        # local shapes: tok_* (1,B,L); n_td (1,I,T); n_wt_q (k,J,T) — the
-        # worker's block queue; n_t (T,) replicated; seed () replicated.
+                  z, n_td, n_wt_q, n_t, seed,
+                  cell_of_tile=None, tok_slot=None):
+        # local shapes: tok_* (1,B,L) dense / (1,W,S) ragged; n_td (1,I,T);
+        # n_wt_q (k,J,T) — the worker's block queue; n_t (T,) replicated;
+        # seed () replicated; ragged adds cell_of_tile (1,W,n_tiles) and
+        # tok_slot (1,W,S).
         w_flat = _flat_index(ring_axes, sizes)
         key = jax.random.fold_in(jax.random.key(seed), w_flat)
-        L = tok_doc.shape[-1]
+        L = rng_stride if ragged else tok_doc.shape[-1]
+        S = tok_doc.shape[-1]
 
         n_t_start = n_t
         s_tok = n_t                       # authoritative s payload (holder 0)
@@ -303,32 +458,65 @@ def nomad_sweep_fn(mesh: Mesh, ring_axes: Sequence[str], *,
             z, n_td, n_wt_q, n_t_local, delta_mine, s_tok, delta_folded = carry
             c = (w_flat + r) % W          # chunk id this queue corresponds to
             b0 = c * k                    # its first global block index
-            queue = lambda a: lax.dynamic_slice_in_dim(a[0], b0, k, axis=0)
-            tq = (queue(tok_doc), queue(tok_wrd), queue(tok_valid),
-                  queue(tok_bound))
-            z_q_in = queue(z)
-            u = jax.random.uniform(jax.random.fold_in(key, r), (k, L))
+            key_r = jax.random.fold_in(key, r)
             n_t_before = n_t_local
-            if k0 > 0:
+            if ragged:
+                chunk = lambda a: lax.dynamic_slice_in_dim(a[0], c, 1,
+                                                           axis=0)[0]
+                tq = (chunk(tok_doc), chunk(tok_wrd), chunk(tok_valid),
+                      chunk(tok_bound))
+                z_q_in = chunk(z)
+                cot = chunk(cell_of_tile)                      # (n_tiles,)
+                cell_tok = jnp.repeat(cot, tile, total_repeat_length=S)
+                uid = (b0 + cell_tok) * L + chunk(tok_slot)
+                u = _token_uniforms(key_r, uid)
+                sweep_args = tq + (z_q_in, n_td[0], n_wt_q, n_t_local, u,
+                                   cot, alpha, beta, beta_bar)
+                if r0 > 0:
+                    halves = dict(
+                        first=dict(tile_start=0, num_tiles=r0,
+                                   cell_start=0, num_cells=k0),
+                        second=dict(tile_start=r0, num_tiles=n_tiles - r0,
+                                    cell_start=k0, num_cells=k - k0))
+            else:
+                queue = lambda a: lax.dynamic_slice_in_dim(a[0], b0, k,
+                                                           axis=0)
+                tq = (queue(tok_doc), queue(tok_wrd), queue(tok_valid),
+                      queue(tok_bound))
+                z_q_in = queue(z)
+                uid = ((b0 + jnp.arange(k, dtype=jnp.int32))[:, None] * L
+                       + jnp.arange(L, dtype=jnp.int32)[None, :])
+                u = _token_uniforms(key_r, uid)
+                sweep_args = tq + (z_q_in, n_td[0], n_wt_q, n_t_local, u,
+                                   alpha, beta, beta_bar)
+                if k0 > 0:
+                    halves = dict(
+                        first=dict(cell_start=0, num_cells=k0),
+                        second=dict(cell_start=k0, num_cells=k - k0))
+            pipelined = (r0 if ragged else k0) > 0
+            if pipelined:
                 # Pipelined: sweep the first half-queue, hop its blocks
                 # right away — nothing consumes the shifted value until the
                 # next round, so the collective can run concurrently with
                 # the second half's sweep (one extra ppermute per round,
                 # but off the critical path).
                 z_h0, n_td0, nwt_h0, n_t_local = queue_fn(
-                    *tq, z_q_in, n_td[0], n_wt_q, n_t_local, u,
-                    alpha, beta, beta_bar, cell_start=0, num_cells=k0)
+                    *sweep_args, **halves["first"])
                 nwt_h0 = _ring_shift_down(nwt_h0, ring_axes, sizes)
+                args2 = (sweep_args[:5] + (n_td0, n_wt_q, n_t_local)
+                         + sweep_args[8:])
                 z_h1, n_td0, nwt_h1, n_t_local = queue_fn(
-                    *tq, z_q_in, n_td0, n_wt_q, n_t_local, u,
-                    alpha, beta, beta_bar, cell_start=k0, num_cells=k - k0)
+                    *args2, **halves["second"])
                 z_q = jnp.concatenate([z_h0, z_h1], axis=0)
             else:
-                z_q, n_td0, nwt_swept, n_t_local = queue_fn(
-                    *tq, z_q_in, n_td[0], n_wt_q, n_t_local, u,
-                    alpha, beta, beta_bar)
+                z_q, n_td0, nwt_swept, n_t_local = queue_fn(*sweep_args)
             n_td = n_td0[None]
-            z = lax.dynamic_update_slice_in_dim(z[0], z_q, b0, axis=0)[None]
+            if ragged:
+                z = lax.dynamic_update_slice_in_dim(
+                    z[0], z_q[None], c, axis=0)[None]
+            else:
+                z = lax.dynamic_update_slice_in_dim(
+                    z[0], z_q, b0, axis=0)[None]
             delta_mine = delta_mine + (n_t_local - n_t_before)
 
             # --- s synchronization ---------------------------------------
@@ -346,7 +534,7 @@ def nomad_sweep_fn(mesh: Mesh, ring_axes: Sequence[str], *,
             # "stale": nothing until sweep end.
 
             # --- rotate the remaining nomadic payloads --------------------
-            if k0 > 0:
+            if pipelined:
                 nwt_h1, s_tok = _ring_shift_down((nwt_h1, s_tok),
                                                  ring_axes, sizes)
                 n_wt_q = jnp.concatenate([nwt_h0, nwt_h1], axis=0)
@@ -373,10 +561,14 @@ def nomad_sweep_fn(mesh: Mesh, ring_axes: Sequence[str], *,
     out_specs = (spec_tok, spec_td, spec_wt, spec_rep)
     if collect_lag:
         out_specs += (P(None, tuple(ring_axes), None, None),)
+    in_specs = (spec_tok, spec_tok, spec_tok, spec_tok,
+                spec_tok, spec_td, spec_wt, spec_rep, spec_rep)
+    if ragged:
+        # trailing cell_of_tile + tok_slot, sharded with the token streams
+        in_specs += (spec_tok, spec_tok)
     fn = shard_map(
         worker_fn, mesh=mesh,
-        in_specs=(spec_tok, spec_tok, spec_tok, spec_tok,
-                  spec_tok, spec_td, spec_wt, spec_rep, spec_rep),
+        in_specs=in_specs,
         out_specs=out_specs,
         check_vma=False)
     return jax.jit(fn)
@@ -395,7 +587,10 @@ class NomadLDA:
     ``inner_mode="fused"`` Pallas path on TPU and interprets it elsewhere.
     ``ring_mode="pipelined"`` overlaps each round's first half-queue hop
     with the second half's sweep — bit-identical chain to ``"barrier"``
-    (see :func:`nomad_sweep_fn`).
+    (see :func:`nomad_sweep_fn`).  The token geometry follows the layout:
+    ``build_layout(layout="ragged")`` swaps the padded cell grid for the
+    ragged tile streams (bit-identical chain again), which keeps
+    pad_fraction — and throughput — independent of ``B``.
     """
     mesh: Mesh
     ring_axes: tuple
@@ -421,7 +616,9 @@ class NomadLDA:
             self.mesh, self.ring_axes, B=lay.B, T=lay.T,
             alpha=self.alpha, beta=self.beta, beta_bar=self.beta_bar,
             sync_mode=self.sync_mode, inner_mode=self.inner_mode,
-            ring_mode=self.ring_mode, interpret=self.interpret)
+            ring_mode=self.ring_mode, interpret=self.interpret,
+            layout_kind=lay.kind, tile=lay.tile, n_tiles=lay.n_tiles,
+            tile_split=lay.tile_split, rng_stride=lay.L)
         ring = tuple(self.ring_axes)
         self._sh_tok = NamedSharding(self.mesh, P(ring, None, None))
         self._sh_rep = NamedSharding(self.mesh, P())
@@ -430,17 +627,17 @@ class NomadLDA:
     def init_arrays(self, seed: int = 0):
         lay = self.layout
         rng = np.random.default_rng(seed)
-        z = np.where(lay.tok_valid,
-                     rng.integers(0, lay.T, lay.tok_valid.shape),
-                     0).astype(np.int32)
+        # Initial assignments are drawn in canonical token order — the same
+        # per-token values whichever geometry (dense/ragged) carries them,
+        # so sweeps over the two layouts start from the identical chain.
+        z_canon = rng.integers(0, lay.T,
+                               lay.canon_idx.shape[0]).astype(np.int32)
         n_td = np.zeros((lay.W, lay.I_max, lay.T), np.int32)
         n_wt = np.zeros((lay.B, lay.J_max, lay.T), np.int32)
-        n_t = np.zeros((lay.T,), np.int64)
-        w_idx, b_idx, l_idx = np.nonzero(lay.tok_valid)
-        zz = z[w_idx, b_idx, l_idx]
-        np.add.at(n_td, (w_idx, lay.tok_doc[w_idx, b_idx, l_idx], zz), 1)
-        np.add.at(n_wt, (b_idx, lay.tok_wrd[w_idx, b_idx, l_idx], zz), 1)
-        np.add.at(n_t, zz, 1)
+        w_idx, b_idx, d_idx, j_idx = lay.token_coords()
+        np.add.at(n_td, (w_idx, d_idx, z_canon), 1)
+        np.add.at(n_wt, (b_idx, j_idx, z_canon), 1)
+        n_t = np.bincount(z_canon, minlength=lay.T)
 
         put = lambda a, sh: jax.device_put(a, sh)
         arrays = dict(
@@ -448,18 +645,24 @@ class NomadLDA:
             tok_wrd=put(lay.tok_wrd, self._sh_tok),
             tok_valid=put(lay.tok_valid, self._sh_tok),
             tok_bound=put(lay.tok_bound, self._sh_tok),
-            z=put(z, self._sh_tok),
+            z=put(lay.place_canonical(z_canon), self._sh_tok),
             n_td=put(n_td, self._sh_tok),
             n_wt=put(n_wt, self._sh_tok),
             n_t=put(n_t.astype(np.int32), self._sh_rep),
         )
+        if lay.kind == "ragged":
+            arrays.update(
+                cell_of_tile=put(lay.cell_of_tile, self._sh_tok),
+                tok_slot=put(lay.tok_slot, self._sh_tok))
         return arrays
 
     def sweep(self, arrays: dict, seed: int) -> dict:
-        z, n_td, n_wt, n_t = self._sweep(
-            arrays["tok_doc"], arrays["tok_wrd"], arrays["tok_valid"],
-            arrays["tok_bound"], arrays["z"], arrays["n_td"],
-            arrays["n_wt"], arrays["n_t"], jnp.int32(seed))
+        args = (arrays["tok_doc"], arrays["tok_wrd"], arrays["tok_valid"],
+                arrays["tok_bound"], arrays["z"], arrays["n_td"],
+                arrays["n_wt"], arrays["n_t"], jnp.int32(seed))
+        if self.layout.kind == "ragged":
+            args += (arrays["cell_of_tile"], arrays["tok_slot"])
+        z, n_td, n_wt, n_t = self._sweep(*args)
         out = dict(arrays)
         out.update(z=z, n_td=n_td, n_wt=n_wt, n_t=n_t)
         return out

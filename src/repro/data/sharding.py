@@ -11,14 +11,32 @@ power-law skew of word frequencies; on a lock-step TPU mesh we instead
 balance statically — greedy LPT bin-packing of documents by length and of
 words by corpus frequency — and measure the residual imbalance.
 
-All outputs are dense, padded numpy arrays ready to become sharded
-``jax.Array``s:
+Two token geometries (``layout=``, DESIGN.md §4/§7), both plain numpy
+arrays ready to become sharded ``jax.Array``s:
+
+``"dense"`` — the padded cell grid: every cell padded to the globally
+heaviest cell length ``L``:
 
     tok_doc   (W, B, L) int32   local doc index (within worker shard)
     tok_wrd   (W, B, L) int32   local word index (within block)
     tok_gwrd  (W, B, L) int32   global word id (diagnostics)
     tok_valid (W, B, L) bool    padding mask
     tok_bound (W, B, L) bool    first occurrence of a word within the cell
+
+``"ragged"`` — the CSR-style tile stream: per (worker, ring chunk) the
+chunk's ``k`` cells are concatenated into ONE stream of ``tile``-token
+tiles, each cell padded only up to its next tile multiple (and each
+pipelined half-queue padded to its own global tile max, so the half split
+is a *static tile split*).  Same five ``tok_*`` arrays with shape
+``(W, W, S)`` — axis 1 is the ring *chunk* id, ``S = n_tiles·tile`` — plus
+
+    cell_of_tile (W, W, n_tiles) int32  queue-local cell (0..k-1) per tile
+    tok_slot     (W, W, S)       int32  slot of the token within its cell
+
+Both layouts order valid tokens identically (by worker, block, word id) —
+the *canonical* token order, recorded in ``canon_idx`` — so the per-token
+Gibbs chain is bit-identical across layouts (the nomad sweep derives its
+uniforms and initial ``z`` from canonical coordinates, ``core/nomad.py``).
 """
 from __future__ import annotations
 
@@ -29,7 +47,30 @@ import numpy as np
 from repro.data.corpus import Corpus
 
 __all__ = ["NomadLayout", "counts_from_layout", "lpt_assign",
-           "build_layout", "half_queue_split"]
+           "build_layout", "half_queue_split", "default_ragged_tile"]
+
+
+def _pow2_ceil(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+def default_ragged_tile(cell_sizes: np.ndarray) -> int:
+    """Default ragged token-tile size: ~a quarter of the mean occupied
+    cell load, rounded to a power of two and clamped to [8, 256].
+
+    Per-cell padding in the ragged stream is < one tile, so a tile well
+    under the typical cell keeps pad_fraction small at any ``B`` — and
+    because the mean cell shrinks with ``B``, the chosen tile shrinks
+    too, keeping the per-round *slot* count (the work the kernel actually
+    sweeps) roughly flat in ``B`` instead of favouring small ``B``.  The
+    256 ceiling matches the fused kernel's native ``N_BLK`` so
+    large-scale layouts land on the TPU-friendly tile, and the floor of
+    8 keeps the tile count (one grid step each) from exploding on tiny
+    corpora.
+    """
+    occupied = cell_sizes[cell_sizes > 0]
+    mean = float(occupied.mean()) if occupied.size else 1.0
+    return int(min(max(_pow2_ceil(max(int(mean) // 4, 1)), 8), 256))
 
 
 def half_queue_split(k: int) -> int:
@@ -49,7 +90,9 @@ def half_queue_split(k: int) -> int:
 
 
 def _order_bins_for_halves(bins: np.ndarray, weights: np.ndarray,
-                           kq: int, k0: int) -> np.ndarray:
+                           kq: int, k0: int,
+                           worker_loads: np.ndarray | None = None
+                           ) -> np.ndarray:
     """Renumber a chunk's ``kq`` LPT bins so the pipelined half-queues
     ``[0, k0)`` and ``[k0, kq)`` are load-matched.
 
@@ -58,7 +101,18 @@ def _order_bins_for_halves(bins: np.ndarray, weights: np.ndarray,
     wrong half the pipelined ring would have nothing to overlap.  Greedy
     capacity-constrained partition (heaviest bin to the lighter half with
     room) keeps ``|half0 − half1| ≤ max bin load`` — the best any
-    block-granular split can do.  Returns the remapped bin assignment.
+    block-granular split can do.
+
+    ``worker_loads`` (``(W, kq)`` per-worker bin loads) refines the choice:
+    among the partitions that respect the greedy global-gap bound, pick the
+    one minimizing ``max_w half0 + max_w half1`` — the quantity the ragged
+    layout's stream capacity pays, since each half is padded to its
+    heaviest (worker, chunk) occurrence (DESIGN.md §4).  Global halves can
+    be perfectly matched while one worker's halves are badly skewed, so
+    the global objective alone leaves real padding on the table.  The
+    search enumerates subsets when that is cheap and keeps the greedy
+    answer otherwise; the bound invariant is unchanged either way.
+    Returns the remapped bin assignment.
     """
     loads = np.bincount(bins, weights=weights, minlength=kq)
     h0, h1 = [], []
@@ -72,6 +126,25 @@ def _order_bins_for_halves(bins: np.ndarray, weights: np.ndarray,
             h0.append(b); l0 += loads[b]
         else:
             h1.append(b); l1 += loads[b]
+
+    from math import comb
+    if worker_loads is not None and 0 < k0 < kq and comb(kq, k0) <= 20000:
+        from itertools import combinations
+        gap_bound = max(abs(l0 - l1), float(loads.max()))
+        best = (float(worker_loads[:, h0].sum(1).max()
+                      + worker_loads[:, h1].sum(1).max()),
+                abs(l0 - l1))
+        for sub in combinations(range(kq), k0):
+            s = np.array(sub)
+            gap = abs(2.0 * loads[s].sum() - loads.sum())
+            if gap > gap_bound:
+                continue
+            r = np.setdiff1d(np.arange(kq), s, assume_unique=True)
+            key = (float(worker_loads[:, s].sum(1).max()
+                         + worker_loads[:, r].sum(1).max()), gap)
+            if key < best:
+                best, h0, h1 = key, list(s), list(r)
+
     perm = np.empty(kq, np.int64)
     perm[np.array(h0 + h1, np.int64)] = np.arange(kq)   # old bin → new id
     return perm[bins].astype(bins.dtype)
@@ -110,17 +183,25 @@ class NomadLayout:
     paper's actual choice — finer blocks shrink the per-block vocabulary
     (the fused kernel's VMEM page) and, thanks to the hierarchical LPT in
     :func:`build_layout`, cost nothing in round balance.
+
+    ``kind`` selects the token geometry (module docstring): ``"dense"``
+    token arrays are ``(W, B, L)`` cell rows; ``"ragged"`` token arrays are
+    ``(W, W, S)`` per-chunk tile streams with ``S = n_tiles·tile``,
+    ``tile_split`` tiles covering the pipelined first half-queue, and the
+    ``cell_of_tile``/``tok_slot`` side arrays.  ``L`` is always the true
+    heaviest cell size — the dense pad length AND the canonical slot
+    stride both layouts derive per-token RNG ids from.
     """
     W: int                       # workers (ring length)
     B: int                       # word blocks (multiple of W)
-    L: int                       # padded cell length
+    L: int                       # heaviest cell (dense pad len / RNG stride)
     T: int                       # topics
     num_words: int               # true vocabulary size J (for β̄)
-    tok_doc: np.ndarray          # (W,B,L) int32 local doc index
-    tok_wrd: np.ndarray          # (W,B,L) int32 local word index in block
-    tok_gwrd: np.ndarray         # (W,B,L) int32 global word id
-    tok_valid: np.ndarray        # (W,B,L) bool
-    tok_bound: np.ndarray        # (W,B,L) bool
+    tok_doc: np.ndarray          # (W,B,L)|(W,W,S) int32 local doc index
+    tok_wrd: np.ndarray          # (W,B,L)|(W,W,S) int32 local word in block
+    tok_gwrd: np.ndarray         # (W,B,L)|(W,W,S) int32 global word id
+    tok_valid: np.ndarray        # (W,B,L)|(W,W,S) bool
+    tok_bound: np.ndarray        # (W,B,L)|(W,W,S) bool
     doc_of_worker: np.ndarray    # (W, I_max) int32 global doc id (-1 pad)
     word_of_block: np.ndarray    # (B, J_max) int32 global word id (-1 pad)
     I_max: int                   # padded docs per worker
@@ -128,6 +209,14 @@ class NomadLayout:
     doc_assign: np.ndarray       # (I,) worker of each document
     word_assign: np.ndarray      # (J,) block of each word
     cell_sizes: np.ndarray       # (W,B) true token counts (imbalance stats)
+    canon_idx: np.ndarray        # (N,) int64 flat tok_* position of each
+                                 #   token in canonical (w, block, word) order
+    kind: str = "dense"          # token geometry: "dense" | "ragged"
+    tile: int = 0                # ragged: tokens per tile
+    n_tiles: int = 0             # ragged: tiles per (worker, chunk) stream
+    tile_split: int = 0          # ragged: first-half tiles (pipelined split)
+    cell_of_tile: np.ndarray | None = None   # ragged (W,W,n_tiles) int32
+    tok_slot: np.ndarray | None = None       # ragged (W,W,S) int32
 
     @property
     def k(self) -> int:
@@ -135,8 +224,68 @@ class NomadLayout:
         return self.B // self.W
 
     @property
+    def stream_len(self) -> int:
+        """Ragged: tokens per (worker, chunk) stream (``n_tiles·tile``)."""
+        return self.n_tiles * self.tile
+
+    @property
     def pad_fraction(self) -> float:
-        return 1.0 - self.cell_sizes.sum() / (self.W * self.B * self.L)
+        """Padding overhead of this layout's actual token capacity: the
+        dense grid's ``W·B·L`` slots, or the ragged streams' ``W·W·S``."""
+        slots = (self.W * self.W * self.stream_len
+                 if self.kind == "ragged" else self.W * self.B * self.L)
+        return 1.0 - self.cell_sizes.sum() / slots
+
+    @property
+    def total_tiles(self) -> int:
+        """Token tiles one full sweep runs through the fused kernel: the
+        ragged streams' tile count, or the dense grid's ``L`` padded to the
+        kernel's native ``N_BLK`` (the dense kernel tiles at call time)."""
+        if self.kind == "ragged":
+            return self.W * self.W * self.n_tiles
+        from repro.kernels.fused_sweep.fused_sweep import N_BLK
+        return self.W * self.B * -(-self.L // N_BLK)
+
+    # -- canonical token order ------------------------------------------------
+    def extract_canonical(self, a: np.ndarray) -> np.ndarray:
+        """Values of a token-geometry array at the valid tokens, in
+        canonical (worker, block, word, occurrence) order — identical
+        across layouts, the basis of every cross-layout comparison."""
+        return np.asarray(a).reshape(-1)[self.canon_idx]
+
+    def place_canonical(self, vals: np.ndarray, fill=0) -> np.ndarray:
+        """Scatter canonical-order per-token values into this layout's
+        token geometry (padding slots get ``fill``)."""
+        out = np.full(self.tok_doc.shape, fill, np.asarray(vals).dtype)
+        out.reshape(-1)[self.canon_idx] = vals
+        return out
+
+    def token_coords(self):
+        """Canonical-order (worker, block, local_doc, local_word) of every
+        token, derived purely from the layout arrays."""
+        flat = lambda a: self.extract_canonical(a)
+        if self.kind == "ragged":
+            S = self.stream_len
+            w = self.canon_idx // (self.W * S)
+            c = (self.canon_idx // S) % self.W
+            cell = np.repeat(self.cell_of_tile, self.tile,
+                             axis=2).reshape(-1)[self.canon_idx]
+            b = c * self.k + cell
+        else:
+            w = self.canon_idx // (self.B * self.L)
+            b = (self.canon_idx // self.L) % self.B
+        return w, b, flat(self.tok_doc), flat(self.tok_wrd)
+
+    def token_globals(self):
+        """Canonical-order (global doc id, global word id) per token."""
+        w, b, d, j = self.token_coords()
+        return self.doc_of_worker[w, d], self.word_of_block[b, j]
+
+    def word_map_mismatches(self) -> int:
+        """Tokens whose stored global word id disagrees with the
+        block/local maps — the layout self-consistency diagnostic."""
+        _, gwrd = self.token_globals()
+        return int((gwrd != self.extract_canonical(self.tok_gwrd)).sum())
 
     @property
     def round_imbalance(self) -> float:
@@ -191,16 +340,15 @@ class NomadLayout:
 
 
 def counts_from_layout(lay: NomadLayout, z: np.ndarray, T: int):
-    """Rebuild compact global ``(n_td, n_wt, n_t)`` from the padded
-    assignment grid ``z`` (W,B,L) — the single oracle every distributed
-    exactness check compares ``NomadLDA.global_counts`` against.
+    """Rebuild compact global ``(n_td, n_wt, n_t)`` from the assignment
+    array ``z`` in the layout's token geometry (dense grid or ragged
+    streams) — the single oracle every distributed exactness check
+    compares ``NomadLDA.global_counts`` against.
 
     (Distinct from :func:`repro.core.cgs.counts_from_assignments`, which
     rebuilds from the flat serial corpus arrays.)"""
-    w_idx, b_idx, l_idx = np.nonzero(lay.tok_valid)
-    zz = z[w_idx, b_idx, l_idx]
-    gdoc = lay.doc_of_worker[w_idx, lay.tok_doc[w_idx, b_idx, l_idx]]
-    gwrd = lay.word_of_block[b_idx, lay.tok_wrd[w_idx, b_idx, l_idx]]
+    zz = lay.extract_canonical(z)
+    gdoc, gwrd = lay.token_globals()
     I = int((lay.doc_of_worker >= 0).sum())
     n_td = np.zeros((I, T), np.int64)
     n_wt = np.zeros((lay.num_words, T), np.int64)
@@ -211,9 +359,21 @@ def counts_from_layout(lay: NomadLayout, z: np.ndarray, T: int):
 
 def build_layout(corpus: Corpus, *, n_workers: int, T: int,
                  n_blocks: int | None = None,
-                 balance: bool = True, seed: int = 0) -> NomadLayout:
+                 balance: bool = True, seed: int = 0,
+                 layout: str = "dense",
+                 tile: int | None = None) -> NomadLayout:
+    """Partition ``corpus`` into the nomad cell grid.
+
+    ``layout="dense"`` pads every cell to the heaviest cell's length;
+    ``layout="ragged"`` builds per-(worker, chunk) tile streams with
+    per-cell padding only up to the next ``tile`` multiple (default
+    :func:`default_ragged_tile`).  Word/doc assignment, cell membership
+    and the canonical token order are identical in both layouts.
+    """
     B = n_workers if n_blocks is None else n_blocks
     W = n_workers
+    if layout not in ("dense", "ragged"):
+        raise ValueError(f"unknown layout {layout!r} (dense|ragged)")
     if B % W != 0 or B < W:
         raise ValueError(
             f"n_blocks must be a positive multiple of n_workers so each "
@@ -232,6 +392,12 @@ def build_layout(corpus: Corpus, *, n_workers: int, T: int,
     else:
         kq = B // W
         k0 = half_queue_split(kq)
+        # per-worker word frequencies: the half ordering balances not just
+        # the chunk's global halves but each worker's (identically for
+        # both layouts — the ragged streams pad each half to its heaviest
+        # per-worker occurrence)
+        freq_w = np.zeros((W, corpus.num_words), np.int64)
+        np.add.at(freq_w, (doc_assign[corpus.doc_ids], corpus.word_ids), 1)
         word_assign = np.zeros_like(chunk_assign)
         for c in range(W):
             ids = np.nonzero(chunk_assign == c)[0]
@@ -239,7 +405,9 @@ def build_layout(corpus: Corpus, *, n_workers: int, T: int,
             if balance and k0 > 0:
                 # order blocks within the chunk so the pipelined ring's
                 # half-queues [0, k0) / [k0, kq) are load-matched
-                bins = _order_bins_for_halves(bins, freqs[ids], kq, k0)
+                wl = np.stack([np.bincount(bins, weights=freq_w[w, ids],
+                                           minlength=kq) for w in range(W)])
+                bins = _order_bins_for_halves(bins, freqs[ids], kq, k0, wl)
             word_assign[ids] = c * kq + bins
 
     # Local doc / word index maps.
@@ -270,37 +438,80 @@ def build_layout(corpus: Corpus, *, n_workers: int, T: int,
     np.add.at(cell_sizes, (sw, sb), 1)
     L = max(int(cell_sizes.max()), 1)
 
-    tok_doc = np.zeros((W, B, L), np.int32)
-    tok_wrd = np.zeros((W, B, L), np.int32)
-    tok_gwrd = np.zeros((W, B, L), np.int32)
-    tok_valid = np.zeros((W, B, L), bool)
-    tok_bound = np.zeros((W, B, L), bool)
-
-    # slot index of each token within its cell
+    # slot index of each token within its cell (canonical order is the
+    # lexsorted order itself: by worker, block, word id, occurrence)
     flat_cell = sw.astype(np.int64) * B + sb
-    # stable running count per cell
     slot = _running_count(flat_cell)
-    tok_doc[sw, sb, slot] = doc_local[sdoc]
-    tok_wrd[sw, sb, slot] = word_local[swrd]
-    tok_gwrd[sw, sb, slot] = swrd
-    tok_valid[sw, sb, slot] = True
     # word boundary within cell: first slot, or word differs from previous
     prev_same_cell = np.zeros_like(flat_cell, bool)
     prev_same_cell[1:] = flat_cell[1:] == flat_cell[:-1]
     prev_same_word = np.zeros_like(flat_cell, bool)
     prev_same_word[1:] = swrd[1:] == swrd[:-1]
     bound = ~(prev_same_cell & prev_same_word)
-    tok_bound[sw, sb, slot] = bound
-    # padding slots: mark as boundary=False, doc/wrd 0 (masked in the sweep)
 
-    return NomadLayout(
+    common = dict(
         W=W, B=B, L=L, T=T, num_words=corpus.num_words,
-        tok_doc=tok_doc, tok_wrd=tok_wrd, tok_gwrd=tok_gwrd,
-        tok_valid=tok_valid, tok_bound=tok_bound,
         doc_of_worker=doc_of_worker, word_of_block=word_of_block,
         I_max=I_max, J_max=J_max,
         doc_assign=doc_assign, word_assign=word_assign,
         cell_sizes=cell_sizes)
+
+    if layout == "dense":
+        # flat position of each canonical token in the (W, B, L) grid
+        canon_idx = (sw.astype(np.int64) * B + sb) * L + slot
+        shape = (W, B, L)
+        extra = {}
+    else:
+        k = B // W
+        k0 = half_queue_split(k)
+        tile = default_ragged_tile(cell_sizes) if tile is None else int(tile)
+        if tile < 1:
+            raise ValueError(f"ragged tile must be >= 1, got {tile}")
+        # Tiles per cell (empty cells keep one tile so every block is paged
+        # through the kernel exactly once per round), grouped (W, chunk, k).
+        tiles_cell = np.maximum(1, -(-cell_sizes // tile)).reshape(W, W, k)
+        half0 = tiles_cell[:, :, :k0].sum(axis=2)          # (W, W) tiles
+        half1 = tiles_cell[:, :, k0:].sum(axis=2)
+        # Each pipelined half-queue is padded to its own global tile max so
+        # the half split is one static tile index for every (w, chunk).
+        R0 = int(half0.max()) if k0 > 0 else 0
+        R1 = int(half1.max())
+        R = R0 + R1
+        S = R * tile
+        # tile offset of cell j within its (w, chunk) stream
+        start = np.cumsum(tiles_cell, axis=2) - tiles_cell
+        off = np.where(np.arange(k)[None, None, :] < k0,
+                       start, R0 + start - half0[:, :, None])
+        cell_of_tile = np.zeros((W, W, R), np.int32)
+        if k0 > 0:                     # half-padding tiles: last cell of the
+            cell_of_tile[:, :, :R0] = k0 - 1      # half (keeps the tile→cell
+        cell_of_tile[:, :, R0:] = k - 1           # map non-decreasing)
+        for w in range(W):
+            for c in range(W):
+                for j in range(k):
+                    o, n = int(off[w, c, j]), int(tiles_cell[w, c, j])
+                    cell_of_tile[w, c, o:o + n] = j
+        sc, sj = sb // k, sb % k
+        pos = off[sw, sc, sj] * tile + slot
+        canon_idx = (sw.astype(np.int64) * W + sc) * S + pos
+        shape = (W, W, S)
+        tok_slot = np.zeros(shape, np.int32)
+        tok_slot.reshape(-1)[canon_idx] = slot
+        extra = dict(kind="ragged", tile=tile, n_tiles=R, tile_split=R0,
+                     cell_of_tile=cell_of_tile, tok_slot=tok_slot)
+
+    def place(vals, dtype):
+        out = np.zeros(shape, dtype)
+        out.reshape(-1)[canon_idx] = vals
+        return out
+
+    return NomadLayout(
+        tok_doc=place(doc_local[sdoc], np.int32),
+        tok_wrd=place(word_local[swrd], np.int32),
+        tok_gwrd=place(swrd, np.int32),
+        tok_valid=place(np.ones(sw.shape[0], bool), bool),
+        tok_bound=place(bound, bool),
+        canon_idx=canon_idx, **common, **extra)
 
 
 def _running_count(groups: np.ndarray) -> np.ndarray:

@@ -1,3 +1,4 @@
 from repro.kernels.fused_sweep.ops import (default_interpret,  # noqa: F401
                                            fused_sweep_cells,
+                                           fused_sweep_ragged,
                                            fused_sweep_tokens)

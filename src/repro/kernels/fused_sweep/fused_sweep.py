@@ -39,6 +39,21 @@ Two entry points share the tile body:
   ``num_cells``) chains bit-identically with the calls for the remaining
   cells — the pipelined nomad ring sweeps half-queues this way.
 
+* :func:`fused_sweep_ragged_pallas` — the same k-cell queue as a **ragged
+  tile stream** (``NomadLayout`` ``kind="ragged"``): the dense ``(k, L)``
+  grid pads every cell to the heaviest one, so the grid's token capacity
+  blows up with ``B``; the ragged stream pads each cell only to its next
+  tile multiple and the grid flattens to ``(n_tiles,)``.  The per-tile
+  cell id rides in as a **scalar-prefetch** operand
+  (``pltpu.PrefetchScalarGridSpec``): the ``n_wt`` BlockSpec index map
+  reads ``cell_of_tile[t]`` to page the right ``(J, T)`` block, and the
+  kernel body compares ``cell_of_tile[t]`` against ``t−1``'s to detect
+  cell starts (the map is non-decreasing, so each block is paged in/out
+  exactly once).  Everything else — carried ``n_td``/``n_t``/``F``,
+  boundary rebuilds, masked no-op padding, splittability by tile range —
+  is identical to the cell-batch grid, and the chain is bit-equal to it
+  token for token.
+
 Masking follows the nomad cell-sweep convention: ``valid=False`` tokens are
 no-ops (count deltas of 0, leaf rewritten to itself, ``z`` kept), which is
 what makes arbitrary padding of the token stream safe.  ``boundary=True``
@@ -60,6 +75,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import ftree
 
@@ -305,3 +321,104 @@ def fused_sweep_cells_pallas(tok_doc: jax.Array, tok_wrd: jax.Array,
         ],
         interpret=interpret,
     )(tok_doc, tok_wrd, tok_valid, tok_bound, z, u, n_td, n_wt, n_t)
+
+
+def _ragged_kernel(T: int, n_blk: int, alpha: float, beta: float,
+                   beta_bar: float,
+                   # scalar prefetch, then inputs
+                   cot_ref,
+                   tok_doc_ref, tok_wrd_ref, tok_valid_ref, tok_bound_ref,
+                   z_in_ref, u_ref, ntd_in_ref, nwt_in_ref, nt_in_ref,
+                   # outputs
+                   z_ref, ntd_ref, nwt_ref, nt_ref, f_ref):
+    t = pl.program_id(0)
+    first = t == 0
+    # Cell start: the tile→cell map steps (it is non-decreasing, one
+    # contiguous tile run per cell) — page the cell's block into the
+    # output accumulator, exactly like the cell-batch grid's first tile.
+    cell_start = first | (cot_ref[t] != cot_ref[jnp.maximum(t - 1, 0)])
+
+    @pl.when(first)
+    def _init():
+        ntd_ref[...] = ntd_in_ref[...]
+        nt_ref[...] = nt_in_ref[...]
+        f_ref[...] = jnp.zeros((2 * T,), F32)
+
+    @pl.when(cell_start)
+    def _load_block():
+        nwt_ref[...] = nwt_in_ref[...]
+
+    z_tile, nt, F = _sweep_tile(
+        T, n_blk, alpha, beta, beta_bar,
+        tok_doc_ref[...], tok_wrd_ref[...], tok_valid_ref[...],
+        tok_bound_ref[...], z_in_ref[...], u_ref[...],
+        nt_ref[...], f_ref[...],
+        ntd_load=lambda d: ntd_ref[pl.ds(d, 1), :][0],
+        ntd_store=lambda d, row: ntd_ref.__setitem__(
+            (pl.ds(d, 1), slice(None)), row[None]),
+        nwt_load=lambda w: nwt_ref[0, pl.ds(w, 1), :][0],
+        nwt_store=lambda w, row: nwt_ref.__setitem__(
+            (0, pl.ds(w, 1), slice(None)), row[None]))
+
+    z_ref[...] = z_tile
+    nt_ref[...] = nt
+    f_ref[...] = F
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "beta", "beta_bar",
+                                             "n_blk", "interpret"))
+def fused_sweep_ragged_pallas(cell_of_tile: jax.Array,
+                              tok_doc: jax.Array, tok_wrd: jax.Array,
+                              tok_valid: jax.Array, tok_bound: jax.Array,
+                              z: jax.Array, u: jax.Array,
+                              n_td: jax.Array, n_wt: jax.Array,
+                              n_t: jax.Array, *,
+                              alpha: float, beta: float, beta_bar: float,
+                              n_blk: int, interpret: bool = True):
+    """One fused F+LDA sweep over a ragged cell stream (a nomad queue).
+
+    Shapes: tok_* / z / u are (S,) with ``S = n_tiles·n_blk``;
+    cell_of_tile (n_tiles,) i32, non-decreasing, values in [0, k);
+    n_td (I, T) i32; n_wt (k, J, T) i32, one word-topic block per cell
+    (``tok_wrd`` is block-local); n_t (T,) i32.  Tiles run in sequence
+    with ``n_td``/``n_t``/``F`` carried; tile ``t`` addresses word-topic
+    block ``cell_of_tile[t]``, paged by scalar-prefetched index map.
+    Returns (z', n_td', n_wt', n_t', F).
+    """
+    n = tok_doc.shape[0]
+    I, T = n_td.shape
+    k, J = n_wt.shape[0], n_wt.shape[1]
+    n_tiles = n // n_blk
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_tiles,),
+        in_specs=[
+            *(pl.BlockSpec((n_blk,), lambda t, cot: (t,))
+              for _ in range(6)),                          # token stream
+            pl.BlockSpec((I, T), lambda t, cot: (0, 0)),
+            pl.BlockSpec((1, J, T), lambda t, cot: (cot[t], 0, 0)),
+            pl.BlockSpec((T,), lambda t, cot: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n_blk,), lambda t, cot: (t,)),   # z'
+            pl.BlockSpec((I, T), lambda t, cot: (0, 0)),
+            pl.BlockSpec((1, J, T), lambda t, cot: (cot[t], 0, 0)),
+            pl.BlockSpec((T,), lambda t, cot: (0,)),
+            pl.BlockSpec((2 * T,), lambda t, cot: (0,)),   # final F+tree
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_ragged_kernel, T, n_blk,
+                          float(alpha), float(beta), float(beta_bar)),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((I, T), jnp.int32),
+            jax.ShapeDtypeStruct((k, J, T), jnp.int32),
+            jax.ShapeDtypeStruct((T,), jnp.int32),
+            jax.ShapeDtypeStruct((2 * T,), F32),
+        ],
+        interpret=interpret,
+    )(cell_of_tile, tok_doc, tok_wrd, tok_valid, tok_bound, z, u,
+      n_td, n_wt, n_t)

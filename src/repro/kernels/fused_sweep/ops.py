@@ -7,7 +7,8 @@ import jax.numpy as jnp
 
 from repro.kernels.fused_sweep.fused_sweep import (N_BLK,
                                                    fused_sweep_cells_pallas,
-                                                   fused_sweep_pallas)
+                                                   fused_sweep_pallas,
+                                                   fused_sweep_ragged_pallas)
 
 # Soft ceiling for the compiled path: the count tables + tree + one token
 # tile must fit on-chip (~16 MiB/core, leave headroom for double buffers).
@@ -148,3 +149,85 @@ def fused_sweep_cells(tok_doc: jax.Array, tok_wrd: jax.Array,
         alpha=float(alpha), beta=float(beta), beta_bar=float(beta_bar),
         n_blk=n_blk, interpret=interpret)
     return z_out[:, :L], n_td, n_wt, n_t, F
+
+
+def fused_sweep_ragged(tok_doc: jax.Array, tok_wrd: jax.Array,
+                       tok_valid: jax.Array, tok_bound: jax.Array,
+                       z: jax.Array, u: jax.Array, cell_of_tile: jax.Array,
+                       n_td: jax.Array, n_wt: jax.Array, n_t: jax.Array, *,
+                       alpha: float, beta: float, beta_bar: float,
+                       n_blk: int,
+                       tile_start: int = 0, num_tiles: int | None = None,
+                       cell_start: int = 0, num_cells: int | None = None,
+                       interpret: bool = True):
+    """Fused F+LDA sweep over a ragged cell stream (the nomad hot path).
+
+    ``tok_* / z / u`` are flat ``(S,)`` streams — a worker's whole
+    per-round queue with each cell padded only to the next ``n_blk``
+    multiple (``NomadLayout`` ``kind="ragged"``); ``cell_of_tile`` is the
+    non-decreasing ``(S // n_blk,)`` tile→cell map and ``n_wt`` is
+    ``(k, J, T)``, the queue's word-topic blocks.  Grid is flat
+    ``(num_tiles,)``; the map is scalar-prefetched so each tile pages the
+    right block (see :func:`fused_sweep_ragged_pallas`).
+
+    ``tile_start``/``num_tiles`` and ``cell_start``/``num_cells`` (static)
+    restrict the call to a tile range and its matching cell range — the
+    pipelined ring's half-queues at ``NomadLayout.tile_split``.  The tile
+    range must cover every cell of ``[cell_start, cell_start+num_cells)``
+    at least once (the layout builder gives every cell ≥ 1 tile) so each
+    sliced ``n_wt`` block is paged through the kernel; returned
+    ``z'``/``n_wt'`` cover only the requested ranges.  Returns
+    ``(z', n_td', n_wt', n_t', F)``.
+    """
+    I, T = n_td.shape
+    k_total, J = n_wt.shape[0], n_wt.shape[1]
+    if not _is_pow2(T):
+        raise ValueError(f"fused sweep needs a power-of-two T, got {T}")
+    S = tok_doc.shape[0]
+    if S % n_blk != 0 or cell_of_tile.shape[0] != S // n_blk:
+        raise ValueError(
+            f"ragged stream length {S} does not tile into "
+            f"{cell_of_tile.shape[0]} tiles of {n_blk}")
+    tile_start, cell_start = int(tile_start), int(cell_start)
+    r_total = cell_of_tile.shape[0]
+    nt_ = r_total - tile_start if num_tiles is None else int(num_tiles)
+    nc = k_total - cell_start if num_cells is None else int(num_cells)
+    if tile_start < 0 or nt_ < 0 or tile_start + nt_ > r_total:
+        raise ValueError(
+            f"tile range [{tile_start}, {tile_start + nt_}) outside the "
+            f"{r_total}-tile stream")
+    if cell_start < 0 or nc < 0 or cell_start + nc > k_total:
+        raise ValueError(
+            f"cell range [{cell_start}, {cell_start + nc}) outside the "
+            f"{k_total}-cell queue")
+    if (tile_start, nt_) != (0, r_total):
+        lo, hi = tile_start * n_blk, (tile_start + nt_) * n_blk
+        sub = lambda a: a[lo:hi]
+        tok_doc, tok_wrd = sub(tok_doc), sub(tok_wrd)
+        tok_valid, tok_bound = sub(tok_valid), sub(tok_bound)
+        z, u = sub(z), sub(u)
+    cot = cell_of_tile[tile_start:tile_start + nt_] - cell_start
+    if (cell_start, nc) != (0, k_total):
+        n_wt = n_wt[cell_start:cell_start + nc]
+    if nt_ == 0 or nc == 0:
+        return z, n_td, n_wt, n_t, jnp.zeros((2 * T,), jnp.float32)
+    if not interpret:
+        # Whole-array n_td in+out, ONE (J,T) word-topic block in+out (the
+        # stream is paged per tile), tree output, token tiles.
+        vmem = 2 * 4 * (I * T + J * T + T) + 4 * 2 * T + 7 * 4 * n_blk
+        if vmem > VMEM_BUDGET_BYTES:
+            raise ValueError(
+                f"fused ragged-stream state ({vmem / 2**20:.1f} MiB) "
+                f"exceeds the VMEM budget; shard docs/vocab into smaller "
+                f"nomad cells or use inner_mode='scan'")
+
+    z_out, n_td, n_wt, n_t, F = fused_sweep_ragged_pallas(
+        cot.astype(jnp.int32),
+        tok_doc.astype(jnp.int32), tok_wrd.astype(jnp.int32),
+        tok_valid.astype(jnp.int32), tok_bound.astype(jnp.int32),
+        z.astype(jnp.int32), u.astype(jnp.float32),
+        n_td.astype(jnp.int32), n_wt.astype(jnp.int32),
+        n_t.astype(jnp.int32),
+        alpha=float(alpha), beta=float(beta), beta_bar=float(beta_bar),
+        n_blk=n_blk, interpret=interpret)
+    return z_out, n_td, n_wt, n_t, F

@@ -105,3 +105,36 @@ def fused_sweep_cells_ref(tok_doc, tok_wrd, tok_valid, tok_bound, z, u,
     if not z_rows:
         return (z[:0], n_td, n_wt[:0], n_t, F)
     return (jnp.stack(z_rows), n_td, jnp.stack(nwt_rows), n_t, F)
+
+
+def fused_sweep_ragged_ref(tok_doc, tok_wrd, tok_valid, tok_bound, z, u,
+                           cell_of_tile, n_td, n_wt, n_t, *,
+                           alpha, beta, beta_bar, n_blk,
+                           tile_start=0, num_tiles=None,
+                           cell_start=0, num_cells=None):
+    """Oracle for the ragged-stream kernel — same signature/returns as
+    ``ops.fused_sweep_ragged`` (tok_* (S,); cell_of_tile (S//n_blk,);
+    n_wt (k, J, T)).
+
+    The paged per-cell blocks are emulated by flattening the queue to one
+    ``(k·J, T)`` table and addressing rows at ``cell·J + tok_wrd`` — the
+    same rows, touched by the same float ops in the same order, so the
+    kernel is pinned bit-for-bit."""
+    k_total, J, T = n_wt.shape
+    r_total = cell_of_tile.shape[0]
+    nt_ = r_total - tile_start if num_tiles is None else int(num_tiles)
+    nc = k_total - cell_start if num_cells is None else int(num_cells)
+    lo, hi = tile_start * n_blk, (tile_start + nt_) * n_blk
+    sub = lambda a: a[lo:hi]
+    cot = cell_of_tile[tile_start:tile_start + nt_] - cell_start
+    nwt_sub = n_wt[cell_start:cell_start + nc]
+    if nt_ == 0 or nc == 0:
+        return (z[:0], n_td, nwt_sub[:0], n_t,
+                jnp.zeros((2 * T,), F32))
+    cell_tok = jnp.repeat(cot, n_blk, total_repeat_length=nt_ * n_blk)
+    wrd_flat = cell_tok * J + sub(tok_wrd)
+    z_s, n_td, nwt_flat, n_t, F = fused_sweep_ref(
+        sub(tok_doc), wrd_flat, sub(tok_valid), sub(tok_bound),
+        sub(z), sub(u), n_td, nwt_sub.reshape(nc * J, T), n_t,
+        alpha=alpha, beta=beta, beta_bar=beta_bar)
+    return z_s, n_td, nwt_flat.reshape(nc, J, T), n_t, F

@@ -1,0 +1,92 @@
+"""Padding-blowup canary measurement (run as a subprocess).
+
+Usage:  python -m repro.launch.lda_canary_check [n_devices] [reps]
+
+Times the ragged nomad-fused sweep at B = W and B = 4W **interleaved in
+one process** — sweep A, sweep B, sweep A, ... — and reports the
+tokens/sec of each from the median per-sweep wall plus their ratio.
+
+The interleaving is the point: `BENCH_sweep.json`'s per-config rows come
+from separate subprocesses, and on a shared CI host the machine can be
+2-3x slower for one whole subprocess than the next, so a cross-row
+ratio gate at the 10% level is pure noise.  Alternating single sweeps
+puts both configurations through the same contention epochs, so their
+*ratio* — the quantity the canary gates, see
+``benchmarks.sweep_bench._check_canary`` — is stable even when the
+absolute numbers are not.  The dense layout's blowup this guards
+against is ~2x at B=4W and ~6x at B=16W (DESIGN.md §4): far outside
+the gate's noise floor.
+
+Both runs use ``ring_mode="barrier"`` so the comparison isolates the
+*layout* cost: at B = W the queue has one cell and the pipelined
+schedule degenerates to barrier anyway, so a pipelined B = 4W run would
+fold the second schedule's structural overhead (an extra kernel launch
+and ppermute per round — an interpret-mode artifact already tracked by
+the barrier-vs-pipelined bench rows) into the padding signal.
+
+Prints one JSON report:
+``{"tokens_per_sec_w", "tokens_per_sec_4w", "ratio_4w_over_w", ...}``.
+"""
+import json
+import os
+import sys
+
+
+def main() -> None:
+    n_dev = int(sys.argv[1]) if len(sys.argv) > 1 else 4
+    reps = int(sys.argv[2]) if len(sys.argv) > 2 else 8
+
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={n_dev} "
+        + os.environ.get("XLA_FLAGS", ""))
+
+    import time
+
+    import jax
+    import numpy as np
+
+    from repro.core.nomad import NomadLDA
+    from repro.data import synthetic
+    from repro.data.sharding import build_layout
+
+    assert len(jax.devices()) == n_dev, jax.devices()
+
+    T = 16
+    alpha, beta = 50.0 / T, 0.01
+    corpus, _, _ = synthetic.make_corpus(
+        num_docs=120, vocab_size=256, num_topics=T, mean_doc_len=30.0, seed=3)
+    mesh = jax.make_mesh((n_dev,), ("worker",))
+
+    runs = {}
+    for B in (n_dev, 4 * n_dev):
+        layout = build_layout(corpus, n_workers=n_dev, T=T, n_blocks=B,
+                              layout="ragged")
+        lda = NomadLDA(mesh=mesh, ring_axes=("worker",), layout=layout,
+                       alpha=alpha, beta=beta, sync_mode="stoken",
+                       inner_mode="fused", ring_mode="barrier")
+        arrays = lda.sweep(lda.init_arrays(seed=0), seed=0)   # compile
+        jax.block_until_ready(arrays["n_t"])
+        runs[B] = (lda, arrays, [])
+
+    for it in range(1, reps + 1):
+        for B, (lda, arrays, times) in runs.items():
+            t0 = time.perf_counter()
+            arrays = lda.sweep(arrays, seed=it)
+            jax.block_until_ready(arrays["n_t"])
+            times.append(time.perf_counter() - t0)
+            runs[B] = (lda, arrays, times)
+
+    tps = {B: corpus.num_tokens / max(float(np.median(times)), 1e-9)
+           for B, (_, _, times) in runs.items()}
+    print(json.dumps({
+        "n_devices": n_dev,
+        "reps": reps,
+        "n_tokens": int(corpus.num_tokens),
+        "tokens_per_sec_w": tps[n_dev],
+        "tokens_per_sec_4w": tps[4 * n_dev],
+        "ratio_4w_over_w": tps[4 * n_dev] / tps[n_dev],
+    }))
+
+
+if __name__ == "__main__":
+    main()

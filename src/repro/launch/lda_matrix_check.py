@@ -5,16 +5,22 @@ Usage:  python -m repro.launch.lda_matrix_check [n_devices] [n_sweeps]
 One faked-multi-device process sweeps every combination of
 ``sync_mode`` ∈ {stoken, stale, allreduce} × ``inner_mode`` ∈ {scan, fused,
 vectorized} × ``B`` ∈ {W, 2W, 4W} × ``ring_mode`` ∈ {barrier, pipelined}
-and, after each run, rebuilds the count tables from the final assignments
-``z``.  Two invariants under test (DESIGN.md §4):
+× ``layout`` ∈ {dense, ragged} and, after each run, rebuilds the count
+tables from the final assignments ``z``.  Three invariants under test
+(DESIGN.md §4):
 
 * at every sweep boundary ``global_counts`` must be **bit-equal** to the
   rebuild, for any queue length — staleness modes only reorder when ``n_t``
   information travels, never what the counts are;
 * the pipelined ring must be **bit-identical** to the barrier ring — same
-  ``z``, same ``n_wt``, same ``n_t`` — in every (sync, inner, B) cell,
-  because pipelining only moves when the first half-queue's hop is issued,
-  never the cell order or the s-token fold point.
+  ``z``, same ``n_wt``, same ``n_t`` — in every (sync, inner, B, layout)
+  cell, because pipelining only moves when the first half-queue's hop is
+  issued, never the cell order or the s-token fold point;
+* the ragged tile-stream layout must be **bit-identical** to the dense
+  cell grid — same canonical per-token ``z``, same global tables — in
+  every (sync, inner, B, ring) cell: both geometries carry the same
+  tokens in the same order with the same per-token-uid uniforms, and
+  padding slots are exact no-ops.
 
 Prints one JSON report: ``{"combos": [...], "all_exact": bool}``.
 """
@@ -48,56 +54,78 @@ def main() -> None:
 
     combos = []
     for b_mult in (1, 2, 4):
-        layout = build_layout(corpus, n_workers=n_dev, T=T,
-                              n_blocks=b_mult * n_dev)
+        layouts = {kind: build_layout(corpus, n_workers=n_dev, T=T,
+                                      n_blocks=b_mult * n_dev, layout=kind)
+                   for kind in ("dense", "ragged")}
         for sync_mode in ("stoken", "stale", "allreduce"):
             for inner_mode in ("scan", "fused", "vectorized"):
-                per_ring = {}
-                for ring_mode in ("barrier", "pipelined"):
-                    lda = NomadLDA(mesh=mesh, ring_axes=("worker",),
-                                   layout=layout, alpha=alpha, beta=beta,
-                                   sync_mode=sync_mode,
-                                   inner_mode=inner_mode,
-                                   ring_mode=ring_mode)
-                    arrays = lda.init_arrays(seed=0)
-                    for it in range(n_sweeps):
-                        arrays = lda.sweep(arrays, seed=it)
-                    n_td, n_wt, n_t = lda.global_counts(arrays)
-                    td_ref, wt_ref, t_ref = counts_from_layout(
-                        layout, np.asarray(arrays["z"]), T)
-                    per_ring[ring_mode] = (
-                        np.asarray(arrays["z"]), np.asarray(arrays["n_wt"]),
-                        np.asarray(arrays["n_t"]))
-                    combos.append({
-                        "B": layout.B, "k": layout.k,
-                        "sync_mode": sync_mode, "inner_mode": inner_mode,
-                        "ring_mode": ring_mode,
-                        "n_td_mismatch": int(np.abs(n_td - td_ref).sum()),
-                        "n_wt_mismatch": int(np.abs(n_wt - wt_ref).sum()),
-                        "n_t_mismatch": int(np.abs(n_t - t_ref).sum()),
-                        "tokens_preserved":
-                            int(n_t.sum()) == int(corpus.num_tokens),
-                    })
-                # barrier vs pipelined: the per-token chain itself must be
-                # unchanged, so z (and with it every table) is bit-equal.
-                zb, wtb, tb = per_ring["barrier"]
-                zp, wtp, tp = per_ring["pipelined"]
-                combos[-1]["vs_barrier_z_mismatch"] = int((zb != zp).sum())
-                combos[-1]["vs_barrier_n_wt_mismatch"] = (
-                    int(np.abs(wtb - wtp).sum()))
-                combos[-1]["vs_barrier_n_t_mismatch"] = (
-                    int(np.abs(tb.astype(np.int64)
-                               - tp.astype(np.int64)).sum()))
+                per_run = {}
+                for kind in ("dense", "ragged"):
+                    layout = layouts[kind]
+                    for ring_mode in ("barrier", "pipelined"):
+                        lda = NomadLDA(mesh=mesh, ring_axes=("worker",),
+                                       layout=layout, alpha=alpha, beta=beta,
+                                       sync_mode=sync_mode,
+                                       inner_mode=inner_mode,
+                                       ring_mode=ring_mode)
+                        arrays = lda.init_arrays(seed=0)
+                        for it in range(n_sweeps):
+                            arrays = lda.sweep(arrays, seed=it)
+                        n_td, n_wt, n_t = lda.global_counts(arrays)
+                        td_ref, wt_ref, t_ref = counts_from_layout(
+                            layout, np.asarray(arrays["z"]), T)
+                        # canonical per-token assignments: the layout-free
+                        # view both the ring and the layout comparisons use
+                        z_c = layout.extract_canonical(
+                            np.asarray(arrays["z"]))
+                        per_run[kind, ring_mode] = (z_c, n_wt,
+                                                    np.asarray(n_t))
+                        combos.append({
+                            "B": layout.B, "k": layout.k, "layout": kind,
+                            "sync_mode": sync_mode,
+                            "inner_mode": inner_mode,
+                            "ring_mode": ring_mode,
+                            "pad_fraction": layout.pad_fraction,
+                            "n_td_mismatch": int(np.abs(n_td - td_ref).sum()),
+                            "n_wt_mismatch": int(np.abs(n_wt - wt_ref).sum()),
+                            "n_t_mismatch": int(np.abs(n_t - t_ref).sum()),
+                            "tokens_preserved":
+                                int(n_t.sum()) == int(corpus.num_tokens),
+                        })
+                        # barrier vs pipelined (same layout): the per-token
+                        # chain itself must be unchanged.
+                        if ring_mode == "pipelined":
+                            _diff(combos[-1], "vs_barrier",
+                                  per_run[kind, "barrier"],
+                                  per_run[kind, "pipelined"])
+                        # ragged vs dense (same ring): same canonical chain
+                        # through the other token geometry.
+                        if kind == "ragged":
+                            _diff(combos[-1], "vs_dense",
+                                  per_run["dense", ring_mode],
+                                  per_run["ragged", ring_mode])
 
     all_exact = all(
         c["n_td_mismatch"] == 0 and c["n_wt_mismatch"] == 0
         and c["n_t_mismatch"] == 0 and c["tokens_preserved"]
-        and c.get("vs_barrier_z_mismatch", 0) == 0
-        and c.get("vs_barrier_n_wt_mismatch", 0) == 0
-        and c.get("vs_barrier_n_t_mismatch", 0) == 0
+        and all(c.get(f"{p}_{f}_mismatch", 0) == 0
+                for p in ("vs_barrier", "vs_dense")
+                for f in ("z", "n_wt", "n_t"))
         for c in combos)
     print(json.dumps({"n_devices": n_dev, "n_sweeps": n_sweeps,
                       "combos": combos, "all_exact": all_exact}))
+
+
+def _diff(entry: dict, prefix: str, a, b) -> None:
+    """Record mismatch counts between two runs' (canonical z, global n_wt,
+    n_t) triples under ``{prefix}_{field}_mismatch`` keys."""
+    import numpy as np
+    za, wta, ta = a
+    zb, wtb, tb = b
+    entry[f"{prefix}_z_mismatch"] = int((za != zb).sum())
+    entry[f"{prefix}_n_wt_mismatch"] = int(np.abs(wta - wtb).sum())
+    entry[f"{prefix}_n_t_mismatch"] = int(
+        np.abs(ta.astype(np.int64) - tb.astype(np.int64)).sum())
 
 
 if __name__ == "__main__":

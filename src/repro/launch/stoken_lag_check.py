@@ -13,7 +13,8 @@ moment the token is received (DESIGN.md §4).
 This check instruments one sweep with ``nomad_sweep_fn(collect_lag=True)``
 — which records, per round and worker, ``n_t_local`` after the round's
 synchronization and the cumulative own-delta ``delta_mine``, adding **no**
-collectives — and verifies, in numpy, for BOTH ring modes:
+collectives — and verifies, in numpy, for BOTH ring modes × BOTH token
+layouts (dense cell grid / ragged tile streams):
 
 * **fold schedule, exactly.**  The s token visits workers in ring order
   (holder of round ``ρ`` is ``(−ρ) mod W``), so worker ``w``'s copy at the
@@ -32,6 +33,9 @@ collectives — and verifies, in numpy, for BOTH ring modes:
 * **ring-mode equivalence.**  The pipelined ring's lag trace is
   bit-identical to the barrier ring's — pipelining moves only when the
   first half-queue's hop is issued, not what any worker's copy contains.
+* **layout equivalence.**  The ragged layout's lag trace is bit-identical
+  to the dense one's — the tile-stream geometry changes how tokens are
+  stored, not which deltas any round produces or when s folds.
 
 Prints one JSON report with per-check booleans and summary magnitudes.
 """
@@ -65,31 +69,40 @@ def main() -> None:
     corpus, _, _ = synthetic.make_corpus(
         num_docs=120, vocab_size=256, num_topics=T, mean_doc_len=30.0, seed=3)
     mesh = jax.make_mesh((n_dev,), ("worker",))
-    layout = build_layout(corpus, n_workers=n_dev, T=T, n_blocks=n_blocks)
-    k = layout.k
-
-    lda = NomadLDA(mesh=mesh, ring_axes=("worker",), layout=layout,
-                   alpha=alpha, beta=beta, sync_mode="stoken",
-                   inner_mode=inner_mode)
-    arrays = lda.init_arrays(seed=0)
-    n_t0 = np.asarray(arrays["n_t"]).astype(np.int64)
 
     diags = {}
-    for ring_mode in ("barrier", "pipelined"):
-        sweep = nomad_sweep_fn(
-            mesh, ("worker",), B=layout.B, T=T, alpha=alpha, beta=beta,
-            beta_bar=lda.beta_bar, sync_mode="stoken",
-            inner_mode=inner_mode, ring_mode=ring_mode, collect_lag=True)
-        *_, diag = sweep(
-            arrays["tok_doc"], arrays["tok_wrd"], arrays["tok_valid"],
-            arrays["tok_bound"], arrays["z"], arrays["n_td"],
-            arrays["n_wt"], arrays["n_t"], jnp.int32(0))
-        diags[ring_mode] = np.asarray(diag).astype(np.int64)
+    for kind in ("dense", "ragged"):
+        layout = build_layout(corpus, n_workers=n_dev, T=T,
+                              n_blocks=n_blocks, layout=kind)
+        k = layout.k
+        lda = NomadLDA(mesh=mesh, ring_axes=("worker",), layout=layout,
+                       alpha=alpha, beta=beta, sync_mode="stoken",
+                       inner_mode=inner_mode)
+        arrays = lda.init_arrays(seed=0)
+        n_t0 = np.asarray(arrays["n_t"]).astype(np.int64)
+        for ring_mode in ("barrier", "pipelined"):
+            sweep = nomad_sweep_fn(
+                mesh, ("worker",), B=layout.B, T=T, alpha=alpha, beta=beta,
+                beta_bar=lda.beta_bar, sync_mode="stoken",
+                inner_mode=inner_mode, ring_mode=ring_mode, collect_lag=True,
+                layout_kind=kind, tile=layout.tile, n_tiles=layout.n_tiles,
+                tile_split=layout.tile_split, rng_stride=layout.L)
+            args = (arrays["tok_doc"], arrays["tok_wrd"],
+                    arrays["tok_valid"], arrays["tok_bound"], arrays["z"],
+                    arrays["n_td"], arrays["n_wt"], arrays["n_t"],
+                    jnp.int32(0))
+            if kind == "ragged":
+                args += (arrays["cell_of_tile"], arrays["tok_slot"])
+            *_, diag = sweep(*args)
+            diags[kind, ring_mode] = np.asarray(diag).astype(np.int64)
 
     ring_modes_identical = bool(
-        (diags["barrier"] == diags["pipelined"]).all())
+        (diags["dense", "barrier"] == diags["dense", "pipelined"]).all())
+    layouts_identical = all(
+        bool((diags["dense", rm] == diags["ragged", rm]).all())
+        for rm in ("barrier", "pipelined"))
 
-    diag = diags["barrier"]               # (W_rounds, W, 2, T)
+    diag = diags["dense", "barrier"]      # (W_rounds, W, 2, T)
     local = diag[:, :, 0]                 # n_t_local after round sync
     delta = diag[:, :, 1]                 # cumulative delta_mine
     exact = n_t0[None] + delta.sum(axis=1)            # (W_rounds, T)
@@ -142,6 +155,7 @@ def main() -> None:
         "n_blocks": layout.B,
         "k": k,
         "ring_modes_identical": ring_modes_identical,
+        "layout_modes_identical": layouts_identical,
         "fold_schedule_exact": fold_schedule_exact,
         "lag_within_bound": lag_within_bound,
         "lag_nonzero": lag_nonzero,

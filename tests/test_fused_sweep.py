@@ -290,6 +290,130 @@ class TestCellBatchKernel:
                 alpha=0.5, beta=0.01, beta_bar=0.05)
 
 
+class TestRaggedStreamKernel:
+    """Flat-grid ragged stream (scalar-prefetch block paging): the same
+    queue as TestCellBatchKernel, stored CSR-style — must run the chain
+    bit-identically to the dense cell-batch grid and to its oracle."""
+
+    def _stream_setup(self, T=16, B=4, seed=11, tile=None):
+        from repro.data.sharding import build_layout
+        corpus, _, _ = synthetic.make_corpus(
+            num_docs=18, vocab_size=60, num_topics=8, mean_doc_len=12.0,
+            seed=seed)
+        dense = build_layout(corpus, n_workers=1, T=T, n_blocks=B)
+        rag = build_layout(corpus, n_workers=1, T=T, n_blocks=B,
+                           layout="ragged", tile=tile)
+        rng = np.random.default_rng(seed)
+        N = corpus.num_tokens
+        z_c = rng.integers(0, T, N).astype(np.int32)
+        u_c = rng.random(N).astype(np.float32)
+        n_td = np.zeros((rag.I_max, T), np.int32)
+        n_wt = np.zeros((B, rag.J_max, T), np.int32)
+        n_t = np.zeros((T,), np.int32)
+        _, b_i, d_i, j_i = rag.token_coords()
+        np.add.at(n_td, (d_i, z_c), 1)
+        np.add.at(n_wt, (b_i, j_i, z_c), 1)
+        np.add.at(n_t, z_c, 1)
+        i32 = lambda a: jnp.asarray(a, jnp.int32)
+
+        def mk(lay):
+            # W = 1: the dense queue is tok[0] (k, L); the ragged stream is
+            # tok[0, 0] (S,) — chunk 0 holds all k cells.
+            sel = (lambda a: a[0, 0]) if lay.kind == "ragged" \
+                else (lambda a: a[0])
+            return (i32(sel(lay.tok_doc)), i32(sel(lay.tok_wrd)),
+                    i32(sel(lay.tok_valid)), i32(sel(lay.tok_bound)),
+                    i32(sel(lay.place_canonical(z_c))),
+                    jnp.asarray(sel(lay.place_canonical(u_c))))
+        counts = (i32(n_td), i32(n_wt), i32(n_t))
+        return dense, rag, mk(dense), mk(rag), counts
+
+    def test_ragged_matches_ref_and_dense_cells(self):
+        from repro.kernels.fused_sweep import (fused_sweep_cells,
+                                               fused_sweep_ragged)
+        from repro.kernels.fused_sweep.ref import fused_sweep_ragged_ref
+        T = 16
+        dense, rag, dense_tok, rag_tok, counts = self._stream_setup(T=T)
+        kw = dict(alpha=50.0 / T, beta=0.01, beta_bar=0.01 * 60)
+        cot = jnp.asarray(rag.cell_of_tile[0, 0])
+
+        got = fused_sweep_ragged(*rag_tok, cot, *counts,
+                                 n_blk=rag.tile, **kw)
+        ref = fused_sweep_ragged_ref(*rag_tok, cot, *counts,
+                                     n_blk=rag.tile, **kw)
+        for a, b in zip(got, ref):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+        # vs the dense cell-batch kernel: per-token z and all tables equal
+        dense_out = fused_sweep_cells(*dense_tok, *counts, **kw)
+        np.testing.assert_array_equal(
+            dense.extract_canonical(np.asarray(dense_out[0])[None, :]),
+            rag.extract_canonical(np.asarray(got[0])[None, None, :]))
+        for a, b in zip(dense_out[1:4], got[1:4]):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_tile_split_chains_like_whole_stream(self):
+        """The pipelined ring's halves: tiles [0, tile_split) over cells
+        [0, k0) then the rest must reproduce the whole-stream call."""
+        from repro.data.sharding import half_queue_split
+        from repro.kernels.fused_sweep import fused_sweep_ragged
+        T = 16
+        _, rag, _, rag_tok, counts = self._stream_setup(T=T, seed=13)
+        kw = dict(alpha=50.0 / T, beta=0.01, beta_bar=0.01 * 60)
+        cot = jnp.asarray(rag.cell_of_tile[0, 0])
+        n_td, n_wt, n_t = counts
+        whole = fused_sweep_ragged(*rag_tok, cot, *counts,
+                                   n_blk=rag.tile, **kw)
+        k0, r0 = half_queue_split(rag.k), rag.tile_split
+        assert 0 < r0 < rag.n_tiles
+        z0, n_td0, nwt0, n_t0, _ = fused_sweep_ragged(
+            *rag_tok, cot, *counts, n_blk=rag.tile,
+            tile_start=0, num_tiles=r0, cell_start=0, num_cells=k0, **kw)
+        assert nwt0.shape[0] == k0
+        z1, n_td1, nwt1, n_t1, _ = fused_sweep_ragged(
+            *rag_tok, cot, n_td0, n_wt, n_t0, n_blk=rag.tile,
+            tile_start=r0, num_tiles=rag.n_tiles - r0,
+            cell_start=k0, num_cells=rag.k - k0, **kw)
+        got = (jnp.concatenate([z0, z1]), n_td1,
+               jnp.concatenate([nwt0, nwt1]), n_t1)
+        for a, b in zip(got, whole[:4]):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_tiny_tile_crosses_cell_and_tile_boundaries(self):
+        """tile=8 on word-sized cells: many grid steps per cell, page-in
+        exactly at cell starts — still bit-equal to the oracle."""
+        from repro.kernels.fused_sweep import fused_sweep_ragged
+        from repro.kernels.fused_sweep.ref import fused_sweep_ragged_ref
+        T = 16
+        _, rag, _, rag_tok, counts = self._stream_setup(T=T, seed=17,
+                                                        tile=8)
+        assert rag.tile == 8 and rag.n_tiles > rag.k
+        kw = dict(alpha=50.0 / T, beta=0.01, beta_bar=0.01 * 60)
+        cot = jnp.asarray(rag.cell_of_tile[0, 0])
+        got = fused_sweep_ragged(*rag_tok, cot, *counts, n_blk=8, **kw)
+        ref = fused_sweep_ragged_ref(*rag_tok, cot, *counts, n_blk=8, **kw)
+        for a, b in zip(got, ref):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_bad_ranges_rejected(self):
+        from repro.kernels.fused_sweep import fused_sweep_ragged
+        T = 16
+        _, rag, _, rag_tok, counts = self._stream_setup(T=T)
+        kw = dict(alpha=50.0 / T, beta=0.01, beta_bar=0.01 * 60,
+                  n_blk=rag.tile)
+        cot = jnp.asarray(rag.cell_of_tile[0, 0])
+        with pytest.raises(ValueError, match="tile range"):
+            fused_sweep_ragged(*rag_tok, cot, *counts,
+                               tile_start=0, num_tiles=rag.n_tiles + 1, **kw)
+        with pytest.raises(ValueError, match="cell range"):
+            fused_sweep_ragged(*rag_tok, cot, *counts,
+                               cell_start=rag.k, num_cells=1, **kw)
+        with pytest.raises(ValueError, match="does not tile"):
+            fused_sweep_ragged(*rag_tok, cot, *counts,
+                               alpha=kw["alpha"], beta=kw["beta"],
+                               beta_bar=kw["beta_bar"], n_blk=rag.tile + 1)
+
+
 class TestNomadFusedInnerMode:
     def test_single_device_ring_matches_scan(self):
         from repro.core.nomad import NomadLDA

@@ -33,10 +33,10 @@ def _run_module(module, *args):
 
 
 def _run_check(n_dev, sync_mode, pods=1, inner_mode="scan", n_blocks=None,
-               ring_mode="barrier"):
+               ring_mode="barrier", layout="dense"):
     return _run_module(
         "repro.launch.lda_dist_check", n_dev, sync_mode, pods, inner_mode,
-        n_dev if n_blocks is None else n_blocks, ring_mode)
+        n_dev if n_blocks is None else n_blocks, ring_mode, layout)
 
 
 class TestLayout:
@@ -155,19 +155,26 @@ class TestSingleDeviceRing:
     """W=1: the nomad machinery must reduce to serial F+LDA semantics,
     for any queue length k = B (the whole ring is one worker)."""
 
-    @pytest.mark.parametrize("n_blocks,inner_mode,ring_mode", [
-        (1, "scan", "barrier"), (4, "scan", "barrier"),
-        (4, "fused", "barrier"), (4, "vectorized", "barrier"),
-        (1, "scan", "pipelined"), (4, "scan", "pipelined"),
-        (4, "fused", "pipelined"),
+    @pytest.mark.parametrize("n_blocks,inner_mode,ring_mode,layout", [
+        (1, "scan", "barrier", "dense"), (4, "scan", "barrier", "dense"),
+        (4, "fused", "barrier", "dense"),
+        (4, "vectorized", "barrier", "dense"),
+        (1, "scan", "pipelined", "dense"), (4, "scan", "pipelined", "dense"),
+        (4, "fused", "pipelined", "dense"),
+        (1, "fused", "barrier", "ragged"), (4, "fused", "barrier", "ragged"),
+        (4, "fused", "pipelined", "ragged"),
+        (4, "scan", "pipelined", "ragged"),
+        (4, "vectorized", "barrier", "ragged"),
     ])
-    def test_invariants_and_ll(self, n_blocks, inner_mode, ring_mode):
+    def test_invariants_and_ll(self, n_blocks, inner_mode, ring_mode,
+                               layout):
         T = 8
         corpus, _, _ = synthetic.make_corpus(
             num_docs=60, vocab_size=128, num_topics=T, mean_doc_len=25.0,
             seed=4)
         mesh = jax.make_mesh((1,), ("worker",))
-        lay = build_layout(corpus, n_workers=1, T=T, n_blocks=n_blocks)
+        lay = build_layout(corpus, n_workers=1, T=T, n_blocks=n_blocks,
+                           layout=layout)
         lda = NomadLDA(mesh=mesh, ring_axes=("worker",), layout=lay,
                        alpha=50.0 / T, beta=0.01, inner_mode=inner_mode,
                        ring_mode=ring_mode)
@@ -229,6 +236,42 @@ class TestSingleDeviceRing:
                 np.asarray(res["barrier"][name]),
                 np.asarray(res["pipelined"][name]))
 
+    @pytest.mark.parametrize("inner_mode", ["scan", "fused", "vectorized"])
+    def test_ragged_is_bit_identical_to_dense(self, inner_mode):
+        """The ragged tentpole invariant, in-process: the tile-stream
+        geometry changes only where tokens sit, never the chain — the
+        canonical per-token z and every count table must be bit-equal to
+        the dense run, in both ring modes."""
+        T = 8
+        corpus, _, _ = synthetic.make_corpus(
+            num_docs=40, vocab_size=96, num_topics=T, mean_doc_len=15.0,
+            seed=12)
+        mesh = jax.make_mesh((1,), ("worker",))
+        for ring_mode in ("barrier", "pipelined"):
+            res = {}
+            for kind in ("dense", "ragged"):
+                lay = build_layout(corpus, n_workers=1, T=T, n_blocks=4,
+                                   layout=kind)
+                lda = NomadLDA(mesh=mesh, ring_axes=("worker",), layout=lay,
+                               alpha=50.0 / T, beta=0.01,
+                               inner_mode=inner_mode, ring_mode=ring_mode)
+                arrays = lda.init_arrays(seed=0)
+                for it in range(2):
+                    arrays = lda.sweep(arrays, seed=it)
+                res[kind] = (lay.extract_canonical(np.asarray(arrays["z"])),
+                             *lda.global_counts(arrays))
+            for a, b in zip(res["dense"], res["ragged"]):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_ragged_needs_tile_geometry(self):
+        """nomad_sweep_fn must reject a ragged request without the
+        layout's static tile geometry."""
+        from repro.core.nomad import nomad_sweep_fn
+        mesh = jax.make_mesh((1,), ("worker",))
+        with pytest.raises(ValueError, match="tile geometry"):
+            nomad_sweep_fn(mesh, ("worker",), B=4, T=8, alpha=1.0,
+                           beta=0.01, beta_bar=0.64, layout_kind="ragged")
+
     def test_mismatched_layout_rejected(self):
         corpus, _, _ = synthetic.make_corpus(
             num_docs=20, vocab_size=64, num_topics=8, mean_doc_len=10.0,
@@ -282,16 +325,36 @@ class TestMultiDevice:
         assert rep["n_t_mismatch"] == 0, rep
         assert rep["ll_improved"], rep["ll"]
 
-    @pytest.mark.parametrize("inner_mode,ring_mode", [
-        ("scan", "barrier"), ("fused", "barrier"),
-        ("scan", "pipelined"), ("fused", "pipelined"),
+    @pytest.mark.parametrize("inner_mode,ring_mode,layout", [
+        ("scan", "barrier", "dense"), ("fused", "barrier", "dense"),
+        ("scan", "pipelined", "dense"), ("fused", "pipelined", "dense"),
+        ("fused", "barrier", "ragged"), ("fused", "pipelined", "ragged"),
     ])
-    def test_block_queue_ring(self, inner_mode, ring_mode):
+    def test_block_queue_ring(self, inner_mode, ring_mode, layout):
         """B = 4W: each worker circulates a 4-block queue; counts must stay
-        exact and the chain must still mix — in both ring schedules."""
+        exact and the chain must still mix — in both ring schedules and
+        both token layouts."""
         rep = _run_check(4, "stoken", inner_mode=inner_mode, n_blocks=16,
-                         ring_mode=ring_mode)
+                         ring_mode=ring_mode, layout=layout)
         assert rep["blocks_per_worker"] == 4
+        assert rep["layout"] == layout
+        assert rep["n_td_mismatch"] == 0, rep
+        assert rep["n_wt_mismatch"] == 0, rep
+        assert rep["n_t_mismatch"] == 0, rep
+        assert rep["ll_improved"], rep["ll"]
+        if layout == "ragged":
+            # the tile streams must actually be leaner than the dense grid
+            dense = _run_check(4, "stoken", inner_mode=inner_mode,
+                               n_blocks=16, ring_mode=ring_mode)
+            assert rep["pad_fraction"] < dense["pad_fraction"], (
+                rep["pad_fraction"], dense["pad_fraction"])
+
+    @pytest.mark.parametrize("ring_mode", ["barrier", "pipelined"])
+    def test_multipod_ragged_ring(self, ring_mode):
+        """2 pods × 2 workers on the ragged streams: the wrap-around queue
+        hop must cross the pod axis exactly with the tile geometry too."""
+        rep = _run_check(4, "stoken", pods=2, n_blocks=8,
+                         ring_mode=ring_mode, layout="ragged")
         assert rep["n_td_mismatch"] == 0, rep
         assert rep["n_wt_mismatch"] == 0, rep
         assert rep["n_t_mismatch"] == 0, rep
@@ -322,22 +385,28 @@ class TestMultiDevice:
         assert "multiple" in out.stderr
 
     def test_exactness_matrix(self):
-        """The full sync × inner × B × ring matrix on the 8-device mesh:
-        global counts bit-equal to a rebuild from z in every combination,
-        and the pipelined ring bit-equal to the barrier ring in every
-        (sync, inner, B) cell."""
+        """The full sync × inner × B × ring × layout matrix on the
+        8-device mesh: global counts bit-equal to a rebuild from z in
+        every combination, the pipelined ring bit-equal to the barrier
+        ring in every (sync, inner, B, layout) cell, and the ragged
+        layout bit-equal to the dense one in every (sync, inner, B, ring)
+        cell."""
         rep = _run_module("repro.launch.lda_matrix_check", 8, 2)
-        assert len(rep["combos"]) == 54
-        rings = {c["ring_mode"] for c in rep["combos"]}
-        assert rings == {"barrier", "pipelined"}
-        cross = [c for c in rep["combos"] if "vs_barrier_z_mismatch" in c]
-        assert len(cross) == 27
+        assert len(rep["combos"]) == 108
+        assert {c["ring_mode"] for c in rep["combos"]} == \
+            {"barrier", "pipelined"}
+        assert {c["layout"] for c in rep["combos"]} == {"dense", "ragged"}
+        cross_ring = [c for c in rep["combos"]
+                      if "vs_barrier_z_mismatch" in c]
+        cross_layout = [c for c in rep["combos"]
+                        if "vs_dense_z_mismatch" in c]
+        assert len(cross_ring) == 54 and len(cross_layout) == 54
         bad = [c for c in rep["combos"]
                if c["n_td_mismatch"] or c["n_wt_mismatch"]
                or c["n_t_mismatch"] or not c["tokens_preserved"]
-               or c.get("vs_barrier_z_mismatch", 0)
-               or c.get("vs_barrier_n_wt_mismatch", 0)
-               or c.get("vs_barrier_n_t_mismatch", 0)]
+               or any(c.get(f"{p}_{f}_mismatch", 0)
+                      for p in ("vs_barrier", "vs_dense")
+                      for f in ("z", "n_wt", "n_t"))]
         assert rep["all_exact"], bad
 
 
@@ -386,3 +455,4 @@ class TestStokenStaleness:
         assert rep["documented_bound_ok"], rep
         assert rep["fold_window_rounds_max"] <= rep["n_devices"] - 1, rep
         assert rep["ring_modes_identical"], rep
+        assert rep["layout_modes_identical"], rep

@@ -10,7 +10,11 @@ The block count ``B`` is supposed to be a *free* scaling knob (DESIGN.md
   per sweep, and the layout places every corpus token exactly once;
 * the pipelined half-queues partition each queue and are load-matched to
   within one block's load (``_order_bins_for_halves``);
-* any ``B`` that is not a positive multiple of ``W`` is rejected.
+* any ``B`` that is not a positive multiple of ``W`` is rejected;
+* the ragged tile-stream layout carries the identical canonical token
+  sequence as the dense grid, pads at most one tile per cell (so its
+  pad_fraction is bounded by the tile size independent of ``B``), and
+  realizes the pipelined half split as one static tile index.
 
 Runs under real ``hypothesis`` when installed — CI servers export
 ``REPRO_CI_INSTALL_HYPOTHESIS=1`` so ``tools/ci.sh`` installs it and these
@@ -103,3 +107,99 @@ class TestHierarchicalLPT:
         corpus = _corpus(20, 64, seed)
         with pytest.raises(ValueError, match="multiple"):
             build_layout(corpus, n_workers=W, T=8, n_blocks=B)
+
+
+class TestRaggedLayout:
+    """The ragged tile streams must carry exactly the dense grid's tokens
+    (same cells, same in-cell order), with padding bounded by the tile
+    size per cell — the property that keeps pad_fraction independent of
+    ``B`` — and with the pipelined half split expressible as one static
+    tile index."""
+
+    @settings(max_examples=20, deadline=None)
+    @given(W=st.integers(1, 5), mult=st.integers(1, 4),
+           num_docs=st.integers(12, 60), vocab=st.integers(32, 128),
+           seed=st.integers(0, 10))
+    def test_token_multiset_and_order_match_dense(self, W, mult, num_docs,
+                                                  vocab, seed):
+        corpus = _corpus(num_docs, vocab, seed)
+        dense = build_layout(corpus, n_workers=W, T=8, n_blocks=mult * W)
+        rag = build_layout(corpus, n_workers=W, T=8, n_blocks=mult * W,
+                           layout="ragged")
+        # identical canonical sequence => per-(worker, cell) multiset AND
+        # per-cell order both preserved
+        for lay in (dense, rag):
+            assert int(lay.tok_valid.sum()) == corpus.num_tokens
+        dw, db, dd, dj = dense.token_coords()
+        rw, rb, rd, rj = rag.token_coords()
+        np.testing.assert_array_equal(dw, rw)
+        np.testing.assert_array_equal(db, rb)
+        np.testing.assert_array_equal(dd, rd)
+        np.testing.assert_array_equal(dj, rj)
+        np.testing.assert_array_equal(
+            dense.extract_canonical(dense.tok_gwrd),
+            rag.extract_canonical(rag.tok_gwrd))
+        np.testing.assert_array_equal(
+            dense.extract_canonical(dense.tok_bound),
+            rag.extract_canonical(rag.tok_bound))
+        assert rag.word_map_mismatches() == 0
+        # canonical placement round-trips
+        vals = np.arange(corpus.num_tokens, dtype=np.int32)
+        np.testing.assert_array_equal(
+            rag.extract_canonical(rag.place_canonical(vals)), vals)
+
+    @settings(max_examples=20, deadline=None)
+    @given(W=st.integers(1, 5), mult=st.integers(1, 4),
+           num_docs=st.integers(12, 60), vocab=st.integers(32, 128),
+           seed=st.integers(0, 10), tile=st.sampled_from([4, 8, 32]))
+    def test_pad_bounded_by_tile_size(self, W, mult, num_docs, vocab,
+                                      seed, tile):
+        corpus = _corpus(num_docs, vocab, seed)
+        lay = build_layout(corpus, n_workers=W, T=8, n_blocks=mult * W,
+                           layout="ragged", tile=tile)
+        k, k0 = lay.k, half_queue_split(lay.k)
+        sizes = lay.cell_sizes.reshape(W, W, k)
+        half0, half1 = sizes[:, :, :k0].sum(2), sizes[:, :, k0:].sum(2)
+        r0, r1 = lay.tile_split, lay.n_tiles - lay.tile_split
+        # each half is padded to its own max: every cell wastes < tile
+        # (empty cells exactly one tile), so the stream capacity exceeds
+        # the heaviest half by at most one tile per cell — independent of
+        # how fine B slices the vocabulary.
+        assert r0 * tile <= half0.max() + k0 * tile
+        assert r1 * tile <= half1.max() + (k - k0) * tile
+        cap = W * W * lay.stream_len
+        assert lay.pad_fraction == 1.0 - lay.cell_sizes.sum() / cap
+        assert cap <= (half0.max() + half1.max() + k * tile) * W * W
+
+    @settings(max_examples=20, deadline=None)
+    @given(W=st.integers(2, 5), mult=st.integers(2, 4),
+           num_docs=st.integers(12, 60), vocab=st.integers(32, 128),
+           seed=st.integers(0, 10))
+    def test_half_split_is_a_tile_split(self, W, mult, num_docs, vocab,
+                                        seed):
+        """Tiles [0, tile_split) hold exactly the cells [0, k0) of every
+        stream, and the valid-token loads of the two tile ranges equal the
+        dense layout's half_loads() — the pipelined ring can split at one
+        static tile index with no load-match regression."""
+        corpus = _corpus(num_docs, vocab, seed)
+        lay = build_layout(corpus, n_workers=W, T=8, n_blocks=mult * W,
+                           layout="ragged")
+        k, k0 = lay.k, half_queue_split(lay.k)
+        r0 = lay.tile_split
+        assert 0 < k0 < k and 0 < r0 < lay.n_tiles
+        halves = lay.half_loads()             # (W_rounds, W, 2) from sizes
+        valid = lay.tok_valid.reshape(W, W, lay.n_tiles, lay.tile)
+        for w in range(W):
+            for c in range(W):
+                cot = lay.cell_of_tile[w, c]
+                assert cot[:r0].max() < k0 <= cot[r0:].min()
+                r = (c - w) % W               # round when w sweeps chunk c
+                assert valid[w, c, :r0].sum() == halves[r, w, 0]
+                assert valid[w, c, r0:].sum() == halves[r, w, 1]
+
+    def test_bad_tile_and_layout_rejected(self):
+        corpus = _corpus(20, 64, 0)
+        with pytest.raises(ValueError, match="layout"):
+            build_layout(corpus, n_workers=2, T=8, layout="csr")
+        with pytest.raises(ValueError, match="tile"):
+            build_layout(corpus, n_workers=2, T=8, layout="ragged", tile=0)

@@ -4,9 +4,13 @@
 #   tools/ci.sh               # collection check + full tier-1 suite
 #   tools/ci.sh --fast        # collection check + `-m "not slow"` subset only
 #   tools/ci.sh --bench-smoke # benchmark smoke only: REPRO_BENCH_FAST=1
-#                             # harness run, fails on any ERROR row, then the
-#                             # BENCH_sweep.json nomad regression gate (>30%
-#                             # tokens/sec drop vs the previous snapshot)
+#                             # harness run (both token layouts; prints the
+#                             # dense-vs-ragged pad_fraction delta), fails on
+#                             # any ERROR row, then the BENCH_sweep.json
+#                             # nomad regression gate (>30% tokens/sec drop
+#                             # vs the previous same-methodology snapshot +
+#                             # the interleaved B=4W ragged padding-blowup
+#                             # canary)
 #
 # Property tests (tests/test_sharding_properties.py, ...) use `hypothesis`.
 # CI servers should run with REPRO_CI_INSTALL_HYPOTHESIS=1 so the real
@@ -45,6 +49,9 @@ bench_smoke() {
     if grep -q "ERROR" <<<"$out"; then
         echo "bench smoke: ERROR rows present"; return 1
     fi
+    echo "== pad_fraction: dense vs ragged (from the smoke run) =="
+    grep "sweep/pad_fraction" <<<"$out" \
+        || echo "pad_fraction summary row missing (no nomad rows?)"
     echo "== bench regression gate: BENCH_sweep.json nomad trajectory =="
     python -m benchmarks.sweep_bench --check-regression
 }
