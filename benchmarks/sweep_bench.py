@@ -7,9 +7,12 @@ Measures tokens/sec of the three sweep paths —
 * the distributed nomad sweep (subprocesses on faked devices) for
   ``inner_mode`` ∈ {scan, fused} × ``B`` ∈ {W, 4W, 16W} × ``ring_mode`` ∈
   {barrier, pipelined} × ``layout`` ∈ {dense, ragged} — the block-queue
-  ring; every nomad entry records the layout's ``pad_fraction`` and
-  ``total_tiles`` so the dense-padding blowup (and the ragged fix) stays
-  visible in the trajectory —
+  ring — plus one **doc-tiled** ragged-fused row (``doc_tile=8`` slab
+  paging, DESIGN.md §7); every nomad entry records the layout's
+  ``pad_fraction``/``total_tiles`` and its ``doc_tile`` +
+  ``ntd_vmem_bytes`` (doc-topic bytes the kernel keeps VMEM-resident) so
+  the dense-padding blowup, the ragged fix and the doc-slab budget all
+  stay visible in the trajectory —
 
 and, besides the usual CSV rows, maintains ``BENCH_sweep.json`` at the
 repo root: a **history** of per-PR snapshots (``{"history": [{"rev",
@@ -80,6 +83,39 @@ def _nomad_entries(W: int, fast: bool = False) -> list[dict]:
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(REPO, "src")
     env.pop("XLA_FLAGS", None)
+
+    def one(inner_mode: str, B: int, ring_mode: str, layout: str,
+            doc_tile: int = 0) -> dict:
+        res = subprocess.run(
+            [sys.executable, "-m", "repro.launch.lda_dist_check",
+             str(W), "stoken", "1", inner_mode, str(B), ring_mode,
+             layout, str(doc_tile)],
+            capture_output=True, text=True, env=env, timeout=900)
+        if res.returncode != 0:
+            raise RuntimeError(
+                f"lda_dist_check W={W} B={B} {inner_mode} {ring_mode} "
+                f"{layout} doc_tile={doc_tile}: " + res.stderr[-500:])
+        rep = json.loads(res.stdout.strip().splitlines()[-1])
+        return {
+            "path": "nomad", "backend": inner_mode, "B": B,
+            "W": W, "ring_mode": ring_mode, "layout": layout,
+            "T": 16, "k": rep["blocks_per_worker"],
+            "n_tokens": rep["n_tokens"],
+            "tokens_per_sec": rep["tokens_per_sec"],
+            "exact": rep["n_td_mismatch"] + rep["n_wt_mismatch"]
+                     + rep["n_t_mismatch"] == 0,
+            "round_imbalance": rep["round_imbalance"],
+            "pad_fraction": rep["pad_fraction"],
+            "total_tiles": rep["total_tiles"],
+            "ref_sweep_sec": rep["ref_sweep_sec"],
+            # doc-axis tiling of the doc-topic shard (DESIGN.md §7):
+            # slab height (0 = whole shard) and the bytes the kernel
+            # actually keeps VMEM-resident for n_td
+            "doc_tile": rep["doc_tile"],
+            "ntd_row_bytes": rep["ntd_row_bytes"],
+            "ntd_vmem_bytes": rep["ntd_slab_bytes"],
+        }
+
     # fast (CI smoke) keeps the matrix small but still covers both layouts
     # on the fused hot path, so the pad_fraction delta is always reported.
     inner_modes = ("fused",) if fast else ("scan", "fused")
@@ -88,31 +124,12 @@ def _nomad_entries(W: int, fast: bool = False) -> list[dict]:
         for inner_mode in inner_modes:
             for B in (m * W for m in b_mults):
                 for ring_mode in ("barrier", "pipelined"):
-                    res = subprocess.run(
-                        [sys.executable, "-m",
-                         "repro.launch.lda_dist_check",
-                         str(W), "stoken", "1", inner_mode, str(B),
-                         ring_mode, layout],
-                        capture_output=True, text=True, env=env,
-                        timeout=900)
-                    if res.returncode != 0:
-                        raise RuntimeError(
-                            f"lda_dist_check W={W} B={B} {inner_mode} "
-                            f"{ring_mode} {layout}: " + res.stderr[-500:])
-                    rep = json.loads(res.stdout.strip().splitlines()[-1])
-                    entries.append({
-                        "path": "nomad", "backend": inner_mode, "B": B,
-                        "W": W, "ring_mode": ring_mode, "layout": layout,
-                        "T": 16, "k": rep["blocks_per_worker"],
-                        "n_tokens": rep["n_tokens"],
-                        "tokens_per_sec": rep["tokens_per_sec"],
-                        "exact": rep["n_td_mismatch"] + rep["n_wt_mismatch"]
-                                 + rep["n_t_mismatch"] == 0,
-                        "round_imbalance": rep["round_imbalance"],
-                        "pad_fraction": rep["pad_fraction"],
-                        "total_tiles": rep["total_tiles"],
-                        "ref_sweep_sec": rep["ref_sweep_sec"],
-                    })
+                    entries.append(one(inner_mode, B, ring_mode, layout))
+    # one doc-tiled row (both in smoke and full runs): the ragged fused
+    # hot path with (8, T) doc-topic slabs paged instead of the whole
+    # (I_max, T) shard — interpret-mode numbers price the paging DMAs'
+    # structural overhead next to the untiled twin above
+    entries.append(one("fused", 4 * W, "pipelined", "ragged", doc_tile=8))
     return entries
 
 
@@ -155,9 +172,11 @@ def _git_rev() -> str:
 
 
 def _nomad_key(e: dict) -> tuple:
-    # pre-ragged snapshots carry no layout key: those rows are dense
+    # pre-ragged snapshots carry no layout key: those rows are dense;
+    # pre-doc-tiling snapshots carry no doc_tile key: those are untiled
     return (e.get("backend"), e.get("B"), e.get("W"),
-            e.get("ring_mode", "barrier"), e.get("layout", "dense"))
+            e.get("ring_mode", "barrier"), e.get("layout", "dense"),
+            e.get("doc_tile", 0))
 
 
 def _serial_baseline(entries: list[dict]) -> float:
@@ -299,7 +318,11 @@ def _pad_fraction_summary(entries: list[dict]) -> str | None:
     both layouts ran (the number `tools/ci.sh --bench-smoke` prints)."""
     pads = {}
     for e in entries:
-        if e.get("path") == "nomad" and "pad_fraction" in e:
+        # doc-tiled rows carry group-segment padding on top of the
+        # layout's own — comparing them against dense would misstate the
+        # blowup delta this line tracks
+        if e.get("path") == "nomad" and "pad_fraction" in e \
+                and not e.get("doc_tile"):
             pads.setdefault(e["B"], {})[e.get("layout", "dense")] = \
                 e["pad_fraction"]
     both = [b for b, d in pads.items() if {"dense", "ragged"} <= set(d)]
@@ -346,13 +369,15 @@ def run() -> list[str]:
             continue
         tag = (f"sweep/{e['path']}/{e['backend']}"
                + (f"/B{e['B']}W{e['W']}/{e['ring_mode']}/{e['layout']}"
+                  + (f"/dt{e['doc_tile']}" if e.get("doc_tile") else "")
                   if e["path"] == "nomad" else "")
                + f"/T{e['T']}")
         us = 1e6 / max(e["tokens_per_sec"], 1e-9)
         extra = f"tokens_per_sec={e['tokens_per_sec']:.0f}"
         if e["path"] == "nomad":
             extra += (f";pad_fraction={e['pad_fraction']:.3f}"
-                      f";total_tiles={e['total_tiles']}")
+                      f";total_tiles={e['total_tiles']}"
+                      f";ntd_vmem_bytes={e['ntd_vmem_bytes']}")
         out.append(row(tag, us, extra))
         if e["path"] == "nomad" and not e["exact"]:
             # surface correctness in the smoke gate, not just the JSON:

@@ -3,6 +3,7 @@
 Run:  PYTHONPATH=src python examples/nomad_distributed.py [n_blocks]
                                                           [ring_mode]
                                                           [layout]
+                                                          [doc_tile]
 Documents sharded across an 8-worker ring; word-topic blocks travel the
 ring as nomadic tokens — by default 4 blocks per worker (B = 4W, the
 paper's blocks >> workers setup; pass n_blocks to override), with each
@@ -13,7 +14,10 @@ half-queue while the second half sweeps — same chain bit-for-bit, hop
 off the critical path.  layout "ragged" (default; pass "dense" to
 compare) stores each worker's queue as a CSR-style tile stream, so
 padding — and with it tokens/sec — no longer degrades as n_blocks
-grows.  Prints LL per sweep + exactness check.
+grows.  doc_tile (0 = off) pages (doc_tile, T) doc-topic slabs through
+the fused kernels instead of holding each worker's whole (I_max, T)
+shard in VMEM — the knob that lets per-worker documents scale past the
+~12 MiB budget (DESIGN.md §7).  Prints LL per sweep + exactness check.
 """
 import os
 import sys
@@ -43,17 +47,28 @@ def main():
     n_blocks = int(sys.argv[1]) if len(sys.argv) > 1 else 4 * n_dev
     ring_mode = sys.argv[2] if len(sys.argv) > 2 else "pipelined"
     layout_kind = sys.argv[3] if len(sys.argv) > 3 else "ragged"
+    doc_tile = int(sys.argv[4]) if len(sys.argv) > 4 else 0
     mesh = jax.make_mesh((n_dev,), ("worker",))
+    doc_kw = {}
+    if doc_tile:
+        doc_kw = dict(doc_tile=doc_tile)
+        if layout_kind == "dense":
+            doc_kw["doc_blk"] = 16      # toy-corpus grid step (cf. N_BLK)
     layout = build_layout(corpus, n_workers=n_dev, T=T, n_blocks=n_blocks,
-                          layout=layout_kind)
+                          layout=layout_kind, **doc_kw)
     print(f"layout: {layout.W}x{layout.B} cells ({layout.k} blocks/queue, "
           f"{layout.kind}), pad {layout.pad_fraction:.1%},"
           f" worst-round imbalance {layout.round_imbalance:.2f}x,"
-          f" ring_mode {ring_mode}")
+          f" ring_mode {ring_mode}"
+          + (f", doc_tile {doc_tile} "
+             f"({layout.ntd_slab_bytes} B slab vs "
+             f"{layout.ntd_whole_bytes} B whole-shard)"
+             if doc_tile else ""))
 
     lda = NomadLDA(mesh=mesh, ring_axes=("worker",), layout=layout,
                    alpha=alpha, beta=beta, sync_mode="stoken",
-                   ring_mode=ring_mode)
+                   ring_mode=ring_mode,
+                   doc_tile=doc_tile if doc_tile else None)
     arrays = lda.init_arrays(seed=0)
     print(f"initial ll: {lda.log_likelihood(arrays):.0f}")
     for it in range(10):

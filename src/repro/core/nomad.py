@@ -55,6 +55,12 @@ per-chunk tile streams whose padding stays bounded by the tile size for any
 ``B``.  Initial assignments and per-token uniforms are derived from
 canonical token coordinates (not array positions), so the two layouts run
 **bit-identical** chains — the layout is purely a storage/throughput choice.
+
+A third axis, ``doc_tile`` (DESIGN.md §7), lifts the doc-topic VMEM
+ceiling: a layout built with ``doc_tile`` orders each cell's tokens by doc
+group so the fused kernels can page one ``(doc_tile, T)`` slab of ``n_td``
+through VMEM (``NomadLDA(doc_tile=...)``) — again with paged, unpaged,
+dense and ragged execution all bit-identical over the same layout.
 """
 from __future__ import annotations
 
@@ -204,6 +210,7 @@ def _cell_sweep_vectorized(tok_doc, tok_wrd, tok_valid, tok_bound, z_cell,
 def _queue_sweep_fused(tok_doc, tok_wrd, tok_valid, tok_bound, z_q,
                        n_td, n_wt_q, n_t, u, alpha, beta, beta_bar,
                        cell_start: int = 0, num_cells: int | None = None,
+                       dto=None, doc_rows: int = 0, doc_blk: int = 0,
                        interpret: bool = True):
     """Exact per-token chain like :func:`_cell_sweep`, but the worker's whole
     per-round block queue runs as ONE fused ``pallas_call``
@@ -215,24 +222,35 @@ def _queue_sweep_fused(tok_doc, tok_wrd, tok_valid, tok_bound, z_q,
     tok_* / z_q / u: (k, L); n_td: (I,T); n_wt_q: (k,J,T); n_t: (T,).
     ``cell_start``/``num_cells`` restrict the call to a sub-queue (the
     pipelined ring's half-queues); returned ``z_q``/``n_wt_q`` then cover
-    only that range.
+    only that range.  ``dto``/``doc_rows``/``doc_blk`` (a doc-tiled
+    layout being *paged*, DESIGN.md §7) swap in the doc-tiled kernel:
+    only one ``(doc_rows, T)`` doc-topic slab is VMEM-resident, with the
+    chain untouched.
     """
     from repro.kernels.fused_sweep import fused_sweep_cells
+    kw = dict(doc_tile_of=dto, doc_rows=doc_rows,
+              n_blk=doc_blk) if dto is not None else {}
     z_q, n_td, n_wt_q, n_t, _ = fused_sweep_cells(
         tok_doc, tok_wrd, tok_valid, tok_bound, z_q, u, n_td, n_wt_q, n_t,
         alpha=alpha, beta=beta, beta_bar=beta_bar,
-        cell_start=cell_start, num_cells=num_cells, interpret=interpret)
+        cell_start=cell_start, num_cells=num_cells, interpret=interpret,
+        **kw)
     return z_q, n_td, n_wt_q, n_t
 
 
 def _queue_sweep_cells(cell_fn, tok_doc, tok_wrd, tok_valid, tok_bound, z_q,
                        n_td, n_wt_q, n_t, u, alpha, beta, beta_bar,
-                       cell_start: int = 0, num_cells: int | None = None):
+                       cell_start: int = 0, num_cells: int | None = None,
+                       dto=None, doc_rows: int = 0, doc_blk: int = 0):
     """Sweep a worker's k-cell queue with a per-cell function (``scan`` /
     ``vectorized`` inner modes): an inner ``lax.scan`` over the stacked
     cells, the exact chain carried through ``n_td``/``n_t``; each cell's
     ``z`` row and word-topic block ride as scan xs/ys.  Same shapes and
-    sub-queue convention as :func:`_queue_sweep_fused`."""
+    sub-queue convention as :func:`_queue_sweep_fused`; the doc-tiling
+    arguments are accepted and ignored — XLA manages residency here, and
+    a doc-grouped layout's order is already baked into the token arrays,
+    so the chain matches the paged fused kernel bit-for-bit."""
+    del dto, doc_rows, doc_blk
     if num_cells is None:
         num_cells = tok_doc.shape[0] - cell_start
     sub = lambda a: a[cell_start:cell_start + num_cells]
@@ -263,17 +281,20 @@ def _queue_sweep_ragged_fused(tok_doc, tok_wrd, tok_valid, tok_bound, z_s,
                               alpha, beta, beta_bar, *, tile,
                               tile_start=0, num_tiles=None,
                               cell_start=0, num_cells=None,
+                              dto=None, doc_rows: int = 0,
                               interpret: bool = True):
     """The ragged nomad hot path: the worker's whole per-round stream as
     ONE flat-grid ``pallas_call`` with scalar-prefetch block paging
     (:func:`repro.kernels.fused_sweep.fused_sweep_ragged`).  Bit-exact
-    same chain as the dense queue sweeps over the same tokens."""
+    same chain as the dense queue sweeps over the same tokens.
+    ``dto``/``doc_rows`` page the doc-topic slab (DESIGN.md §7)."""
     from repro.kernels.fused_sweep import fused_sweep_ragged
     z_s, n_td, n_wt_q, n_t, _ = fused_sweep_ragged(
         tok_doc, tok_wrd, tok_valid, tok_bound, z_s, u, cot,
         n_td, n_wt_q, n_t, alpha=alpha, beta=beta, beta_bar=beta_bar,
         n_blk=tile, tile_start=tile_start, num_tiles=num_tiles,
-        cell_start=cell_start, num_cells=num_cells, interpret=interpret)
+        cell_start=cell_start, num_cells=num_cells,
+        doc_tile_of=dto, doc_rows=doc_rows, interpret=interpret)
     return z_s, n_td, n_wt_q, n_t
 
 
@@ -281,11 +302,14 @@ def _queue_sweep_ragged_scan(tok_doc, tok_wrd, tok_valid, tok_bound, z_s,
                              n_td, n_wt_q, n_t, u, cot,
                              alpha, beta, beta_bar, *, tile,
                              tile_start=0, num_tiles=None,
-                             cell_start=0, num_cells=None):
+                             cell_start=0, num_cells=None,
+                             dto=None, doc_rows: int = 0):
     """Exact per-token chain over the ragged stream: one ``lax.scan``
     (the shared oracle) with the queue's blocks flattened to a
     ``(k·J, T)`` table — the same float ops in the same order as the
-    dense ``"scan"`` mode over the same tokens."""
+    dense ``"scan"`` mode over the same tokens.  Doc-tiling arguments
+    accepted and ignored (see :func:`_queue_sweep_cells`)."""
+    del dto, doc_rows
     from repro.kernels.fused_sweep.ref import fused_sweep_ragged_ref
     z_s, n_td, n_wt_q, n_t, _ = fused_sweep_ragged_ref(
         tok_doc, tok_wrd, tok_valid, tok_bound, z_s, u, cot,
@@ -299,11 +323,15 @@ def _queue_sweep_ragged_vectorized(tok_doc, tok_wrd, tok_valid, tok_bound,
                                    z_s, n_td, n_wt_q, n_t, u, cot,
                                    alpha, beta, beta_bar, *, tile,
                                    tile_start=0, num_tiles=None,
-                                   cell_start=0, num_cells=None):
+                                   cell_start=0, num_cells=None,
+                                   dto=None, doc_rows: int = 0):
     """Beyond-paper batched mode on the ragged stream: one masked pass per
     cell over the stream segment (:func:`_vectorized_pass`), counts frozen
     at cell start — the same per-cell freeze points (and bit-identical
-    draws) as :func:`_cell_sweep_vectorized` on the dense grid."""
+    draws) as :func:`_cell_sweep_vectorized` on the dense grid.
+    Doc-tiling arguments accepted and ignored (see
+    :func:`_queue_sweep_cells`)."""
+    del dto, doc_rows
     k_total, J, T = n_wt_q.shape
     r_total = cot.shape[0]
     nt_ = r_total - tile_start if num_tiles is None else int(num_tiles)
@@ -341,7 +369,9 @@ def nomad_sweep_fn(mesh: Mesh, ring_axes: Sequence[str], *,
                    collect_lag: bool = False,
                    layout_kind: str = "dense", tile: int = 0,
                    n_tiles: int = 0, tile_split: int = 0,
-                   rng_stride: int = 0):
+                   rng_stride: int = 0,
+                   doc_rows: int = 0, doc_blk: int = 0,
+                   page_docs: bool = False):
     """Build the jittable distributed sweep for ``mesh``.
 
     Ring spans the product of ``ring_axes`` (e.g. ('worker',) or
@@ -387,6 +417,19 @@ def nomad_sweep_fn(mesh: Mesh, ring_axes: Sequence[str], *,
     per canonical token id (:func:`_token_uniforms`), so for the same
     corpus, seed and modes their per-token chains are **bit-identical**
     (asserted across the whole matrix by ``launch/lda_matrix_check.py``).
+
+    doc_rows / doc_blk / page_docs: a ``doc_tile``-grouped layout
+    (DESIGN.md §7) sets ``doc_rows`` to its slab height — the sweep then
+    takes a trailing ``doc_tile_of`` argument (and, for dense layouts, a
+    ``tok_slot`` array so RNG ids stay position-independent across the
+    group-padded rows).  ``page_docs=True`` makes the fused inner modes
+    page one ``(doc_rows, T)`` doc-topic slab through VMEM instead of
+    holding the whole ``(I_max, T)`` shard; all other modes (and
+    ``page_docs=False``) run whole-shard on the identical grouped order,
+    so paged, unpaged, dense and ragged chains are all bit-identical
+    over the same layout.  ``doc_blk`` is the dense grid step the layout
+    was built for (``NomadLayout.doc_blk``; ragged pages at its own
+    ``tile``).
     """
     from repro.data.sharding import half_queue_split
 
@@ -410,6 +453,17 @@ def nomad_sweep_fn(mesh: Mesh, ring_axes: Sequence[str], *,
         raise ValueError(
             f"ragged sweep needs the layout's tile geometry; got "
             f"tile={tile}, n_tiles={n_tiles}, rng_stride={rng_stride}")
+    grouped = doc_rows > 0
+    if page_docs and not grouped:
+        raise ValueError(
+            "page_docs needs a doc_tile-grouped layout (doc_rows > 0)")
+    if grouped and rng_stride < 1:
+        raise ValueError(
+            "doc-grouped sweeps need rng_stride (the layout's true L)")
+    if grouped and not ragged and doc_blk < 1:
+        raise ValueError(
+            "doc-grouped dense sweeps need doc_blk (the layout's grid "
+            "step)")
     if interpret is None:
         from repro.kernels.fused_sweep import default_interpret
         interpret = default_interpret()
@@ -439,15 +493,23 @@ def nomad_sweep_fn(mesh: Mesh, ring_axes: Sequence[str], *,
     spec_rep = P()
 
     def worker_fn(tok_doc, tok_wrd, tok_valid, tok_bound,
-                  z, n_td, n_wt_q, n_t, seed,
-                  cell_of_tile=None, tok_slot=None):
+                  z, n_td, n_wt_q, n_t, seed, *aux):
         # local shapes: tok_* (1,B,L) dense / (1,W,S) ragged; n_td (1,I,T);
         # n_wt_q (k,J,T) — the worker's block queue; n_t (T,) replicated;
-        # seed () replicated; ragged adds cell_of_tile (1,W,n_tiles) and
-        # tok_slot (1,W,S).
+        # seed () replicated.  Trailing aux arrays, in order: ragged adds
+        # cell_of_tile (1,W,n_tiles); ragged-or-grouped adds tok_slot
+        # (1,W,S)|(1,B,L); grouped adds doc_tile_of (1,W,n_tiles)|
+        # (1,B,L//doc_blk).
+        a = list(aux)
+        cell_of_tile = a.pop(0) if ragged else None
+        tok_slot = a.pop(0) if (ragged or grouped) else None
+        doc_tile_of = a.pop(0) if grouped else None
         w_flat = _flat_index(ring_axes, sizes)
         key = jax.random.fold_in(jax.random.key(seed), w_flat)
-        L = rng_stride if ragged else tok_doc.shape[-1]
+        # RNG stride: the true heaviest cell.  Ungrouped dense rows ARE
+        # that long; group padding makes rows longer, so the stride must
+        # come from the layout there.
+        L = rng_stride if (ragged or grouped) else tok_doc.shape[-1]
         S = tok_doc.shape[-1]
 
         n_t_start = n_t
@@ -460,6 +522,7 @@ def nomad_sweep_fn(mesh: Mesh, ring_axes: Sequence[str], *,
             b0 = c * k                    # its first global block index
             key_r = jax.random.fold_in(key, r)
             n_t_before = n_t_local
+            doc_kw = {}
             if ragged:
                 chunk = lambda a: lax.dynamic_slice_in_dim(a[0], c, 1,
                                                            axis=0)[0]
@@ -472,6 +535,8 @@ def nomad_sweep_fn(mesh: Mesh, ring_axes: Sequence[str], *,
                 u = _token_uniforms(key_r, uid)
                 sweep_args = tq + (z_q_in, n_td[0], n_wt_q, n_t_local, u,
                                    cot, alpha, beta, beta_bar)
+                if page_docs:
+                    doc_kw = dict(dto=chunk(doc_tile_of), doc_rows=doc_rows)
                 if r0 > 0:
                     halves = dict(
                         first=dict(tile_start=0, num_tiles=r0,
@@ -484,11 +549,20 @@ def nomad_sweep_fn(mesh: Mesh, ring_axes: Sequence[str], *,
                 tq = (queue(tok_doc), queue(tok_wrd), queue(tok_valid),
                       queue(tok_bound))
                 z_q_in = queue(z)
-                uid = ((b0 + jnp.arange(k, dtype=jnp.int32))[:, None] * L
-                       + jnp.arange(L, dtype=jnp.int32)[None, :])
+                if grouped:
+                    # group padding breaks the position == slot identity
+                    # of the ungrouped dense row, so slots ride along
+                    uid = ((b0 + jnp.arange(k, dtype=jnp.int32))[:, None]
+                           * L + queue(tok_slot))
+                else:
+                    uid = ((b0 + jnp.arange(k, dtype=jnp.int32))[:, None]
+                           * L + jnp.arange(L, dtype=jnp.int32)[None, :])
                 u = _token_uniforms(key_r, uid)
                 sweep_args = tq + (z_q_in, n_td[0], n_wt_q, n_t_local, u,
                                    alpha, beta, beta_bar)
+                if page_docs:
+                    doc_kw = dict(dto=queue(doc_tile_of),
+                                  doc_rows=doc_rows, doc_blk=doc_blk)
                 if k0 > 0:
                     halves = dict(
                         first=dict(cell_start=0, num_cells=k0),
@@ -501,15 +575,16 @@ def nomad_sweep_fn(mesh: Mesh, ring_axes: Sequence[str], *,
                 # the second half's sweep (one extra ppermute per round,
                 # but off the critical path).
                 z_h0, n_td0, nwt_h0, n_t_local = queue_fn(
-                    *sweep_args, **halves["first"])
+                    *sweep_args, **doc_kw, **halves["first"])
                 nwt_h0 = _ring_shift_down(nwt_h0, ring_axes, sizes)
                 args2 = (sweep_args[:5] + (n_td0, n_wt_q, n_t_local)
                          + sweep_args[8:])
                 z_h1, n_td0, nwt_h1, n_t_local = queue_fn(
-                    *args2, **halves["second"])
+                    *args2, **doc_kw, **halves["second"])
                 z_q = jnp.concatenate([z_h0, z_h1], axis=0)
             else:
-                z_q, n_td0, nwt_swept, n_t_local = queue_fn(*sweep_args)
+                z_q, n_td0, nwt_swept, n_t_local = queue_fn(*sweep_args,
+                                                            **doc_kw)
             n_td = n_td0[None]
             if ragged:
                 z = lax.dynamic_update_slice_in_dim(
@@ -566,6 +641,10 @@ def nomad_sweep_fn(mesh: Mesh, ring_axes: Sequence[str], *,
     if ragged:
         # trailing cell_of_tile + tok_slot, sharded with the token streams
         in_specs += (spec_tok, spec_tok)
+        if grouped:
+            in_specs += (spec_tok,)                    # doc_tile_of
+    elif grouped:
+        in_specs += (spec_tok, spec_tok)               # tok_slot, dto
     fn = shard_map(
         worker_fn, mesh=mesh,
         in_specs=in_specs,
@@ -591,6 +670,15 @@ class NomadLDA:
     ``build_layout(layout="ragged")`` swaps the padded cell grid for the
     ragged tile streams (bit-identical chain again), which keeps
     pad_fraction — and throughput — independent of ``B``.
+
+    ``doc_tile`` lifts the doc-topic VMEM ceiling (DESIGN.md §7): on a
+    layout built with the same ``doc_tile``, the fused kernels page one
+    ``(doc_tile, T)`` slab of each worker's ``n_td`` shard through VMEM
+    instead of holding the whole ``(I_max, T)`` table.  ``doc_tile=None``
+    (default) runs whole-shard — today's behavior — even on a grouped
+    layout, and is bit-identical to the paged run over the same layout
+    (the grouping lives in the token order, the paging only in memory
+    residency).
     """
     mesh: Mesh
     ring_axes: tuple
@@ -601,6 +689,7 @@ class NomadLDA:
     inner_mode: str = "scan"
     ring_mode: str = "barrier"
     interpret: bool | None = None  # Pallas mode for inner_mode="fused"
+    doc_tile: int | None = None    # page (doc_tile, T) n_td slabs if set
 
     def __post_init__(self):
         lay = self.layout
@@ -611,6 +700,11 @@ class NomadLDA:
         if lay.B % lay.W != 0:
             raise ValueError(
                 f"layout B={lay.B} is not a multiple of W={lay.W}")
+        if self.doc_tile is not None and self.doc_tile != lay.doc_tile:
+            raise ValueError(
+                f"doc_tile={self.doc_tile} but the layout was built with "
+                f"doc_tile={lay.doc_tile or None}; the slab height is a "
+                f"layout-build-time choice (it fixes the token order)")
         self.beta_bar = self.beta * lay.num_words
         self._sweep = nomad_sweep_fn(
             self.mesh, self.ring_axes, B=lay.B, T=lay.T,
@@ -618,7 +712,9 @@ class NomadLDA:
             sync_mode=self.sync_mode, inner_mode=self.inner_mode,
             ring_mode=self.ring_mode, interpret=self.interpret,
             layout_kind=lay.kind, tile=lay.tile, n_tiles=lay.n_tiles,
-            tile_split=lay.tile_split, rng_stride=lay.L)
+            tile_split=lay.tile_split, rng_stride=lay.L,
+            doc_rows=lay.doc_tile, doc_blk=lay.doc_blk,
+            page_docs=self.doc_tile is not None)
         ring = tuple(self.ring_axes)
         self._sh_tok = NamedSharding(self.mesh, P(ring, None, None))
         self._sh_rep = NamedSharding(self.mesh, P())
@@ -654,14 +750,23 @@ class NomadLDA:
             arrays.update(
                 cell_of_tile=put(lay.cell_of_tile, self._sh_tok),
                 tok_slot=put(lay.tok_slot, self._sh_tok))
+        elif lay.doc_tile > 0:
+            arrays.update(tok_slot=put(lay.tok_slot, self._sh_tok))
+        if lay.doc_tile > 0:
+            arrays.update(doc_tile_of=put(lay.doc_tile_of, self._sh_tok))
         return arrays
 
     def sweep(self, arrays: dict, seed: int) -> dict:
+        lay = self.layout
         args = (arrays["tok_doc"], arrays["tok_wrd"], arrays["tok_valid"],
                 arrays["tok_bound"], arrays["z"], arrays["n_td"],
                 arrays["n_wt"], arrays["n_t"], jnp.int32(seed))
-        if self.layout.kind == "ragged":
+        if lay.kind == "ragged":
             args += (arrays["cell_of_tile"], arrays["tok_slot"])
+        elif lay.doc_tile > 0:
+            args += (arrays["tok_slot"],)
+        if lay.doc_tile > 0:
+            args += (arrays["doc_tile_of"],)
         z, n_td, n_wt, n_t = self._sweep(*args)
         out = dict(arrays)
         out.update(z=z, n_td=n_td, n_wt=n_wt, n_t=n_t)

@@ -37,6 +37,20 @@ Both layouts order valid tokens identically (by worker, block, word id) —
 the *canonical* token order, recorded in ``canon_idx`` — so the per-token
 Gibbs chain is bit-identical across layouts (the nomad sweep derives its
 uniforms and initial ``z`` from canonical coordinates, ``core/nomad.py``).
+
+``doc_tile`` (DESIGN.md §7) additionally partitions each worker's local
+document rows into groups of ``doc_tile`` consecutive rows and refines the
+canonical order to (worker, block, **doc group**, word id): every aligned
+token tile then touches exactly one ``(doc_tile, T)`` slab of the
+doc-topic table, which is what lets the fused kernels page the slab
+through VMEM instead of holding the whole ``(I_max, T)`` shard resident.
+The grouped order is itself a canonical order — dense, ragged, tiled and
+untiled execution over the *same* layout all run the bit-identical chain —
+but it differs from the ``doc_tile=None`` order, so ``doc_tile`` is a
+layout-build-time choice, not a runtime switch.  ``doc_tile_of`` maps each
+token tile (dense: ``doc_blk`` tokens, ragged: ``tile`` tokens) to its doc
+group; ``tok_slot`` (emitted for dense layouts too when grouping) keeps
+the per-token RNG ids position-independent exactly like the ragged stream.
 """
 from __future__ import annotations
 
@@ -52,6 +66,59 @@ __all__ = ["NomadLayout", "counts_from_layout", "lpt_assign",
 
 def _pow2_ceil(n: int) -> int:
     return 1 << max(int(n) - 1, 0).bit_length()
+
+
+def _segment_positions(flat_cell: np.ndarray, sg: np.ndarray, gran: int):
+    """Within-cell token positions when each cell's (doc-group) segments
+    are padded to a multiple of ``gran``.
+
+    ``flat_cell``/``sg`` are per-token flat cell ids and doc-group ids in
+    sorted (cell-major, group within cell) order.  Returns ``(pos,
+    cell_pad, seg_cell, seg_g, seg_start, seg_pad)``: per-token position
+    within its cell, per-cell padded length (indexed by flat cell id),
+    and per-segment cell id / group id / start-within-cell / padded
+    length — the pieces the ``doc_tile_of`` maps are built from.
+    """
+    n = flat_cell.shape[0]
+    if n == 0:
+        z = np.zeros(0, np.int64)
+        return z, z, z, z, z, z
+    change = np.ones(n, bool)
+    change[1:] = (flat_cell[1:] != flat_cell[:-1]) | (sg[1:] != sg[:-1])
+    seg_idx = np.cumsum(change) - 1                    # token → segment
+    seg_sizes = np.bincount(seg_idx)
+    seg_pad = -(-seg_sizes // gran) * gran
+    seg_cell = flat_cell[change]
+    seg_g = sg[change]
+    cell_change = np.ones(seg_cell.shape[0], bool)
+    cell_change[1:] = seg_cell[1:] != seg_cell[:-1]
+    run = np.cumsum(seg_pad) - seg_pad                 # global segment start
+    base = np.maximum.accumulate(np.where(cell_change, run, 0))
+    seg_start = run - base                             # start within cell
+    pos = seg_start[seg_idx] + _running_count(seg_idx)
+    cell_pad = np.bincount(seg_cell, weights=seg_pad,
+                           minlength=int(flat_cell.max()) + 1).astype(
+                               np.int64)
+    return pos, cell_pad, seg_cell, seg_g, seg_start, seg_pad
+
+
+def _dense_doc_blk() -> int:
+    """Default dense doc-tiling grid step: the fused kernel's native token
+    tile, so doc-group padding aligns with the grid the kernel runs."""
+    from repro.kernels.fused_sweep.fused_sweep import N_BLK
+    return N_BLK
+
+
+def _ffill_nonneg(a: np.ndarray) -> np.ndarray:
+    """Forward-fill negative entries along the last axis (remaining
+    leading negatives become 0) — pads ``doc_tile_of`` tiles that carry
+    no tokens with the previous real group so paging never flips slabs
+    for padding-only tiles."""
+    neg = a < 0
+    idx = np.where(neg, 0, np.arange(a.shape[-1]))
+    np.maximum.accumulate(idx, axis=-1, out=idx)
+    out = np.take_along_axis(a, idx, axis=-1)
+    return np.where(out < 0, 0, out)
 
 
 def default_ragged_tile(cell_sizes: np.ndarray) -> int:
@@ -216,7 +283,14 @@ class NomadLayout:
     n_tiles: int = 0             # ragged: tiles per (worker, chunk) stream
     tile_split: int = 0          # ragged: first-half tiles (pipelined split)
     cell_of_tile: np.ndarray | None = None   # ragged (W,W,n_tiles) int32
-    tok_slot: np.ndarray | None = None       # ragged (W,W,S) int32
+    tok_slot: np.ndarray | None = None       # ragged (W,W,S) int32;
+                                 #   dense too when doc_tile grouping is on
+    doc_tile: int = 0            # doc rows per slab (0 = ungrouped)
+    n_doc_tiles: int = 1         # slabs per worker shard (ceil(I_max/doc_tile))
+    doc_blk: int = 0             # dense: tokens per doc-tile-aligned grid step
+    doc_tile_of: np.ndarray | None = None
+                                 #   dense (W,B,Lrow//doc_blk) int32 /
+                                 #   ragged (W,W,n_tiles) int32: tile → slab
 
     @property
     def k(self) -> int:
@@ -231,20 +305,44 @@ class NomadLayout:
     @property
     def pad_fraction(self) -> float:
         """Padding overhead of this layout's actual token capacity: the
-        dense grid's ``W·B·L`` slots, or the ragged streams' ``W·W·S``."""
-        slots = (self.W * self.W * self.stream_len
-                 if self.kind == "ragged" else self.W * self.B * self.L)
-        return 1.0 - self.cell_sizes.sum() / slots
+        dense grid's ``W·B·Lrow`` slots (``Lrow ≥ L`` once doc-tile
+        grouping pads group segments), or the ragged streams' ``W·W·S``."""
+        return 1.0 - self.cell_sizes.sum() / self.tok_doc.size
 
     @property
     def total_tiles(self) -> int:
         """Token tiles one full sweep runs through the fused kernel: the
-        ragged streams' tile count, or the dense grid's ``L`` padded to the
-        kernel's native ``N_BLK`` (the dense kernel tiles at call time)."""
+        ragged streams' tile count, or the dense grid's row length padded
+        to the kernel's grid step (``doc_blk`` when doc-tile grouping
+        fixes it, the kernel's native ``N_BLK`` otherwise — the dense
+        kernel tiles at call time)."""
         if self.kind == "ragged":
             return self.W * self.W * self.n_tiles
+        if self.doc_blk > 0:
+            return self.W * self.B * (self.tok_doc.shape[-1] // self.doc_blk)
         from repro.kernels.fused_sweep.fused_sweep import N_BLK
         return self.W * self.B * -(-self.L // N_BLK)
+
+    @property
+    def ntd_row_bytes(self) -> int:
+        """Bytes of one int32 doc-topic row — the unit the ``doc_tile``
+        VMEM budget scales with."""
+        return 4 * self.T
+
+    @property
+    def ntd_whole_bytes(self) -> int:
+        """Doc-topic bytes of whole-shard residency: the ``(I_max, T)``
+        table in VMEM twice (input + output buffers, DESIGN.md §7)."""
+        return 2 * self.I_max * self.ntd_row_bytes
+
+    @property
+    def ntd_slab_bytes(self) -> int:
+        """Doc-topic bytes the fused kernels keep VMEM-resident per
+        worker: one ``(doc_tile, T)`` slab when grouping is on, else
+        :attr:`ntd_whole_bytes`."""
+        if self.doc_tile > 0:
+            return self.doc_tile * self.ntd_row_bytes
+        return self.ntd_whole_bytes
 
     # -- canonical token order ------------------------------------------------
     def extract_canonical(self, a: np.ndarray) -> np.ndarray:
@@ -272,8 +370,9 @@ class NomadLayout:
                              axis=2).reshape(-1)[self.canon_idx]
             b = c * self.k + cell
         else:
-            w = self.canon_idx // (self.B * self.L)
-            b = (self.canon_idx // self.L) % self.B
+            Lrow = self.tok_doc.shape[-1]      # ≥ L under doc-tile grouping
+            w = self.canon_idx // (self.B * Lrow)
+            b = (self.canon_idx // Lrow) % self.B
         return w, b, flat(self.tok_doc), flat(self.tok_wrd)
 
     def token_globals(self):
@@ -361,7 +460,9 @@ def build_layout(corpus: Corpus, *, n_workers: int, T: int,
                  n_blocks: int | None = None,
                  balance: bool = True, seed: int = 0,
                  layout: str = "dense",
-                 tile: int | None = None) -> NomadLayout:
+                 tile: int | None = None,
+                 doc_tile: int | None = None,
+                 doc_blk: int | None = None) -> NomadLayout:
     """Partition ``corpus`` into the nomad cell grid.
 
     ``layout="dense"`` pads every cell to the heaviest cell's length;
@@ -369,11 +470,24 @@ def build_layout(corpus: Corpus, *, n_workers: int, T: int,
     per-cell padding only up to the next ``tile`` multiple (default
     :func:`default_ragged_tile`).  Word/doc assignment, cell membership
     and the canonical token order are identical in both layouts.
+
+    ``doc_tile`` groups each worker's local doc rows into slabs of that
+    many consecutive rows and refines the canonical order to (worker,
+    block, doc group, word): within every cell the doc-group segments are
+    laid out back to back, each padded to the layout's grid step
+    (``doc_blk`` tokens for dense — default the fused kernel's ``N_BLK`` —
+    and ``tile`` for ragged), so every aligned token tile touches exactly
+    one ``(doc_tile, T)`` doc-topic slab, recorded in ``doc_tile_of``.
+    ``doc_tile=None`` (default) keeps the ungrouped order bit-for-bit.
     """
     B = n_workers if n_blocks is None else n_blocks
     W = n_workers
     if layout not in ("dense", "ragged"):
         raise ValueError(f"unknown layout {layout!r} (dense|ragged)")
+    if doc_tile is not None and int(doc_tile) < 1:
+        raise ValueError(f"doc_tile must be >= 1, got {doc_tile}")
+    if doc_blk is not None and doc_tile is None:
+        raise ValueError("doc_blk only applies with doc_tile grouping")
     if B % W != 0 or B < W:
         raise ValueError(
             f"n_blocks must be a positive multiple of n_workers so each "
@@ -427,10 +541,18 @@ def build_layout(corpus: Corpus, *, n_workers: int, T: int,
         word_of_block[b, :len(ids)] = ids
         word_local[ids] = np.arange(len(ids))
 
-    # Cell grid: sort tokens by (worker, block, word id).
+    # Cell grid: sort tokens by (worker, block[, doc group], word id).
     tw = doc_assign[corpus.doc_ids]
     tb = word_assign[corpus.word_ids]
-    order = np.lexsort((corpus.word_ids, tb, tw)).astype(np.int64)
+    if doc_tile is not None:
+        dt = int(doc_tile)
+        n_doc_tiles = max(-(-I_max // dt), 1)
+        g_tok = (doc_local[corpus.doc_ids] // dt).astype(np.int64)
+        order = np.lexsort((corpus.word_ids, g_tok, tb, tw)).astype(np.int64)
+        sg = g_tok[order]
+    else:
+        dt, n_doc_tiles, sg = 0, 1, None
+        order = np.lexsort((corpus.word_ids, tb, tw)).astype(np.int64)
     sw, sb = tw[order], tb[order]
     sdoc, swrd = corpus.doc_ids[order], corpus.word_ids[order]
 
@@ -456,12 +578,43 @@ def build_layout(corpus: Corpus, *, n_workers: int, T: int,
         doc_assign=doc_assign, word_assign=word_assign,
         cell_sizes=cell_sizes)
 
+    def _seg_layout(gran: int):
+        """Doc-group segment geometry at grid step ``gran`` tokens; the
+        per-cell padded lengths are returned for all W·B cells."""
+        pos, cell_pad, seg_cell, seg_g, seg_start, seg_pad = \
+            _segment_positions(flat_cell, sg, gran)
+        cp = np.zeros(W * B, np.int64)
+        cp[:cell_pad.shape[0]] = cell_pad
+        return pos, cp, seg_cell, seg_g, seg_start, seg_pad
+
     if layout == "dense":
-        # flat position of each canonical token in the (W, B, L) grid
-        canon_idx = (sw.astype(np.int64) * B + sb) * L + slot
-        shape = (W, B, L)
-        extra = {}
+        if dt:
+            gran = int(doc_blk) if doc_blk is not None else _dense_doc_blk()
+            if gran < 1:
+                raise ValueError(f"doc_blk must be >= 1, got {gran}")
+            pos, cp, seg_cell, seg_g, seg_start, seg_pad = _seg_layout(gran)
+            L_row = max(int(cp.max()), gran)
+            canon_idx = flat_cell * L_row + pos
+            shape = (W, B, L_row)
+            dto = np.full((W, B, L_row // gran), -1, np.int32)
+            for s in range(seg_cell.shape[0]):
+                w_, b_ = divmod(int(seg_cell[s]), B)
+                t0 = int(seg_start[s]) // gran
+                dto[w_, b_, t0:t0 + int(seg_pad[s]) // gran] = seg_g[s]
+            tok_slot = np.zeros(shape, np.int32)
+            tok_slot.reshape(-1)[canon_idx] = slot
+            extra = dict(doc_tile=dt, n_doc_tiles=n_doc_tiles, doc_blk=gran,
+                         doc_tile_of=_ffill_nonneg(dto), tok_slot=tok_slot)
+        else:
+            # flat position of each canonical token in the (W, B, L) grid
+            canon_idx = (sw.astype(np.int64) * B + sb) * L + slot
+            shape = (W, B, L)
+            extra = {}
     else:
+        if doc_blk is not None:
+            raise ValueError(
+                "ragged doc grouping is tiled at the stream's own `tile` "
+                "granularity; doc_blk only applies to layout='dense'")
         k = B // W
         k0 = half_queue_split(k)
         tile = default_ragged_tile(cell_sizes) if tile is None else int(tile)
@@ -469,7 +622,13 @@ def build_layout(corpus: Corpus, *, n_workers: int, T: int,
             raise ValueError(f"ragged tile must be >= 1, got {tile}")
         # Tiles per cell (empty cells keep one tile so every block is paged
         # through the kernel exactly once per round), grouped (W, chunk, k).
-        tiles_cell = np.maximum(1, -(-cell_sizes // tile)).reshape(W, W, k)
+        if dt:
+            pos_c, cp, seg_cell, seg_g, seg_start, seg_pad = \
+                _seg_layout(tile)
+            tiles_cell = np.maximum(1, cp // tile).reshape(W, W, k)
+        else:
+            tiles_cell = np.maximum(1, -(-cell_sizes // tile)).reshape(
+                W, W, k)
         half0 = tiles_cell[:, :, :k0].sum(axis=2)          # (W, W) tiles
         half1 = tiles_cell[:, :, k0:].sum(axis=2)
         # Each pipelined half-queue is padded to its own global tile max so
@@ -492,13 +651,22 @@ def build_layout(corpus: Corpus, *, n_workers: int, T: int,
                     o, n = int(off[w, c, j]), int(tiles_cell[w, c, j])
                     cell_of_tile[w, c, o:o + n] = j
         sc, sj = sb // k, sb % k
-        pos = off[sw, sc, sj] * tile + slot
+        pos = off[sw, sc, sj] * tile + (pos_c if dt else slot)
         canon_idx = (sw.astype(np.int64) * W + sc) * S + pos
         shape = (W, W, S)
         tok_slot = np.zeros(shape, np.int32)
         tok_slot.reshape(-1)[canon_idx] = slot
         extra = dict(kind="ragged", tile=tile, n_tiles=R, tile_split=R0,
                      cell_of_tile=cell_of_tile, tok_slot=tok_slot)
+        if dt:
+            dto = np.full((W, W, R), -1, np.int32)
+            for s in range(seg_cell.shape[0]):
+                w_, b_ = divmod(int(seg_cell[s]), B)
+                c_, j_ = divmod(b_, k)
+                t0 = int(off[w_, c_, j_]) + int(seg_start[s]) // tile
+                dto[w_, c_, t0:t0 + int(seg_pad[s]) // tile] = seg_g[s]
+            extra.update(doc_tile=dt, n_doc_tiles=n_doc_tiles, doc_blk=tile,
+                         doc_tile_of=_ffill_nonneg(dto))
 
     def place(vals, dtype):
         out = np.zeros(shape, dtype)

@@ -1,4 +1,5 @@
 from repro.kernels.fused_sweep.ops import (default_interpret,  # noqa: F401
                                            fused_sweep_cells,
                                            fused_sweep_ragged,
-                                           fused_sweep_tokens)
+                                           fused_sweep_tokens,
+                                           fused_vmem_bytes)

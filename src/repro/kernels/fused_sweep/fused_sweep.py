@@ -54,6 +54,22 @@ Two entry points share the tile body:
   is identical to the cell-batch grid, and the chain is bit-equal to it
   token for token.
 
+Every entry point also has a **doc-tiled** twin (``*_docs_pallas``) that
+lifts the whole-shard VMEM residency of the doc-topic table: ``n_td``
+stays in ``ANY`` memory (HBM on TPU) and the kernel pages one
+``(doc_rows, T)`` slab through a VMEM scratch buffer, driven by a
+scalar-prefetched per-tile ``doc_tile_of`` map (``NomadLayout`` built
+with ``doc_tile``, whose grouped token order guarantees each grid step
+touches exactly one slab).  Slabs *recur* across cells, so BlockSpec
+window paging cannot carry them (an input window re-fetch reads the
+stale initial table; a revisited output window is undefined on TPU) —
+instead the kernel bulk-copies the table input→output once at the first
+step and then DMAs slabs in/out of the output buffer explicitly
+(``pltpu.make_async_copy``): every page-in reads the accumulated counts
+because every write-back went through the same buffer.  The token chain
+itself is untouched — tiled and untiled execution over the same layout
+are bit-identical.
+
 Masking follows the nomad cell-sweep convention: ``valid=False`` tokens are
 no-ops (count deltas of 0, leaf rewritten to itself, ``z`` kept), which is
 what makes arbitrary padding of the token stream safe.  ``boundary=True``
@@ -422,3 +438,358 @@ def fused_sweep_ragged_pallas(cell_of_tile: jax.Array,
         interpret=interpret,
     )(cell_of_tile, tok_doc, tok_wrd, tok_valid, tok_bound, z, u,
       n_td, n_wt, n_t)
+
+
+# ---------------------------------------------------------------------------
+# Doc-tiled variants: n_td stays in ANY/HBM, one (doc_rows, T) slab is
+# paged through a VMEM scratch by explicit DMA (module docstring).
+# ---------------------------------------------------------------------------
+def _slab_copy(src, dst, sem):
+    cp = pltpu.make_async_copy(src, dst, sem)
+    cp.start()
+    cp.wait()
+
+
+def _doc_slab_page(doc_rows, g, g_prev, first,
+                   ntd_in_ref, ntd_out_ref, slab, sem):
+    """Slab prologue of one grid step: at the first step, bulk-copy the
+    whole table input→output and pull the first slab; at a slab switch,
+    write the previous slab back and pull the new one.  All reads go
+    through the output buffer, so recurring slabs see every prior
+    write-back."""
+    @pl.when(first)
+    def _init():
+        _slab_copy(ntd_in_ref, ntd_out_ref, sem)
+        _slab_copy(ntd_out_ref.at[pl.ds(g * doc_rows, doc_rows)], slab, sem)
+
+    @pl.when(jnp.logical_not(first) & (g != g_prev))
+    def _switch():
+        _slab_copy(slab, ntd_out_ref.at[pl.ds(g_prev * doc_rows, doc_rows)],
+                   sem)
+        _slab_copy(ntd_out_ref.at[pl.ds(g * doc_rows, doc_rows)], slab, sem)
+
+
+def _slab_accessors(slab, g, doc_rows):
+    """Row load/store on the resident slab; ``tok_doc`` carries worker-local
+    doc indices, the slab holds rows [g·doc_rows, (g+1)·doc_rows)."""
+    row0 = g * doc_rows
+    load = lambda d: slab[pl.ds(d - row0, 1), :][0]
+    store = lambda d, row: slab.__setitem__(
+        (pl.ds(d - row0, 1), slice(None)), row[None])
+    return load, store
+
+
+def _docs_kernel(T: int, n_blk: int, doc_rows: int, alpha: float,
+                 beta: float, beta_bar: float,
+                 # scalar prefetch, then inputs
+                 dto_ref,
+                 tok_doc_ref, tok_wrd_ref, tok_valid_ref, tok_bound_ref,
+                 z_in_ref, u_ref, ntd_in_ref, nwt_in_ref, nt_in_ref,
+                 # outputs
+                 z_ref, ntd_out_ref, nwt_ref, nt_ref, f_ref,
+                 # scratch
+                 slab, sem):
+    t = pl.program_id(0)
+    first = t == 0
+    g = dto_ref[t]
+    g_prev = dto_ref[jnp.maximum(t - 1, 0)]
+
+    @pl.when(first)
+    def _init():
+        nwt_ref[...] = nwt_in_ref[...]
+        nt_ref[...] = nt_in_ref[...]
+        f_ref[...] = jnp.zeros((2 * T,), F32)
+
+    _doc_slab_page(doc_rows, g, g_prev, first, ntd_in_ref, ntd_out_ref,
+                   slab, sem)
+    ntd_load, ntd_store = _slab_accessors(slab, g, doc_rows)
+
+    z_tile, nt, F = _sweep_tile(
+        T, n_blk, alpha, beta, beta_bar,
+        tok_doc_ref[...], tok_wrd_ref[...], tok_valid_ref[...],
+        tok_bound_ref[...], z_in_ref[...], u_ref[...],
+        nt_ref[...], f_ref[...],
+        ntd_load=ntd_load, ntd_store=ntd_store,
+        nwt_load=lambda w: nwt_ref[pl.ds(w, 1), :][0],
+        nwt_store=lambda w, row: nwt_ref.__setitem__(
+            (pl.ds(w, 1), slice(None)), row[None]))
+
+    z_ref[...] = z_tile
+    nt_ref[...] = nt
+    f_ref[...] = F
+
+    @pl.when(t == pl.num_programs(0) - 1)
+    def _flush():
+        _slab_copy(slab, ntd_out_ref.at[pl.ds(g * doc_rows, doc_rows)], sem)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "beta", "beta_bar",
+                                             "doc_rows", "n_blk",
+                                             "interpret"))
+def fused_sweep_docs_pallas(doc_tile_of: jax.Array,
+                            tok_doc: jax.Array, tok_wrd: jax.Array,
+                            tok_valid: jax.Array, tok_bound: jax.Array,
+                            z: jax.Array, u: jax.Array,
+                            n_td: jax.Array, n_wt: jax.Array,
+                            n_t: jax.Array, *,
+                            alpha: float, beta: float, beta_bar: float,
+                            doc_rows: int, n_blk: int = N_BLK,
+                            interpret: bool = True):
+    """Doc-tiled twin of :func:`fused_sweep_pallas`.
+
+    ``doc_tile_of`` is the (n // n_blk,) per-tile slab map; ``n_td`` rows
+    must be a whole number of ``doc_rows`` slabs (``ops`` pads) and every
+    tile's tokens must address rows of its own slab only (guaranteed by
+    ``build_layout(doc_tile=...)``'s grouped order).
+    """
+    n = tok_doc.shape[0]
+    I, T = n_td.shape
+    J = n_wt.shape[0]
+    any_spec = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n // n_blk,),
+        in_specs=[
+            *(pl.BlockSpec((n_blk,), lambda t, dto: (t,))
+              for _ in range(6)),                          # token stream
+            any_spec,                                      # n_td (HBM)
+            pl.BlockSpec((J, T), lambda t, dto: (0, 0)),
+            pl.BlockSpec((T,), lambda t, dto: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n_blk,), lambda t, dto: (t,)),   # z'
+            any_spec,                                      # n_td' (HBM)
+            pl.BlockSpec((J, T), lambda t, dto: (0, 0)),
+            pl.BlockSpec((T,), lambda t, dto: (0,)),
+            pl.BlockSpec((2 * T,), lambda t, dto: (0,)),   # final F+tree
+        ],
+        scratch_shapes=[pltpu.VMEM((doc_rows, T), jnp.int32),
+                        pltpu.SemaphoreType.DMA],
+    )
+    return pl.pallas_call(
+        functools.partial(_docs_kernel, T, n_blk, int(doc_rows),
+                          float(alpha), float(beta), float(beta_bar)),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((I, T), jnp.int32),
+            jax.ShapeDtypeStruct((J, T), jnp.int32),
+            jax.ShapeDtypeStruct((T,), jnp.int32),
+            jax.ShapeDtypeStruct((2 * T,), F32),
+        ],
+        interpret=interpret,
+    )(doc_tile_of, tok_doc, tok_wrd, tok_valid, tok_bound, z, u,
+      n_td, n_wt, n_t)
+
+
+def _cells_docs_kernel(T: int, n_blk: int, doc_rows: int, alpha: float,
+                       beta: float, beta_bar: float,
+                       dto_ref,
+                       tok_doc_ref, tok_wrd_ref, tok_valid_ref,
+                       tok_bound_ref, z_in_ref, u_ref,
+                       ntd_in_ref, nwt_in_ref, nt_in_ref,
+                       z_ref, ntd_out_ref, nwt_ref, nt_ref, f_ref,
+                       slab, sem):
+    c, t = pl.program_id(0), pl.program_id(1)
+    n_c, n_t_g = pl.num_programs(0), pl.num_programs(1)
+    first = (c == 0) & (t == 0)
+    cell_start = t == 0
+    g = dto_ref[c, t]
+    # previous grid step in raster order (the last tile of the previous
+    # cell when t == 0); unused garbage at the very first step
+    pc = jnp.where(t == 0, jnp.maximum(c - 1, 0), c)
+    pt = jnp.where(t == 0, n_t_g - 1, t - 1)
+    g_prev = dto_ref[pc, pt]
+
+    @pl.when(first)
+    def _init():
+        nt_ref[...] = nt_in_ref[...]
+        f_ref[...] = jnp.zeros((2 * T,), F32)
+
+    @pl.when(cell_start)
+    def _load_block():
+        nwt_ref[...] = nwt_in_ref[...]
+
+    _doc_slab_page(doc_rows, g, g_prev, first, ntd_in_ref, ntd_out_ref,
+                   slab, sem)
+    ntd_load, ntd_store = _slab_accessors(slab, g, doc_rows)
+
+    z_tile, nt, F = _sweep_tile(
+        T, n_blk, alpha, beta, beta_bar,
+        tok_doc_ref[0], tok_wrd_ref[0], tok_valid_ref[0],
+        tok_bound_ref[0], z_in_ref[0], u_ref[0],
+        nt_ref[...], f_ref[...],
+        ntd_load=ntd_load, ntd_store=ntd_store,
+        nwt_load=lambda w: nwt_ref[0, pl.ds(w, 1), :][0],
+        nwt_store=lambda w, row: nwt_ref.__setitem__(
+            (0, pl.ds(w, 1), slice(None)), row[None]))
+
+    z_ref[...] = z_tile[None]
+    nt_ref[...] = nt
+    f_ref[...] = F
+
+    @pl.when((c == n_c - 1) & (t == n_t_g - 1))
+    def _flush():
+        _slab_copy(slab, ntd_out_ref.at[pl.ds(g * doc_rows, doc_rows)], sem)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "beta", "beta_bar",
+                                             "doc_rows", "n_blk",
+                                             "interpret"))
+def fused_sweep_cells_docs_pallas(doc_tile_of: jax.Array,
+                                  tok_doc: jax.Array, tok_wrd: jax.Array,
+                                  tok_valid: jax.Array, tok_bound: jax.Array,
+                                  z: jax.Array, u: jax.Array,
+                                  n_td: jax.Array, n_wt: jax.Array,
+                                  n_t: jax.Array, *,
+                                  alpha: float, beta: float, beta_bar: float,
+                                  doc_rows: int, n_blk: int = N_BLK,
+                                  interpret: bool = True):
+    """Doc-tiled twin of :func:`fused_sweep_cells_pallas`; ``doc_tile_of``
+    is the (k, L // n_blk) per-(cell, tile) slab map."""
+    k, L = tok_doc.shape
+    I, T = n_td.shape
+    J = n_wt.shape[1]
+    any_spec = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(k, L // n_blk),
+        in_specs=[
+            *(pl.BlockSpec((1, n_blk), lambda c, t, dto: (c, t))
+              for _ in range(6)),                          # token stream
+            any_spec,                                      # n_td (HBM)
+            pl.BlockSpec((1, J, T), lambda c, t, dto: (c, 0, 0)),
+            pl.BlockSpec((T,), lambda c, t, dto: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, n_blk), lambda c, t, dto: (c, t)),
+            any_spec,                                      # n_td' (HBM)
+            pl.BlockSpec((1, J, T), lambda c, t, dto: (c, 0, 0)),
+            pl.BlockSpec((T,), lambda c, t, dto: (0,)),
+            pl.BlockSpec((2 * T,), lambda c, t, dto: (0,)),
+        ],
+        scratch_shapes=[pltpu.VMEM((doc_rows, T), jnp.int32),
+                        pltpu.SemaphoreType.DMA],
+    )
+    return pl.pallas_call(
+        functools.partial(_cells_docs_kernel, T, n_blk, int(doc_rows),
+                          float(alpha), float(beta), float(beta_bar)),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((k, L), jnp.int32),
+            jax.ShapeDtypeStruct((I, T), jnp.int32),
+            jax.ShapeDtypeStruct((k, J, T), jnp.int32),
+            jax.ShapeDtypeStruct((T,), jnp.int32),
+            jax.ShapeDtypeStruct((2 * T,), F32),
+        ],
+        interpret=interpret,
+    )(doc_tile_of, tok_doc, tok_wrd, tok_valid, tok_bound, z, u,
+      n_td, n_wt, n_t)
+
+
+def _ragged_docs_kernel(T: int, n_blk: int, doc_rows: int, alpha: float,
+                        beta: float, beta_bar: float,
+                        cot_ref, dto_ref,
+                        tok_doc_ref, tok_wrd_ref, tok_valid_ref,
+                        tok_bound_ref, z_in_ref, u_ref,
+                        ntd_in_ref, nwt_in_ref, nt_in_ref,
+                        z_ref, ntd_out_ref, nwt_ref, nt_ref, f_ref,
+                        slab, sem):
+    t = pl.program_id(0)
+    first = t == 0
+    cell_start = first | (cot_ref[t] != cot_ref[jnp.maximum(t - 1, 0)])
+    g = dto_ref[t]
+    g_prev = dto_ref[jnp.maximum(t - 1, 0)]
+
+    @pl.when(first)
+    def _init():
+        nt_ref[...] = nt_in_ref[...]
+        f_ref[...] = jnp.zeros((2 * T,), F32)
+
+    @pl.when(cell_start)
+    def _load_block():
+        nwt_ref[...] = nwt_in_ref[...]
+
+    _doc_slab_page(doc_rows, g, g_prev, first, ntd_in_ref, ntd_out_ref,
+                   slab, sem)
+    ntd_load, ntd_store = _slab_accessors(slab, g, doc_rows)
+
+    z_tile, nt, F = _sweep_tile(
+        T, n_blk, alpha, beta, beta_bar,
+        tok_doc_ref[...], tok_wrd_ref[...], tok_valid_ref[...],
+        tok_bound_ref[...], z_in_ref[...], u_ref[...],
+        nt_ref[...], f_ref[...],
+        ntd_load=ntd_load, ntd_store=ntd_store,
+        nwt_load=lambda w: nwt_ref[0, pl.ds(w, 1), :][0],
+        nwt_store=lambda w, row: nwt_ref.__setitem__(
+            (0, pl.ds(w, 1), slice(None)), row[None]))
+
+    z_ref[...] = z_tile
+    nt_ref[...] = nt
+    f_ref[...] = F
+
+    @pl.when(t == pl.num_programs(0) - 1)
+    def _flush():
+        _slab_copy(slab, ntd_out_ref.at[pl.ds(g * doc_rows, doc_rows)], sem)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "beta", "beta_bar",
+                                             "doc_rows", "n_blk",
+                                             "interpret"))
+def fused_sweep_ragged_docs_pallas(cell_of_tile: jax.Array,
+                                   doc_tile_of: jax.Array,
+                                   tok_doc: jax.Array, tok_wrd: jax.Array,
+                                   tok_valid: jax.Array,
+                                   tok_bound: jax.Array,
+                                   z: jax.Array, u: jax.Array,
+                                   n_td: jax.Array, n_wt: jax.Array,
+                                   n_t: jax.Array, *,
+                                   alpha: float, beta: float,
+                                   beta_bar: float, doc_rows: int,
+                                   n_blk: int, interpret: bool = True):
+    """Doc-tiled twin of :func:`fused_sweep_ragged_pallas`: two
+    scalar-prefetch maps drive the paging — ``cell_of_tile`` pages the
+    word-topic block (BlockSpec window, visited once per cell) and
+    ``doc_tile_of`` pages the doc-topic slab (explicit DMA, slabs
+    recur)."""
+    n = tok_doc.shape[0]
+    I, T = n_td.shape
+    k, J = n_wt.shape[0], n_wt.shape[1]
+    any_spec = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n // n_blk,),
+        in_specs=[
+            *(pl.BlockSpec((n_blk,), lambda t, cot, dto: (t,))
+              for _ in range(6)),                          # token stream
+            any_spec,                                      # n_td (HBM)
+            pl.BlockSpec((1, J, T), lambda t, cot, dto: (cot[t], 0, 0)),
+            pl.BlockSpec((T,), lambda t, cot, dto: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n_blk,), lambda t, cot, dto: (t,)),
+            any_spec,                                      # n_td' (HBM)
+            pl.BlockSpec((1, J, T), lambda t, cot, dto: (cot[t], 0, 0)),
+            pl.BlockSpec((T,), lambda t, cot, dto: (0,)),
+            pl.BlockSpec((2 * T,), lambda t, cot, dto: (0,)),
+        ],
+        scratch_shapes=[pltpu.VMEM((doc_rows, T), jnp.int32),
+                        pltpu.SemaphoreType.DMA],
+    )
+    return pl.pallas_call(
+        functools.partial(_ragged_docs_kernel, T, n_blk, int(doc_rows),
+                          float(alpha), float(beta), float(beta_bar)),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((I, T), jnp.int32),
+            jax.ShapeDtypeStruct((k, J, T), jnp.int32),
+            jax.ShapeDtypeStruct((T,), jnp.int32),
+            jax.ShapeDtypeStruct((2 * T,), F32),
+        ],
+        interpret=interpret,
+    )(cell_of_tile, doc_tile_of, tok_doc, tok_wrd, tok_valid, tok_bound,
+      z, u, n_td, n_wt, n_t)

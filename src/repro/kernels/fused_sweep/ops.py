@@ -5,10 +5,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.fused_sweep.fused_sweep import (N_BLK,
-                                                   fused_sweep_cells_pallas,
-                                                   fused_sweep_pallas,
-                                                   fused_sweep_ragged_pallas)
+from repro.kernels.fused_sweep.fused_sweep import (
+    N_BLK, fused_sweep_cells_docs_pallas, fused_sweep_cells_pallas,
+    fused_sweep_docs_pallas, fused_sweep_pallas,
+    fused_sweep_ragged_docs_pallas, fused_sweep_ragged_pallas)
 
 # Soft ceiling for the compiled path: the count tables + tree + one token
 # tile must fit on-chip (~16 MiB/core, leave headroom for double buffers).
@@ -17,6 +17,43 @@ VMEM_BUDGET_BYTES = 12 * 1024 * 1024
 
 def _is_pow2(n: int) -> bool:
     return n >= 1 and (n & (n - 1)) == 0
+
+
+def fused_vmem_bytes(I: int, J: int, T: int, n_blk: int = N_BLK,
+                     doc_rows: int = 0) -> int:
+    """VMEM-resident bytes of one fused sweep call (DESIGN.md §7).
+
+    Whole-shard mode (``doc_rows=0``) keeps the ``(I, T)`` doc-topic table
+    in VMEM twice (input + output buffers); doc-tiled mode keeps a single
+    ``(doc_rows, T)`` scratch slab and leaves the table in HBM.  Either
+    way one ``(J, T)`` word-topic block rides in+out, plus ``n_t``, the
+    F+tree output and the seven token-tile streams.
+    """
+    ntd = 4 * doc_rows * T if doc_rows > 0 else 2 * 4 * I * T
+    return ntd + 2 * 4 * (J * T + T) + 4 * 2 * T + 7 * 4 * n_blk
+
+
+def _check_doc_args(doc_tile_of, doc_rows: int, shape) -> None:
+    if (doc_tile_of is None) != (doc_rows <= 0):
+        raise ValueError(
+            "doc tiling needs both doc_tile_of and doc_rows > 0 "
+            f"(got doc_rows={doc_rows}, "
+            f"doc_tile_of={'set' if doc_tile_of is not None else None})")
+    if doc_tile_of is not None and tuple(doc_tile_of.shape) != tuple(shape):
+        raise ValueError(
+            f"doc_tile_of shape {tuple(doc_tile_of.shape)} does not match "
+            f"the {tuple(shape)} token-tile grid")
+
+
+def _pad_doc_slabs(n_td, doc_rows: int):
+    """Pad the doc-topic table to a whole number of ``doc_rows`` slabs so
+    slab DMAs never run off the end; the pad rows are untouched (no token
+    addresses them) and are stripped on return."""
+    I = n_td.shape[0]
+    pad = -I % doc_rows
+    if pad:
+        n_td = jnp.pad(n_td, ((0, pad), (0, 0)))
+    return n_td, I
 
 
 def default_interpret() -> bool:
@@ -33,12 +70,20 @@ def fused_sweep_tokens(tok_doc: jax.Array, tok_wrd: jax.Array,
                        z: jax.Array, u: jax.Array,
                        n_td: jax.Array, n_wt: jax.Array, n_t: jax.Array, *,
                        alpha: float, beta: float, beta_bar: float,
+                       doc_tile_of: jax.Array | None = None,
+                       doc_rows: int = 0,
                        n_blk: int = N_BLK, interpret: bool = True):
     """Fused word-by-word F+LDA sweep over an arbitrary-length token stream.
 
     Pads the stream to a multiple of ``n_blk`` with masked no-op tokens,
     runs the single-``pallas_call`` kernel, and unpads.  Returns
     ``(z', n_td', n_wt', n_t', F)`` where ``F`` is the final F+tree.
+
+    ``doc_tile_of``/``doc_rows`` switch to the doc-tiled kernel: the
+    stream must already be a whole number of ``n_blk`` tiles, each tile
+    addressing doc rows of slab ``doc_tile_of[tile]`` only (the
+    ``build_layout(doc_tile=...)`` grouped order); ``n_td`` stays in HBM
+    and only one ``(doc_rows, T)`` slab is VMEM-resident.
     """
     I, T = n_td.shape
     J = n_wt.shape[0]
@@ -48,30 +93,46 @@ def fused_sweep_tokens(tok_doc: jax.Array, tok_wrd: jax.Array,
     if n == 0:
         return (z, n_td, n_wt, n_t,
                 jnp.zeros((2 * T,), jnp.float32))
+    docs = doc_tile_of is not None
+    if docs and n % n_blk != 0:
+        raise ValueError(
+            f"doc-tiled stream length {n} is not a whole number of "
+            f"{n_blk}-token tiles (the slab map is per tile)")
+    _check_doc_args(doc_tile_of, doc_rows, (n // n_blk,) if docs else None)
     if not interpret:
         # Whole-array in_specs AND out_specs each get their own VMEM buffer:
         # two copies of every count table, one tree output, plus the six
-        # tiled input streams and the z output tile.
-        vmem = 2 * 4 * (I * T + J * T + T) + 4 * 2 * T + 7 * 4 * n_blk
+        # tiled input streams and the z output tile (doc-tiled: one slab
+        # scratch instead of the two n_td copies).
+        vmem = fused_vmem_bytes(I, J, T, n_blk,
+                                doc_rows if docs else 0)
         if vmem > VMEM_BUDGET_BYTES:
             raise ValueError(
                 f"fused sweep state ({vmem / 2**20:.1f} MiB) exceeds the "
-                f"VMEM budget; shard n_td/n_wt (nomad cells) or use "
-                f"backend='scan'")
+                f"VMEM budget; shard n_td/n_wt (nomad cells), tile the "
+                f"doc axis (build_layout doc_tile) or use backend='scan'")
 
     n_pad = -n % n_blk
     pad_i = lambda a: jnp.pad(a.astype(jnp.int32), (0, n_pad))
-    tok_doc, tok_wrd, z = pad_i(tok_doc), pad_i(tok_wrd), pad_i(z)
+    tok_doc, tok_wrd, z_p = pad_i(tok_doc), pad_i(tok_wrd), pad_i(z)
     tok_valid = jnp.pad(tok_valid.astype(jnp.int32), (0, n_pad))
     tok_bound = jnp.pad(tok_bound.astype(jnp.int32), (0, n_pad))
     u = jnp.pad(u.astype(jnp.float32), (0, n_pad))
 
+    kw = dict(alpha=float(alpha), beta=float(beta),
+              beta_bar=float(beta_bar), n_blk=n_blk, interpret=interpret)
+    if docs:
+        n_td_p, I = _pad_doc_slabs(n_td.astype(jnp.int32), doc_rows)
+        z_out, n_td, n_wt, n_t, F = fused_sweep_docs_pallas(
+            doc_tile_of.astype(jnp.int32),
+            tok_doc, tok_wrd, tok_valid, tok_bound, z_p, u,
+            n_td_p, n_wt.astype(jnp.int32), n_t.astype(jnp.int32),
+            doc_rows=int(doc_rows), **kw)
+        return z_out[:n], n_td[:I], n_wt, n_t, F
     z_out, n_td, n_wt, n_t, F = fused_sweep_pallas(
-        tok_doc, tok_wrd, tok_valid, tok_bound, z, u,
+        tok_doc, tok_wrd, tok_valid, tok_bound, z_p, u,
         n_td.astype(jnp.int32), n_wt.astype(jnp.int32),
-        n_t.astype(jnp.int32),
-        alpha=float(alpha), beta=float(beta), beta_bar=float(beta_bar),
-        n_blk=n_blk, interpret=interpret)
+        n_t.astype(jnp.int32), **kw)
     return z_out[:n], n_td, n_wt, n_t, F
 
 
@@ -81,6 +142,8 @@ def fused_sweep_cells(tok_doc: jax.Array, tok_wrd: jax.Array,
                       n_td: jax.Array, n_wt: jax.Array, n_t: jax.Array, *,
                       alpha: float, beta: float, beta_bar: float,
                       cell_start: int = 0, num_cells: int | None = None,
+                      doc_tile_of: jax.Array | None = None,
+                      doc_rows: int = 0,
                       n_blk: int = N_BLK, interpret: bool = True):
     """Fused F+LDA sweep over a batch of ``k`` padded cells in ONE kernel.
 
@@ -101,7 +164,10 @@ def fused_sweep_cells(tok_doc: jax.Array, tok_wrd: jax.Array,
     a queue across calls is chain-identical to one whole-queue call.
 
     Pads ``L`` to a multiple of ``n_blk`` with masked no-op tokens and
-    unpads.  Returns ``(z', n_td', n_wt', n_t', F)``.
+    unpads.  ``doc_tile_of`` ((k, L // n_blk), with ``L`` already tiled)
+    + ``doc_rows`` switch to the doc-tiled kernel (see
+    :func:`fused_sweep_tokens`); the map is sliced along the cell range
+    with the queue.  Returns ``(z', n_td', n_wt', n_t', F)``.
     """
     I, T = n_td.shape
     k_total, J = n_wt.shape[0], n_wt.shape[1]
@@ -111,6 +177,14 @@ def fused_sweep_cells(tok_doc: jax.Array, tok_wrd: jax.Array,
         raise ValueError(f"queue length mismatch: tokens have "
                          f"{tok_doc.shape[0]} cells, n_wt has {k_total} "
                          f"blocks")
+    docs = doc_tile_of is not None
+    if docs and tok_doc.shape[1] % n_blk != 0:
+        raise ValueError(
+            f"doc-tiled cell rows of {tok_doc.shape[1]} tokens are not a "
+            f"whole number of {n_blk}-token tiles (the slab map is per "
+            f"tile)")
+    _check_doc_args(doc_tile_of, doc_rows,
+                    (k_total, tok_doc.shape[1] // n_blk) if docs else None)
     cell_start = int(cell_start)
     k = k_total - cell_start if num_cells is None else int(num_cells)
     if cell_start < 0 or k < 0 or cell_start + k > k_total:
@@ -122,18 +196,22 @@ def fused_sweep_cells(tok_doc: jax.Array, tok_wrd: jax.Array,
         tok_doc, tok_wrd = sub(tok_doc), sub(tok_wrd)
         tok_valid, tok_bound = sub(tok_valid), sub(tok_bound)
         z, u, n_wt = sub(z), sub(u), sub(n_wt)
+        if docs:
+            doc_tile_of = sub(doc_tile_of)
     L = tok_doc.shape[1]
     if k == 0 or L == 0:
         return z, n_td, n_wt, n_t, jnp.zeros((2 * T,), jnp.float32)
     if not interpret:
-        # Whole-array n_td in+out, ONE (J,T) word-topic block in+out (the
-        # queue is paged per cell), tree output, token tiles.
-        vmem = 2 * 4 * (I * T + J * T + T) + 4 * 2 * T + 7 * 4 * n_blk
+        # Whole-array n_td in+out (or one slab scratch when doc-tiled),
+        # ONE (J,T) word-topic block in+out (the queue is paged per
+        # cell), tree output, token tiles.
+        vmem = fused_vmem_bytes(I, J, T, n_blk, doc_rows if docs else 0)
         if vmem > VMEM_BUDGET_BYTES:
             raise ValueError(
                 f"fused cell-batch state ({vmem / 2**20:.1f} MiB) exceeds "
                 f"the VMEM budget; shard docs/vocab into smaller nomad "
-                f"cells or use inner_mode='scan'")
+                f"cells, tile the doc axis (build_layout doc_tile) or use "
+                f"inner_mode='scan'")
 
     n_pad = -L % n_blk
     pad_i = lambda a: jnp.pad(a.astype(jnp.int32), ((0, 0), (0, n_pad)))
@@ -142,12 +220,20 @@ def fused_sweep_cells(tok_doc: jax.Array, tok_wrd: jax.Array,
     tok_bound = jnp.pad(tok_bound.astype(jnp.int32), ((0, 0), (0, n_pad)))
     u = jnp.pad(u.astype(jnp.float32), ((0, 0), (0, n_pad)))
 
+    kw = dict(alpha=float(alpha), beta=float(beta),
+              beta_bar=float(beta_bar), n_blk=n_blk, interpret=interpret)
+    if docs:
+        n_td_p, I = _pad_doc_slabs(n_td.astype(jnp.int32), doc_rows)
+        z_out, n_td, n_wt, n_t, F = fused_sweep_cells_docs_pallas(
+            doc_tile_of.astype(jnp.int32),
+            tok_doc, tok_wrd, tok_valid, tok_bound, z_p, u,
+            n_td_p, n_wt.astype(jnp.int32), n_t.astype(jnp.int32),
+            doc_rows=int(doc_rows), **kw)
+        return z_out[:, :L], n_td[:I], n_wt, n_t, F
     z_out, n_td, n_wt, n_t, F = fused_sweep_cells_pallas(
         tok_doc, tok_wrd, tok_valid, tok_bound, z_p, u,
         n_td.astype(jnp.int32), n_wt.astype(jnp.int32),
-        n_t.astype(jnp.int32),
-        alpha=float(alpha), beta=float(beta), beta_bar=float(beta_bar),
-        n_blk=n_blk, interpret=interpret)
+        n_t.astype(jnp.int32), **kw)
     return z_out[:, :L], n_td, n_wt, n_t, F
 
 
@@ -159,6 +245,8 @@ def fused_sweep_ragged(tok_doc: jax.Array, tok_wrd: jax.Array,
                        n_blk: int,
                        tile_start: int = 0, num_tiles: int | None = None,
                        cell_start: int = 0, num_cells: int | None = None,
+                       doc_tile_of: jax.Array | None = None,
+                       doc_rows: int = 0,
                        interpret: bool = True):
     """Fused F+LDA sweep over a ragged cell stream (the nomad hot path).
 
@@ -176,7 +264,9 @@ def fused_sweep_ragged(tok_doc: jax.Array, tok_wrd: jax.Array,
     range must cover every cell of ``[cell_start, cell_start+num_cells)``
     at least once (the layout builder gives every cell ≥ 1 tile) so each
     sliced ``n_wt`` block is paged through the kernel; returned
-    ``z'``/``n_wt'`` cover only the requested ranges.  Returns
+    ``z'``/``n_wt'`` cover only the requested ranges.  ``doc_tile_of``
+    ((S // n_blk,), sliced with the tile range) + ``doc_rows`` switch to
+    the doc-tiled kernel (see :func:`fused_sweep_tokens`).  Returns
     ``(z', n_td', n_wt', n_t', F)``.
     """
     I, T = n_td.shape
@@ -188,6 +278,8 @@ def fused_sweep_ragged(tok_doc: jax.Array, tok_wrd: jax.Array,
         raise ValueError(
             f"ragged stream length {S} does not tile into "
             f"{cell_of_tile.shape[0]} tiles of {n_blk}")
+    docs = doc_tile_of is not None
+    _check_doc_args(doc_tile_of, doc_rows, (S // n_blk,) if docs else None)
     tile_start, cell_start = int(tile_start), int(cell_start)
     r_total = cell_of_tile.shape[0]
     nt_ = r_total - tile_start if num_tiles is None else int(num_tiles)
@@ -207,27 +299,38 @@ def fused_sweep_ragged(tok_doc: jax.Array, tok_wrd: jax.Array,
         tok_valid, tok_bound = sub(tok_valid), sub(tok_bound)
         z, u = sub(z), sub(u)
     cot = cell_of_tile[tile_start:tile_start + nt_] - cell_start
+    if docs:
+        doc_tile_of = doc_tile_of[tile_start:tile_start + nt_]
     if (cell_start, nc) != (0, k_total):
         n_wt = n_wt[cell_start:cell_start + nc]
     if nt_ == 0 or nc == 0:
         return z, n_td, n_wt, n_t, jnp.zeros((2 * T,), jnp.float32)
     if not interpret:
-        # Whole-array n_td in+out, ONE (J,T) word-topic block in+out (the
-        # stream is paged per tile), tree output, token tiles.
-        vmem = 2 * 4 * (I * T + J * T + T) + 4 * 2 * T + 7 * 4 * n_blk
+        # Whole-array n_td in+out (or one slab scratch when doc-tiled),
+        # ONE (J,T) word-topic block in+out (the stream is paged per
+        # tile), tree output, token tiles.
+        vmem = fused_vmem_bytes(I, J, T, n_blk, doc_rows if docs else 0)
         if vmem > VMEM_BUDGET_BYTES:
             raise ValueError(
                 f"fused ragged-stream state ({vmem / 2**20:.1f} MiB) "
                 f"exceeds the VMEM budget; shard docs/vocab into smaller "
-                f"nomad cells or use inner_mode='scan'")
+                f"nomad cells, tile the doc axis (build_layout doc_tile) "
+                f"or use inner_mode='scan'")
 
+    kw = dict(alpha=float(alpha), beta=float(beta),
+              beta_bar=float(beta_bar), n_blk=n_blk, interpret=interpret)
+    args = (tok_doc.astype(jnp.int32), tok_wrd.astype(jnp.int32),
+            tok_valid.astype(jnp.int32), tok_bound.astype(jnp.int32),
+            z.astype(jnp.int32), u.astype(jnp.float32))
+    if docs:
+        n_td_p, I = _pad_doc_slabs(n_td.astype(jnp.int32), doc_rows)
+        z_out, n_td, n_wt, n_t, F = fused_sweep_ragged_docs_pallas(
+            cot.astype(jnp.int32), doc_tile_of.astype(jnp.int32), *args,
+            n_td_p, n_wt.astype(jnp.int32), n_t.astype(jnp.int32),
+            doc_rows=int(doc_rows), **kw)
+        return z_out, n_td[:I], n_wt, n_t, F
     z_out, n_td, n_wt, n_t, F = fused_sweep_ragged_pallas(
-        cot.astype(jnp.int32),
-        tok_doc.astype(jnp.int32), tok_wrd.astype(jnp.int32),
-        tok_valid.astype(jnp.int32), tok_bound.astype(jnp.int32),
-        z.astype(jnp.int32), u.astype(jnp.float32),
+        cot.astype(jnp.int32), *args,
         n_td.astype(jnp.int32), n_wt.astype(jnp.int32),
-        n_t.astype(jnp.int32),
-        alpha=float(alpha), beta=float(beta), beta_bar=float(beta_bar),
-        n_blk=n_blk, interpret=interpret)
+        n_t.astype(jnp.int32), **kw)
     return z_out, n_td, n_wt, n_t, F

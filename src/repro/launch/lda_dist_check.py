@@ -2,7 +2,7 @@
 
 Usage:  python -m repro.launch.lda_dist_check \
             [n_devices] [sync_mode] [pods] [inner_mode] [n_blocks] \
-            [ring_mode] [layout]
+            [ring_mode] [layout] [doc_tile]
 
 Sets XLA_FLAGS *before* importing jax (the only supported way to fake a
 multi-device CPU platform), runs sweeps of Nomad F+LDA on a synthetic
@@ -11,6 +11,9 @@ and the log-likelihood trajectory (must increase).  ``layout`` selects
 the token geometry (``dense`` | ``ragged``, DESIGN.md §4); the report's
 throughput line carries the layout's ``pad_fraction`` and ``total_tiles``
 so the padding cost of each geometry is visible next to its tokens/sec.
+``doc_tile`` (0 = off) builds a doc-grouped layout and pages
+``(doc_tile, T)`` doc-topic slabs through the fused kernels (DESIGN.md
+§7); the report then carries ``ntd_slab_bytes`` vs the whole-shard bytes.
 """
 import json
 import os
@@ -25,6 +28,7 @@ def main() -> None:
     n_blocks = int(sys.argv[5]) if len(sys.argv) > 5 else n_dev
     ring_mode = sys.argv[6] if len(sys.argv) > 6 else "barrier"
     layout_kind = sys.argv[7] if len(sys.argv) > 7 else "dense"
+    doc_tile = int(sys.argv[8]) if len(sys.argv) > 8 else 0
 
     os.environ["XLA_FLAGS"] = (
         f"--xla_force_host_platform_device_count={n_dev} "
@@ -53,11 +57,17 @@ def main() -> None:
         mesh = jax.make_mesh((n_dev,), ("worker",))
         ring_axes = ("worker",)
 
+    doc_kw = {}
+    if doc_tile > 0:
+        doc_kw = dict(doc_tile=doc_tile)
+        if layout_kind == "dense":
+            doc_kw["doc_blk"] = 16      # toy-corpus grid step (cf. N_BLK)
     layout = build_layout(corpus, n_workers=n_dev, T=T,
-                          n_blocks=n_blocks, layout=layout_kind)
+                          n_blocks=n_blocks, layout=layout_kind, **doc_kw)
     lda = NomadLDA(mesh=mesh, ring_axes=ring_axes, layout=layout,
                    alpha=alpha, beta=beta, sync_mode=sync_mode,
-                   inner_mode=inner_mode, ring_mode=ring_mode)
+                   inner_mode=inner_mode, ring_mode=ring_mode,
+                   doc_tile=doc_tile if doc_tile > 0 else None)
     arrays = lda.init_arrays(seed=0)
 
     # Host reference clock: a fixed jitted workload timed in the same
@@ -129,6 +139,10 @@ def main() -> None:
         "pad_fraction": layout.pad_fraction,
         "total_tiles": layout.total_tiles,
         "ragged_tile": layout.tile,
+        "doc_tile": layout.doc_tile,
+        "ntd_row_bytes": layout.ntd_row_bytes,
+        "ntd_slab_bytes": layout.ntd_slab_bytes,
+        "ntd_whole_bytes": layout.ntd_whole_bytes,
     }
     print(json.dumps(report))
 

@@ -289,6 +289,67 @@ class TestCellBatchKernel:
                 zeros(3, T), zeros(3, 5, T), zeros(T),
                 alpha=0.5, beta=0.01, beta_bar=0.05)
 
+    def test_all_empty_cells_queue_is_noop(self):
+        """A queue whose every cell is pure padding (valid=0 throughout,
+        the layout's empty-cell convention): blocks still page through
+        the kernel once each, and everything comes back bit-unchanged —
+        the pad/ds no-op path doc tiling reuses."""
+        from repro.kernels.fused_sweep import fused_sweep_cells
+        from repro.kernels.fused_sweep.ref import fused_sweep_cells_ref
+        T, k, L, J = 16, 3, 8, 5
+        rng = np.random.default_rng(23)
+        zeros = lambda *s: jnp.zeros(s, jnp.int32)
+        n_td = jnp.asarray(rng.integers(0, 4, (7, T)), jnp.int32)
+        n_wt = jnp.asarray(rng.integers(0, 4, (k, J, T)), jnp.int32)
+        n_t = jnp.asarray(rng.integers(1, 40, (T,)), jnp.int32)
+        args = (zeros(k, L), zeros(k, L), zeros(k, L), zeros(k, L),
+                zeros(k, L), jnp.full((k, L), 0.5, jnp.float32),
+                n_td, n_wt, n_t)
+        kw = dict(alpha=0.5, beta=0.01, beta_bar=0.05)
+        got = fused_sweep_cells(*args, **kw)
+        ref = fused_sweep_cells_ref(*args, **kw)
+        for a, b in zip(got, ref):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(n_td))
+        np.testing.assert_array_equal(np.asarray(got[2]), np.asarray(n_wt))
+        np.testing.assert_array_equal(np.asarray(got[3]), np.asarray(n_t))
+
+    def test_jmax_one_blocks(self):
+        """J_max == 1: every block holds a single word, so every n_wt row
+        access is the degenerate pl.ds(0, 1) and the whole cell is one
+        word run (a single boundary rebuild) — the narrowest block page
+        the kernel supports."""
+        from repro.kernels.fused_sweep import fused_sweep_cells
+        from repro.kernels.fused_sweep.ref import fused_sweep_cells_ref
+        T, k, L, I, n_valid = 16, 3, 12, 5, 9
+        rng = np.random.default_rng(29)
+        tok_doc = rng.integers(0, I, (k, L)).astype(np.int32)
+        tok_wrd = np.zeros((k, L), np.int32)           # one word per block
+        tok_valid = np.zeros((k, L), np.int32)
+        tok_valid[:, :n_valid] = 1
+        tok_bound = np.zeros((k, L), np.int32)
+        tok_bound[:, 0] = 1                            # single word run
+        z = np.where(tok_valid, rng.integers(0, T, (k, L)), 0)
+        u = rng.random((k, L)).astype(np.float32)
+        n_td = np.zeros((I, T), np.int32)
+        n_wt = np.zeros((k, 1, T), np.int32)
+        n_t = np.zeros((T,), np.int32)
+        c_i, l_i = np.nonzero(tok_valid)
+        zz = z[c_i, l_i]
+        np.add.at(n_td, (tok_doc[c_i, l_i], zz), 1)
+        np.add.at(n_wt, (c_i, 0, zz), 1)
+        np.add.at(n_t, zz, 1)
+        i32 = lambda a: jnp.asarray(a, jnp.int32)
+        args = (i32(tok_doc), i32(tok_wrd), i32(tok_valid), i32(tok_bound),
+                i32(z), jnp.asarray(u), i32(n_td), i32(n_wt), i32(n_t))
+        kw = dict(alpha=50.0 / T, beta=0.01, beta_bar=0.01 * k)
+        got = fused_sweep_cells(*args, **kw)
+        ref = fused_sweep_cells_ref(*args, **kw)
+        for a, b in zip(got, ref):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # the sweep really did move counts (not vacuously empty)
+        assert int(np.abs(np.asarray(got[2]) - np.asarray(n_wt)).sum()) > 0
+
 
 class TestRaggedStreamKernel:
     """Flat-grid ragged stream (scalar-prefetch block paging): the same

@@ -385,29 +385,53 @@ class TestMultiDevice:
         assert "multiple" in out.stderr
 
     def test_exactness_matrix(self):
-        """The full sync × inner × B × ring × layout matrix on the
-        8-device mesh: global counts bit-equal to a rebuild from z in
+        """The full sync × inner × B × ring × layout × doc_tile matrix on
+        the 8-device mesh: global counts bit-equal to a rebuild from z in
         every combination, the pipelined ring bit-equal to the barrier
-        ring in every (sync, inner, B, layout) cell, and the ragged
-        layout bit-equal to the dense one in every (sync, inner, B, ring)
-        cell."""
+        ring in every cell, the ragged layout bit-equal to the dense one
+        in every cell, and every doc-tiled (slab-paged) run bit-equal to
+        the untiled run over the same grouped layout."""
         rep = _run_module("repro.launch.lda_matrix_check", 8, 2)
-        assert len(rep["combos"]) == 108
+        assert len(rep["combos"]) == 252
         assert {c["ring_mode"] for c in rep["combos"]} == \
             {"barrier", "pipelined"}
         assert {c["layout"] for c in rep["combos"]} == {"dense", "ragged"}
+        assert len({c["doc_tile"] for c in rep["combos"]}) == 3  # None + 2
         cross_ring = [c for c in rep["combos"]
                       if "vs_barrier_z_mismatch" in c]
         cross_layout = [c for c in rep["combos"]
                         if "vs_dense_z_mismatch" in c]
-        assert len(cross_ring) == 54 and len(cross_layout) == 54
+        cross_paging = [c for c in rep["combos"]
+                        if "vs_untiled_z_mismatch" in c]
+        assert len(cross_ring) == 126 and len(cross_layout) == 126
+        assert len(cross_paging) == 144
         bad = [c for c in rep["combos"]
                if c["n_td_mismatch"] or c["n_wt_mismatch"]
                or c["n_t_mismatch"] or not c["tokens_preserved"]
                or any(c.get(f"{p}_{f}_mismatch", 0)
-                      for p in ("vs_barrier", "vs_dense")
+                      for p in ("vs_barrier", "vs_dense", "vs_untiled")
                       for f in ("z", "n_wt", "n_t"))]
         assert rep["all_exact"], bad
+
+
+class TestDocTileSmoke:
+    """Fast (non-slow) doc-tiling regression signal: the matrix check's
+    smoke subset — fused/pipelined/stoken at B = 2W on both layouts,
+    doc_tile ∈ {None, 3}, paged vs untiled twins — so a doc-tiling chain
+    break fails tier-1's fast stage, not just the slow matrix."""
+
+    def test_matrix_smoke_subset(self):
+        rep = _run_module("repro.launch.lda_matrix_check", 4, 1, "smoke")
+        assert rep["subset"] == "smoke"
+        assert len(rep["combos"]) == 4
+        assert {c["layout"] for c in rep["combos"]} == {"dense", "ragged"}
+        tiled = [c for c in rep["combos"] if c["doc_tile"]]
+        assert tiled and all("vs_untiled_z_mismatch" in c for c in tiled)
+        # the smoke subset reports the slab-vs-whole-shard VMEM numbers
+        # (ci.sh prints them for silicon tuning)
+        assert all(s["ntd_slab_bytes"] < s["ntd_whole_bytes"]
+                   for s in rep["slab_vmem"])
+        assert rep["all_exact"], rep["combos"]
 
 
 @pytest.mark.slow

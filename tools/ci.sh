@@ -1,8 +1,10 @@
 #!/usr/bin/env bash
 # CI gate: import-clean collection, fast kernel/sampler signal, then tier-1.
 #
-#   tools/ci.sh               # collection check + full tier-1 suite
-#   tools/ci.sh --fast        # collection check + `-m "not slow"` subset only
+#   tools/ci.sh               # collection check + doc-tile smoke + full
+#                             # tier-1 suite
+#   tools/ci.sh --fast        # collection check + doc-tile smoke +
+#                             # `-m "not slow"` subset only
 #   tools/ci.sh --bench-smoke # benchmark smoke only: REPRO_BENCH_FAST=1
 #                             # harness run (both token layouts; prints the
 #                             # dense-vs-ragged pad_fraction delta), fails on
@@ -62,10 +64,41 @@ if [[ "${1:-}" == "--bench-smoke" ]]; then
     exit 0
 fi
 
+doc_tile_smoke() {
+    # Doc-axis tiling regression signal (DESIGN.md §7): the matrix
+    # check's smoke subset — paged vs untiled twins on both layouts —
+    # plus the measured slab VMEM estimate, printed so silicon tuning
+    # has a number to start from.
+    echo "== doc-tile smoke: lda_matrix_check 4 1 smoke =="
+    local out
+    out=$(python -m repro.launch.lda_matrix_check 4 1 smoke) || {
+        echo "$out"; echo "doc-tile smoke: check exited non-zero"
+        return 1; }
+    python - "$out" <<'PY'
+import json, sys
+# last stdout line is the report (stray XLA/absl lines may precede it)
+rep = json.loads(sys.argv[1].strip().splitlines()[-1])
+for s in rep["slab_vmem"]:
+    print(f"doc-tile slab VMEM [{s['layout']} B={s['B']} "
+          f"doc_tile={s['doc_tile']}]: slab {s['ntd_slab_bytes']} B vs "
+          f"whole-shard {s['ntd_whole_bytes']} B "
+          f"(fused call total {s['fused_vmem_bytes']} B)")
+if not rep["all_exact"]:
+    bad = [c for c in rep["combos"]
+           if any(v for k, v in c.items() if k.endswith("mismatch"))]
+    print("doc-tile smoke: INEXACT:", bad)
+    sys.exit(1)
+print(f"doc-tile smoke: {len(rep['combos'])} combos bit-exact "
+      f"(paged == untiled == dense == ragged)")
+PY
+}
+
 ensure_hypothesis
 
 echo "== collection (all test modules must import cleanly) =="
 python -m pytest -q --collect-only >/dev/null
+
+doc_tile_smoke
 
 echo "== fast signal: kernels + samplers (-m 'not slow') =="
 python -m pytest -q -m "not slow"
