@@ -4,11 +4,18 @@ Measures tokens/sec of the three sweep paths —
 
 * serial ``cgs.sweep_fplda_word`` with ``backend="scan"`` vs ``"fused"``
   (the single-block fused kernel), in-process;
+* serial fused ``r_mode`` = dense vs sparse at the same sub-T ``r_cap``
+  over T ∈ {1024, 4096} (the doc-sparse r-bucket, DESIGN.md §7a): the
+  corpus — hence ``r_cap`` — is fixed while T grows, so the sparse rows
+  price the side-table walk the dense per-token recompaction avoids
+  paying Θ(T) for;
 * the distributed nomad sweep (subprocesses on faked devices) for
   ``inner_mode`` ∈ {scan, fused} × ``B`` ∈ {W, 4W, 16W} × ``ring_mode`` ∈
   {barrier, pipelined} × ``layout`` ∈ {dense, ragged} — the block-queue
   ring — plus one **doc-tiled** ragged-fused row (``doc_tile=8`` slab
-  paging, DESIGN.md §7); every nomad entry records the layout's
+  paging, DESIGN.md §7) and one **sparse-r** ragged-fused row
+  (``r_mode=sparse`` at the layout's ``r_cap``); every nomad entry
+  records the layout's
   ``pad_fraction``/``total_tiles`` and its ``doc_tile`` +
   ``ntd_vmem_bytes`` (doc-topic bytes the kernel keeps VMEM-resident) so
   the dense-padding blowup, the ragged fix and the doc-slab budget all
@@ -78,6 +85,41 @@ def _serial_entries(T: int = SERIAL_T) -> list[dict]:
     return entries
 
 
+def _rbucket_entries(fast: bool = False) -> list[dict]:
+    """Serial fused rows pricing the r-bucket draw (DESIGN.md §7a): dense
+    (per-token Θ(T)-scan recompaction of the doc row) vs sparse (side
+    tables maintained incrementally, Θ(r_cap) touched state) at the same
+    sub-T capacity, over growing T on a fixed corpus.  Both rows share
+    ``r_cap``, so they run the identical chain; the interpret-mode delta
+    is the structural proxy for the paper's Θ(|T_d|) r-bucket claim —
+    the sparse rows' per-token cost must stay flat in T."""
+    from repro.core import cgs
+    from repro.data import synthetic
+
+    entries = []
+    for T in (1024,) if fast else (1024, 4096):
+        corpus, _, _ = synthetic.make_corpus(
+            num_docs=24, vocab_size=80, num_topics=16, mean_doc_len=10.0,
+            seed=1024)
+        cap = max(1, min(T, int(corpus.doc_lengths().max(initial=1))))
+        state = cgs.init_state(corpus, T, jax.random.key(0))
+        doc_ids = jnp.asarray(corpus.doc_ids)
+        word_ids = jnp.asarray(corpus.word_ids)
+        order = jnp.asarray(corpus.word_order())
+        boundary = jnp.asarray(corpus.word_boundary())
+        alpha, beta = 50.0 / T, 0.01
+        for r_mode in ("dense", "sparse"):
+            fn = jax.jit(lambda s, rm=r_mode: cgs.sweep_fplda_word(
+                s, doc_ids, word_ids, order, boundary, alpha, beta,
+                backend="fused", r_mode=rm, r_cap=cap))
+            t = time_fn(fn, state, warmup=1, iters=3)
+            entries.append({"path": "rbucket", "backend": "fused", "T": T,
+                            "r_mode": r_mode, "r_cap": cap,
+                            "n_tokens": int(corpus.num_tokens),
+                            "tokens_per_sec": corpus.num_tokens / t})
+    return entries
+
+
 def _nomad_entries(W: int, fast: bool = False) -> list[dict]:
     entries = []
     env = dict(os.environ)
@@ -85,20 +127,22 @@ def _nomad_entries(W: int, fast: bool = False) -> list[dict]:
     env.pop("XLA_FLAGS", None)
 
     def one(inner_mode: str, B: int, ring_mode: str, layout: str,
-            doc_tile: int = 0) -> dict:
+            doc_tile: int = 0, r_mode: str = "dense") -> dict:
         res = subprocess.run(
             [sys.executable, "-m", "repro.launch.lda_dist_check",
              str(W), "stoken", "1", inner_mode, str(B), ring_mode,
-             layout, str(doc_tile)],
+             layout, str(doc_tile), r_mode],
             capture_output=True, text=True, env=env, timeout=900)
         if res.returncode != 0:
             raise RuntimeError(
                 f"lda_dist_check W={W} B={B} {inner_mode} {ring_mode} "
-                f"{layout} doc_tile={doc_tile}: " + res.stderr[-500:])
+                f"{layout} doc_tile={doc_tile} r_mode={r_mode}: "
+                + res.stderr[-500:])
         rep = json.loads(res.stdout.strip().splitlines()[-1])
         return {
             "path": "nomad", "backend": inner_mode, "B": B,
             "W": W, "ring_mode": ring_mode, "layout": layout,
+            "r_mode": r_mode, "r_cap": rep["r_cap"],
             "T": 16, "k": rep["blocks_per_worker"],
             "n_tokens": rep["n_tokens"],
             "tokens_per_sec": rep["tokens_per_sec"],
@@ -130,6 +174,11 @@ def _nomad_entries(W: int, fast: bool = False) -> list[dict]:
     # (I_max, T) shard — interpret-mode numbers price the paging DMAs'
     # structural overhead next to the untiled twin above
     entries.append(one("fused", 4 * W, "pipelined", "ragged", doc_tile=8))
+    # ... and one sparse-r row on the same hot path: the r-bucket draw
+    # walking the per-doc side tables at the layout's r_cap (DESIGN.md
+    # §7a), priced next to its dense twin above
+    entries.append(one("fused", 4 * W, "pipelined", "ragged",
+                       r_mode="sparse"))
     return entries
 
 
@@ -173,10 +222,11 @@ def _git_rev() -> str:
 
 def _nomad_key(e: dict) -> tuple:
     # pre-ragged snapshots carry no layout key: those rows are dense;
-    # pre-doc-tiling snapshots carry no doc_tile key: those are untiled
+    # pre-doc-tiling snapshots carry no doc_tile key: those are untiled;
+    # pre-sparse-r snapshots carry no r_mode key: those rows are dense-r
     return (e.get("backend"), e.get("B"), e.get("W"),
             e.get("ring_mode", "barrier"), e.get("layout", "dense"),
-            e.get("doc_tile", 0))
+            e.get("doc_tile", 0), e.get("r_mode", "dense"))
 
 
 def _serial_baseline(entries: list[dict]) -> float:
@@ -337,7 +387,8 @@ def _pad_fraction_summary(entries: list[dict]) -> str | None:
 def run() -> list[str]:
     fast = bool(os.environ.get("REPRO_BENCH_FAST"))
     W = 2 if fast else 4
-    entries = _serial_entries() + _nomad_entries(W, fast=fast)
+    entries = (_serial_entries() + _rbucket_entries(fast)
+               + _nomad_entries(W, fast=fast))
     if not os.environ.get("REPRO_BENCH_SKIP_CANARY"):
         # skipping the canary skips the measurement too, not just the
         # gate — and leaves no canary entry in the snapshot to be judged
@@ -368,8 +419,11 @@ def run() -> list[str]:
                 f"4w={e['tokens_per_sec_4w']:.0f}"))
             continue
         tag = (f"sweep/{e['path']}/{e['backend']}"
+               + (f"/{e['r_mode']}/cap{e['r_cap']}"
+                  if e["path"] == "rbucket" else "")
                + (f"/B{e['B']}W{e['W']}/{e['ring_mode']}/{e['layout']}"
                   + (f"/dt{e['doc_tile']}" if e.get("doc_tile") else "")
+                  + ("/rsparse" if e.get("r_mode") == "sparse" else "")
                   if e["path"] == "nomad" else "")
                + f"/T{e['T']}")
         us = 1e6 / max(e["tokens_per_sec"], 1e-9)

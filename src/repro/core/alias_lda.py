@@ -22,12 +22,14 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.cgs import LDAState
+from repro.core.samplers import lsearch_guarded
 
 __all__ = ["sweep_alias_lda"]
 
 
 def sweep_alias_lda(state: LDAState, doc_ids, word_ids, order,
-                    alpha: float, beta: float, num_mh: int = 2) -> LDAState:
+                    alpha: float, beta: float, num_mh: int = 2,
+                    return_mh_stats: bool = False):
     """One AliasLDA sweep with ``num_mh`` MH steps per token.
 
     The stale proposal for word w is  q̃_t ∝ (ñ_wt+β)/(ñ_t+β̄)  with counts
@@ -35,8 +37,17 @@ def sweep_alias_lda(state: LDAState, doc_ids, word_ids, order,
     precomputed per-word cumulative table (the jnp-equivalent of the alias
     table draw — Θ(1)/Θ(log T) per draw from a stale structure; the true
     alias construction is exercised in samplers.py / kernels tests).
+
+    Both inverse-CDF draws are boundary-guarded (:func:`lsearch_guarded`):
+    a stale table whose scaled ``u`` rounds up to the table total must not
+    walk past the last positive-mass topic — a zero-density proposal would
+    poison the MH ratio of every later step that compares against it.
+
+    ``return_mh_stats=True`` additionally returns a per-token bool array:
+    True iff every MH step of that token had a finite ratio and an
+    acceptance probability in (0, 1] — the invariant the guarded proposal
+    restores (a zero-density proposal yields ratio 0 or inf).
     """
-    T = state.n_t.shape[0]
     beta_bar = beta * state.n_wt.shape[0]
     key, k1, k2, k3 = jax.random.split(state.key, 4)
     N = order.shape[0]
@@ -74,33 +85,40 @@ def sweep_alias_lda(state: LDAState, doc_ids, word_ids, order,
             """Draw from the mixture proposal: stale α·q̃ + fresh r."""
             uval = uu * prop_mass
             in_r = uval < r_mass
-            t_r = jnp.clip(jnp.sum(r_cdf <= uval), 0, T - 1).astype(jnp.int32)
+            t_r = lsearch_guarded(r_cdf, uval)
             u_q = jnp.clip((uval - r_mass) / (alpha * stale_mass[w]),
                            0.0, 1.0 - 1e-7) * stale_mass[w]
-            t_q = jnp.clip(jnp.sum(stale_cdf[w] <= u_q), 0, T - 1).astype(jnp.int32)
+            t_q = lsearch_guarded(stale_cdf[w], u_q)
             return jnp.where(in_r, t_r, t_q)
 
         def prop_density(t):
             return alpha * stale_q[w, t] + r_vec[t]
 
         # --- MH chain over num_mh proposals --------------------------------
-        def mh_body(i, t_cur):
+        def mh_body(i, carry):
+            t_cur, ok = carry
             t_prop = propose(u_pp[i])
             ratio = (p_true(t_prop) * prop_density(t_cur)) / \
                     jnp.maximum(p_true(t_cur) * prop_density(t_prop), 1e-30)
-            accept = u_acc[i] < jnp.minimum(ratio, 1.0)
-            return jnp.where(accept, t_prop, t_cur)
+            acc = jnp.minimum(ratio, 1.0)
+            ok = ok & jnp.isfinite(ratio) & (acc > 0.0) & (acc <= 1.0)
+            accept = u_acc[i] < acc
+            return jnp.where(accept, t_prop, t_cur), ok
 
         t0 = propose(u01)
-        t_new = lax.fori_loop(0, num_mh, mh_body, t0)
+        t_new, mh_ok = lax.fori_loop(0, num_mh, mh_body,
+                                     (t0, jnp.bool_(True)))
 
         n_td = n_td.at[d, t_new].add(1)
         n_wt = n_wt.at[w, t_new].add(1)
         n_t = n_t.at[t_new].add(1)
         z = z.at[k].set(t_new)
-        return (z, n_td, n_wt, n_t), None
+        return (z, n_td, n_wt, n_t), mh_ok
 
-    (z, n_td, n_wt, n_t), _ = lax.scan(
+    (z, n_td, n_wt, n_t), mh_ok = lax.scan(
         step, (state.z, state.n_td, state.n_wt, state.n_t),
         (order, u_r, u_mh, u_prop))
-    return LDAState(z=z, n_td=n_td, n_wt=n_wt, n_t=n_t, key=key)
+    new = LDAState(z=z, n_td=n_td, n_wt=n_wt, n_t=n_t, key=key)
+    if return_mh_stats:
+        return new, mh_ok
+    return new

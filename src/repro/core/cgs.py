@@ -140,7 +140,9 @@ def sweep_reference(state: LDAState, doc_ids, word_ids, order,
 # ---------------------------------------------------------------------------
 def sweep_fplda_word(state: LDAState, doc_ids, word_ids, order, boundary,
                      alpha: float, beta: float, *, backend: str = "scan",
-                     interpret: bool | None = None) -> LDAState:
+                     interpret: bool | None = None,
+                     r_mode: str = "dense",
+                     r_cap: int | None = None) -> LDAState:
     """Paper Algorithm 3.  Tokens arrive sorted by word; ``boundary[k]`` marks
     the first occurrence of a new vocabulary item.
 
@@ -163,6 +165,14 @@ def sweep_fplda_word(state: LDAState, doc_ids, word_ids, order, boundary,
                    kernel as static values, so they must be concrete
                    Python floats (not traced), and each distinct value
                    compiles its own kernel.
+
+    ``r_mode`` selects the r-bucket draw (:mod:`..kernels.fused_sweep.rbucket`):
+    ``"dense"`` recomputes the compacted topic vector from the ``n_td`` row
+    per token, ``"sparse"`` maintains per-doc side tables — bit-identical
+    chains, so this sweep rebuilds the tables from ``n_td`` each call and
+    drops them afterwards (state stays the 5-field :class:`LDAState`).
+    ``r_cap`` is the compaction capacity (default ``T``; chain-affecting —
+    compared runs must share it).
     """
     T = state.n_t.shape[0]
     Tp = 1 << (T - 1).bit_length()
@@ -177,7 +187,8 @@ def sweep_fplda_word(state: LDAState, doc_ids, word_ids, order, boundary,
                                                fused_sweep_tokens)
         if interpret is None:
             interpret = default_interpret()
-        sweep = functools.partial(fused_sweep_tokens, interpret=interpret)
+        sweep = functools.partial(fused_sweep_tokens, interpret=interpret,
+                                  r_mode=r_mode, r_cap=r_cap)
     elif backend == "scan":
         # The masked per-token chain (Alg. 3 inner loop: boundary rebuild,
         # decrement, F.update, q/r two-level draw, increment, F.update) is
@@ -185,7 +196,7 @@ def sweep_fplda_word(state: LDAState, doc_ids, word_ids, order, boundary,
         # backends and the nomad cell sweep share, so the float-op order
         # has a single source of truth.
         from repro.kernels.fused_sweep.ref import fused_sweep_ref
-        sweep = fused_sweep_ref
+        sweep = functools.partial(fused_sweep_ref, r_mode=r_mode, r_cap=r_cap)
     else:
         raise ValueError(f"unknown backend {backend!r}")
 
@@ -194,10 +205,13 @@ def sweep_fplda_word(state: LDAState, doc_ids, word_ids, order, boundary,
     # the zero-initialized tree safe for boundary vectors that don't mark
     # position 0 (equivalent to the former unconditional F0 prebuild).
     boundary = jnp.asarray(boundary).at[0].set(True)
-    z_new, n_td, n_wt, n_t, _ = sweep(
+    # Sparse mode returns the side tables appended (a 7-tuple); they are
+    # derivable from n_td, so this per-sweep API drops them.
+    out = sweep(
         doc_ids[order], word_ids[order], valid, boundary,
         state.z[order], u, state.n_td, state.n_wt, state.n_t,
         alpha=alpha, beta=beta, beta_bar=beta_bar)
+    z_new, n_td, n_wt, n_t = out[0], out[1], out[2], out[3]
     z = state.z.at[order].set(z_new)
     return LDAState(z=z, n_td=n_td, n_wt=n_wt, n_t=n_t, key=key)
 

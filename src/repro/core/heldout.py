@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.core.samplers import lsearch_guarded
 from repro.data.corpus import Corpus
 
 __all__ = ["document_completion_perplexity", "fold_in"]
@@ -35,13 +36,17 @@ def fold_in(word_ids, doc_ids, num_docs, phi, alpha, key, sweeps: int = 20):
     per-doc topic counts.  word_ids/doc_ids: (N,) held-out first halves."""
     N = word_ids.shape[0]
     T = phi.shape[1]
-    key, sub = jax.random.split(key)
-    z = jax.random.randint(sub, (N,), 0, T, dtype=jnp.int32)
+    # Named key derivation: one child per role.  (The former
+    # ``key, sub = split(key)`` reused the first child both as the per-sweep
+    # fold-in base and as the live ``key`` name — an accidental aliasing
+    # that made it easy to consume the same stream twice.)
+    init_key, sweep_key = jax.random.split(key)
+    z = jax.random.randint(init_key, (N,), 0, T, dtype=jnp.int32)
     n_td = jnp.zeros((num_docs, T), jnp.int32).at[doc_ids, z].add(1)
 
     def sweep(carry, k):
         z, n_td = carry
-        u = jax.random.uniform(jax.random.fold_in(key, k), (N,))
+        u = jax.random.uniform(jax.random.fold_in(sweep_key, k), (N,))
 
         def step(c, inp):
             z, n_td = c
@@ -50,8 +55,12 @@ def fold_in(word_ids, doc_ids, num_docs, phi, alpha, key, sweeps: int = 20):
             n_td = n_td.at[d, t_old].add(-1)
             p = (n_td[d].astype(jnp.float32) + alpha) * phi[w]
             cdf = jnp.cumsum(p)
-            t_new = jnp.sum(cdf <= u01 * cdf[-1]).astype(jnp.int32)
-            t_new = jnp.clip(t_new, 0, T - 1)
+            # Guarded LSearch: u01·cdf[-1] shares the cumsum reduction, so
+            # overrun needs u01·M to round up to M — impossible for
+            # u01 ≤ 1−2⁻²⁴ f32 (the old clip was dead code on that path),
+            # but the guard also covers all-zero φ rows, where the clip
+            # silently selected topic T−1 with zero mass.
+            t_new = lsearch_guarded(cdf, u01 * cdf[-1])
             n_td = n_td.at[d, t_new].add(1)
             z = z.at[i].set(t_new)
             return (z, n_td), None

@@ -136,12 +136,16 @@ def _token_uniforms(key, uids):
 # Per-cell word-by-word F+LDA sweep (Alg. 3 with masking + local indices).
 # ---------------------------------------------------------------------------
 def _cell_sweep(tok_doc, tok_wrd, tok_valid, tok_bound, z_cell,
-                n_td, n_wt, n_t, u, alpha, beta, beta_bar):
+                n_td, n_wt, n_t, u, alpha, beta, beta_bar,
+                r_mode: str = "dense", r_cap: int = 0,
+                topics=None, counts=None):
     """Exact CGS over one padded cell (Alg. 3 with masking + local indices).
 
     tok_* / z_cell / u: (L,); n_td: (I,T) int32 (local docs); n_wt: (J,T)
     int32 (current block, local words); n_t: (T,) int32 (worker's working
-    copy — possibly stale).  Returns updated (z_cell, n_td, n_wt, n_t).
+    copy — possibly stale).  Returns updated (z_cell, n_td, n_wt, n_t)
+    — with the per-doc ``(topics, counts)`` r-bucket side tables appended
+    when ``r_mode="sparse"`` (see :mod:`repro.kernels.fused_sweep.rbucket`).
 
     The masked per-token chain itself lives in
     :func:`repro.kernels.fused_sweep.ref.fused_sweep_ref` — the single
@@ -149,10 +153,13 @@ def _cell_sweep(tok_doc, tok_wrd, tok_valid, tok_bound, z_cell,
     kernel, its tests) share, so the float-op order is defined once.
     """
     from repro.kernels.fused_sweep.ref import fused_sweep_ref
-    z_cell, n_td, n_wt, n_t, _ = fused_sweep_ref(
+    out = fused_sweep_ref(
         tok_doc, tok_wrd, tok_valid, tok_bound, z_cell, u,
-        n_td, n_wt, n_t, alpha=alpha, beta=beta, beta_bar=beta_bar)
-    return z_cell, n_td, n_wt, n_t
+        n_td, n_wt, n_t, alpha=alpha, beta=beta, beta_bar=beta_bar,
+        r_mode=r_mode, r_cap=r_cap or None, topics=topics, counts=counts)
+    if r_mode == "sparse":
+        return out[0], out[1], out[2], out[3], out[5], out[6]
+    return out[0], out[1], out[2], out[3]
 
 
 def _vectorized_pass(doc_idx, wrd_idx, mask, z, n_td, n_wt, n_t, u,
@@ -211,6 +218,8 @@ def _queue_sweep_fused(tok_doc, tok_wrd, tok_valid, tok_bound, z_q,
                        n_td, n_wt_q, n_t, u, alpha, beta, beta_bar,
                        cell_start: int = 0, num_cells: int | None = None,
                        dto=None, doc_rows: int = 0, doc_blk: int = 0,
+                       r_mode: str = "dense", r_cap: int = 0,
+                       topics=None, counts=None,
                        interpret: bool = True):
     """Exact per-token chain like :func:`_cell_sweep`, but the worker's whole
     per-round block queue runs as ONE fused ``pallas_call``
@@ -230,18 +239,23 @@ def _queue_sweep_fused(tok_doc, tok_wrd, tok_valid, tok_bound, z_q,
     from repro.kernels.fused_sweep import fused_sweep_cells
     kw = dict(doc_tile_of=dto, doc_rows=doc_rows,
               n_blk=doc_blk) if dto is not None else {}
-    z_q, n_td, n_wt_q, n_t, _ = fused_sweep_cells(
+    out = fused_sweep_cells(
         tok_doc, tok_wrd, tok_valid, tok_bound, z_q, u, n_td, n_wt_q, n_t,
         alpha=alpha, beta=beta, beta_bar=beta_bar,
         cell_start=cell_start, num_cells=num_cells, interpret=interpret,
+        r_mode=r_mode, r_cap=r_cap or None, topics=topics, counts=counts,
         **kw)
-    return z_q, n_td, n_wt_q, n_t
+    if r_mode == "sparse":
+        return out[0], out[1], out[2], out[3], out[5], out[6]
+    return out[0], out[1], out[2], out[3]
 
 
 def _queue_sweep_cells(cell_fn, tok_doc, tok_wrd, tok_valid, tok_bound, z_q,
                        n_td, n_wt_q, n_t, u, alpha, beta, beta_bar,
                        cell_start: int = 0, num_cells: int | None = None,
-                       dto=None, doc_rows: int = 0, doc_blk: int = 0):
+                       dto=None, doc_rows: int = 0, doc_blk: int = 0,
+                       r_mode: str = "dense",
+                       topics=None, counts=None):
     """Sweep a worker's k-cell queue with a per-cell function (``scan`` /
     ``vectorized`` inner modes): an inner ``lax.scan`` over the stacked
     cells, the exact chain carried through ``n_td``/``n_t``; each cell's
@@ -249,24 +263,38 @@ def _queue_sweep_cells(cell_fn, tok_doc, tok_wrd, tok_valid, tok_bound, z_q,
     sub-queue convention as :func:`_queue_sweep_fused`; the doc-tiling
     arguments are accepted and ignored — XLA manages residency here, and
     a doc-grouped layout's order is already baked into the token arrays,
-    so the chain matches the paged fused kernel bit-for-bit."""
+    so the chain matches the paged fused kernel bit-for-bit.  With
+    ``r_mode="sparse"`` the per-doc r-bucket side tables ride the scan
+    carry next to ``n_td`` and are appended to the return."""
     del dto, doc_rows, doc_blk
+    sparse = r_mode == "sparse"
     if num_cells is None:
         num_cells = tok_doc.shape[0] - cell_start
     sub = lambda a: a[cell_start:cell_start + num_cells]
 
     def cell_body(carry, xs):
-        n_td, n_t = carry
         tok_d, tok_w, tok_v, tok_b, z_c, nwt_c, u_c = xs
+        if sparse:
+            n_td, n_t, tpc, cnt = carry
+            z_c, n_td, nwt_c, n_t, tpc, cnt = cell_fn(
+                tok_d, tok_w, tok_v, tok_b, z_c, n_td, nwt_c, n_t, u_c,
+                alpha, beta, beta_bar, topics=tpc, counts=cnt)
+            return (n_td, n_t, tpc, cnt), (z_c, nwt_c)
+        n_td, n_t = carry
         z_c, n_td, nwt_c, n_t = cell_fn(
             tok_d, tok_w, tok_v, tok_b, z_c, n_td, nwt_c, n_t, u_c,
             alpha, beta, beta_bar)
         return (n_td, n_t), (z_c, nwt_c)
 
-    (n_td, n_t), (z_q, n_wt_q) = lax.scan(
-        cell_body, (n_td, n_t),
+    carry0 = (n_td, n_t, topics, counts) if sparse else (n_td, n_t)
+    carry, (z_q, n_wt_q) = lax.scan(
+        cell_body, carry0,
         (sub(tok_doc), sub(tok_wrd), sub(tok_valid), sub(tok_bound),
          sub(z_q), sub(n_wt_q), sub(u)))
+    if sparse:
+        n_td, n_t, topics, counts = carry
+        return z_q, n_td, n_wt_q, n_t, topics, counts
+    n_td, n_t = carry
     return z_q, n_td, n_wt_q, n_t
 
 
@@ -282,6 +310,8 @@ def _queue_sweep_ragged_fused(tok_doc, tok_wrd, tok_valid, tok_bound, z_s,
                               tile_start=0, num_tiles=None,
                               cell_start=0, num_cells=None,
                               dto=None, doc_rows: int = 0,
+                              r_mode: str = "dense", r_cap: int = 0,
+                              topics=None, counts=None,
                               interpret: bool = True):
     """The ragged nomad hot path: the worker's whole per-round stream as
     ONE flat-grid ``pallas_call`` with scalar-prefetch block paging
@@ -289,13 +319,17 @@ def _queue_sweep_ragged_fused(tok_doc, tok_wrd, tok_valid, tok_bound, z_s,
     same chain as the dense queue sweeps over the same tokens.
     ``dto``/``doc_rows`` page the doc-topic slab (DESIGN.md §7)."""
     from repro.kernels.fused_sweep import fused_sweep_ragged
-    z_s, n_td, n_wt_q, n_t, _ = fused_sweep_ragged(
+    out = fused_sweep_ragged(
         tok_doc, tok_wrd, tok_valid, tok_bound, z_s, u, cot,
         n_td, n_wt_q, n_t, alpha=alpha, beta=beta, beta_bar=beta_bar,
         n_blk=tile, tile_start=tile_start, num_tiles=num_tiles,
         cell_start=cell_start, num_cells=num_cells,
-        doc_tile_of=dto, doc_rows=doc_rows, interpret=interpret)
-    return z_s, n_td, n_wt_q, n_t
+        doc_tile_of=dto, doc_rows=doc_rows,
+        r_mode=r_mode, r_cap=r_cap or None, topics=topics, counts=counts,
+        interpret=interpret)
+    if r_mode == "sparse":
+        return out[0], out[1], out[2], out[3], out[5], out[6]
+    return out[0], out[1], out[2], out[3]
 
 
 def _queue_sweep_ragged_scan(tok_doc, tok_wrd, tok_valid, tok_bound, z_s,
@@ -303,7 +337,9 @@ def _queue_sweep_ragged_scan(tok_doc, tok_wrd, tok_valid, tok_bound, z_s,
                              alpha, beta, beta_bar, *, tile,
                              tile_start=0, num_tiles=None,
                              cell_start=0, num_cells=None,
-                             dto=None, doc_rows: int = 0):
+                             dto=None, doc_rows: int = 0,
+                             r_mode: str = "dense", r_cap: int = 0,
+                             topics=None, counts=None):
     """Exact per-token chain over the ragged stream: one ``lax.scan``
     (the shared oracle) with the queue's blocks flattened to a
     ``(k·J, T)`` table — the same float ops in the same order as the
@@ -311,12 +347,15 @@ def _queue_sweep_ragged_scan(tok_doc, tok_wrd, tok_valid, tok_bound, z_s,
     accepted and ignored (see :func:`_queue_sweep_cells`)."""
     del dto, doc_rows
     from repro.kernels.fused_sweep.ref import fused_sweep_ragged_ref
-    z_s, n_td, n_wt_q, n_t, _ = fused_sweep_ragged_ref(
+    out = fused_sweep_ragged_ref(
         tok_doc, tok_wrd, tok_valid, tok_bound, z_s, u, cot,
         n_td, n_wt_q, n_t, alpha=alpha, beta=beta, beta_bar=beta_bar,
         n_blk=tile, tile_start=tile_start, num_tiles=num_tiles,
-        cell_start=cell_start, num_cells=num_cells)
-    return z_s, n_td, n_wt_q, n_t
+        cell_start=cell_start, num_cells=num_cells,
+        r_mode=r_mode, r_cap=r_cap or None, topics=topics, counts=counts)
+    if r_mode == "sparse":
+        return out[0], out[1], out[2], out[3], out[5], out[6]
+    return out[0], out[1], out[2], out[3]
 
 
 def _queue_sweep_ragged_vectorized(tok_doc, tok_wrd, tok_valid, tok_bound,
@@ -371,7 +410,8 @@ def nomad_sweep_fn(mesh: Mesh, ring_axes: Sequence[str], *,
                    n_tiles: int = 0, tile_split: int = 0,
                    rng_stride: int = 0,
                    doc_rows: int = 0, doc_blk: int = 0,
-                   page_docs: bool = False):
+                   page_docs: bool = False,
+                   r_mode: str = "dense", r_cap: int = 0):
     """Build the jittable distributed sweep for ``mesh``.
 
     Ring spans the product of ``ring_axes`` (e.g. ('worker',) or
@@ -417,6 +457,19 @@ def nomad_sweep_fn(mesh: Mesh, ring_axes: Sequence[str], *,
     per canonical token id (:func:`_token_uniforms`), so for the same
     corpus, seed and modes their per-token chains are **bit-identical**
     (asserted across the whole matrix by ``launch/lda_matrix_check.py``).
+
+    r_mode / r_cap: the r-bucket draw mode (DESIGN.md §7a,
+    :mod:`repro.kernels.fused_sweep.rbucket`).  ``"dense"`` recomputes the
+    capacity-``r_cap`` compacted topic vector from the ``n_td`` row per
+    token; ``"sparse"`` maintains it as per-doc ``(topics, counts)`` side
+    tables — the sweep then takes two extra trailing ``(W, I_max, r_cap)``
+    table arguments (sharded like ``n_td``; build them with
+    ``rbucket.build_side_table``) and returns them updated after the base
+    four outputs.  Both modes draw from the same compacted vector, so for
+    equal ``r_cap`` the chains are bit-identical; ``r_cap`` itself is
+    chain-affecting (``0`` → ``T``, which preserves the dense default).
+    ``"sparse"`` requires an exact per-token inner mode
+    (``inner_mode != "vectorized"``).
 
     doc_rows / doc_blk / page_docs: a ``doc_tile``-grouped layout
     (DESIGN.md §7) sets ``doc_rows`` to its slab height — the sweep then
@@ -464,24 +517,39 @@ def nomad_sweep_fn(mesh: Mesh, ring_axes: Sequence[str], *,
         raise ValueError(
             "doc-grouped dense sweeps need doc_blk (the layout's grid "
             "step)")
+    if r_mode not in ("dense", "sparse"):
+        raise ValueError(f"r_mode must be 'dense' or 'sparse', got {r_mode}")
+    sparse = r_mode == "sparse"
+    if sparse and inner_mode == "vectorized":
+        raise ValueError(
+            "r_mode='sparse' needs an exact per-token chain; the batched "
+            "'vectorized' inner mode has no per-token side-table order")
+    cap = int(r_cap) if r_cap else T
+    if not 1 <= cap <= T:
+        raise ValueError(f"r_cap must be in [1, T]; got {r_cap} (T={T})")
+    rbk = dict(r_mode=r_mode, r_cap=cap)
     if interpret is None:
         from repro.kernels.fused_sweep import default_interpret
         interpret = default_interpret()
     if ragged:
         if inner_mode == "fused":
             queue_fn = functools.partial(_queue_sweep_ragged_fused,
-                                         tile=tile, interpret=interpret)
+                                         tile=tile, interpret=interpret,
+                                         **rbk)
+        elif inner_mode == "scan":
+            queue_fn = functools.partial(_queue_sweep_ragged_scan,
+                                         tile=tile, **rbk)
         else:
-            queue_fn = functools.partial(
-                {"scan": _queue_sweep_ragged_scan,
-                 "vectorized": _queue_sweep_ragged_vectorized}[inner_mode],
-                tile=tile)
+            queue_fn = functools.partial(_queue_sweep_ragged_vectorized,
+                                         tile=tile)
     elif inner_mode == "fused":
-        queue_fn = functools.partial(_queue_sweep_fused, interpret=interpret)
+        queue_fn = functools.partial(_queue_sweep_fused, interpret=interpret,
+                                     **rbk)
     else:
-        cell_fn = {"scan": _cell_sweep,
+        cell_fn = {"scan": functools.partial(_cell_sweep, **rbk),
                    "vectorized": _cell_sweep_vectorized}[inner_mode]
-        queue_fn = functools.partial(_queue_sweep_cells, cell_fn)
+        queue_fn = functools.partial(_queue_sweep_cells, cell_fn,
+                                     r_mode=r_mode)
     k0 = half_queue_split(k) if ring_mode == "pipelined" else 0
     # the static tile index of the ragged half split (0 degenerates to the
     # barrier schedule, exactly like k0 = 0 on the dense grid)
@@ -499,11 +567,13 @@ def nomad_sweep_fn(mesh: Mesh, ring_axes: Sequence[str], *,
         # seed () replicated.  Trailing aux arrays, in order: ragged adds
         # cell_of_tile (1,W,n_tiles); ragged-or-grouped adds tok_slot
         # (1,W,S)|(1,B,L); grouped adds doc_tile_of (1,W,n_tiles)|
-        # (1,B,L//doc_blk).
+        # (1,B,L//doc_blk); sparse r-mode adds the rb_topics/rb_counts
+        # side tables (1,I,r_cap), sharded like n_td.
         a = list(aux)
         cell_of_tile = a.pop(0) if ragged else None
         tok_slot = a.pop(0) if (ragged or grouped) else None
         doc_tile_of = a.pop(0) if grouped else None
+        rb_t, rb_c = (a.pop(0), a.pop(0)) if sparse else (None, None)
         w_flat = _flat_index(ring_axes, sizes)
         key = jax.random.fold_in(jax.random.key(seed), w_flat)
         # RNG stride: the true heaviest cell.  Ungrouped dense rows ARE
@@ -517,7 +587,15 @@ def nomad_sweep_fn(mesh: Mesh, ring_axes: Sequence[str], *,
         delta_folded = jnp.zeros_like(n_t)
 
         def round_body(carry, r):
-            z, n_td, n_wt_q, n_t_local, delta_mine, s_tok, delta_folded = carry
+            if sparse:
+                (z, n_td, n_wt_q, n_t_local, delta_mine, s_tok,
+                 delta_folded, rb_t, rb_c) = carry
+                rb_kw = dict(topics=rb_t[0], counts=rb_c[0])
+            else:
+                (z, n_td, n_wt_q, n_t_local, delta_mine, s_tok,
+                 delta_folded) = carry
+                rb_t = rb_c = None
+                rb_kw = {}
             c = (w_flat + r) % W          # chunk id this queue corresponds to
             b0 = c * k                    # its first global block index
             key_r = jax.random.fold_in(key, r)
@@ -574,17 +652,25 @@ def nomad_sweep_fn(mesh: Mesh, ring_axes: Sequence[str], *,
                 # next round, so the collective can run concurrently with
                 # the second half's sweep (one extra ppermute per round,
                 # but off the critical path).
-                z_h0, n_td0, nwt_h0, n_t_local = queue_fn(
-                    *sweep_args, **doc_kw, **halves["first"])
+                out0 = queue_fn(*sweep_args, **doc_kw, **rb_kw,
+                                **halves["first"])
+                z_h0, n_td0, nwt_h0, n_t_local = out0[:4]
+                if sparse:
+                    rb_kw = dict(topics=out0[4], counts=out0[5])
                 nwt_h0 = _ring_shift_down(nwt_h0, ring_axes, sizes)
                 args2 = (sweep_args[:5] + (n_td0, n_wt_q, n_t_local)
                          + sweep_args[8:])
-                z_h1, n_td0, nwt_h1, n_t_local = queue_fn(
-                    *args2, **doc_kw, **halves["second"])
+                out1 = queue_fn(*args2, **doc_kw, **rb_kw,
+                                **halves["second"])
+                z_h1, n_td0, nwt_h1, n_t_local = out1[:4]
+                if sparse:
+                    rb_t, rb_c = out1[4][None], out1[5][None]
                 z_q = jnp.concatenate([z_h0, z_h1], axis=0)
             else:
-                z_q, n_td0, nwt_swept, n_t_local = queue_fn(*sweep_args,
-                                                            **doc_kw)
+                out = queue_fn(*sweep_args, **doc_kw, **rb_kw)
+                z_q, n_td0, nwt_swept, n_t_local = out[:4]
+                if sparse:
+                    rb_t, rb_c = out[4][None], out[5][None]
             n_td = n_td0[None]
             if ragged:
                 z = lax.dynamic_update_slice_in_dim(
@@ -618,22 +704,33 @@ def nomad_sweep_fn(mesh: Mesh, ring_axes: Sequence[str], *,
                                                  ring_axes, sizes)
             ys = (jnp.stack([n_t_local, delta_mine])[None]
                   if collect_lag else None)
-            return (z, n_td, n_wt_q, n_t_local, delta_mine, s_tok,
-                    delta_folded), ys
+            carry = (z, n_td, n_wt_q, n_t_local, delta_mine, s_tok,
+                     delta_folded)
+            if sparse:
+                carry += (rb_t, rb_c)
+            return carry, ys
 
         carry0 = (z, n_td, n_wt_q, n_t, jnp.zeros_like(n_t), s_tok,
                   delta_folded)
-        (z, n_td, n_wt_q, _, delta_mine, _, _), lag = lax.scan(
+        if sparse:
+            carry0 += (rb_t, rb_c)
+        carry, lag = lax.scan(
             round_body, carry0, jnp.arange(W, dtype=jnp.int32))
+        z, n_td, n_wt_q, _, delta_mine = carry[:5]
 
         # W shifts = one full loop: every queue is back home, in block order.
         # exact sweep-end resync (additivity of s)
         n_t_out = n_t_start + lax.psum(delta_mine, tuple(ring_axes))
+        out = (z, n_td, n_wt_q, n_t_out)
+        if sparse:
+            out += (carry[7], carry[8])
         if collect_lag:
-            return z, n_td, n_wt_q, n_t_out, lag
-        return z, n_td, n_wt_q, n_t_out
+            out += (lag,)
+        return out
 
     out_specs = (spec_tok, spec_td, spec_wt, spec_rep)
+    if sparse:
+        out_specs += (spec_td, spec_td)                # rb_topics, rb_counts
     if collect_lag:
         out_specs += (P(None, tuple(ring_axes), None, None),)
     in_specs = (spec_tok, spec_tok, spec_tok, spec_tok,
@@ -645,6 +742,8 @@ def nomad_sweep_fn(mesh: Mesh, ring_axes: Sequence[str], *,
             in_specs += (spec_tok,)                    # doc_tile_of
     elif grouped:
         in_specs += (spec_tok, spec_tok)               # tok_slot, dto
+    if sparse:
+        in_specs += (spec_td, spec_td)                 # rb_topics, rb_counts
     fn = shard_map(
         worker_fn, mesh=mesh,
         in_specs=in_specs,
@@ -679,6 +778,14 @@ class NomadLDA:
     layout, and is bit-identical to the paged run over the same layout
     (the grouping lives in the token order, the paging only in memory
     residency).
+
+    ``r_mode="sparse"`` maintains the per-doc r-bucket side tables
+    (DESIGN.md §7a) as two extra ``(W, I_max, r_cap)`` sweep arrays,
+    initialised from ``n_td`` by :meth:`init_arrays` and threaded through
+    :meth:`sweep`.  ``r_cap=0`` (default) keeps the full ``T`` capacity —
+    bit-identical to the dense default; set ``r_cap=layout.r_cap`` (the
+    per-shard max-doc-length bound) to make the r-draw cost independent
+    of ``T`` (chain-affecting: compared runs must share ``r_cap``).
     """
     mesh: Mesh
     ring_axes: tuple
@@ -690,6 +797,9 @@ class NomadLDA:
     ring_mode: str = "barrier"
     interpret: bool | None = None  # Pallas mode for inner_mode="fused"
     doc_tile: int | None = None    # page (doc_tile, T) n_td slabs if set
+    r_mode: str = "dense"          # r-bucket draw: "dense" | "sparse"
+    r_cap: int = 0                 # compaction capacity (0 → T; the layout's
+                                   #   T_d_max bound is ``layout.r_cap``)
 
     def __post_init__(self):
         lay = self.layout
@@ -714,7 +824,8 @@ class NomadLDA:
             layout_kind=lay.kind, tile=lay.tile, n_tiles=lay.n_tiles,
             tile_split=lay.tile_split, rng_stride=lay.L,
             doc_rows=lay.doc_tile, doc_blk=lay.doc_blk,
-            page_docs=self.doc_tile is not None)
+            page_docs=self.doc_tile is not None,
+            r_mode=self.r_mode, r_cap=self.r_cap)
         ring = tuple(self.ring_axes)
         self._sh_tok = NamedSharding(self.mesh, P(ring, None, None))
         self._sh_rep = NamedSharding(self.mesh, P())
@@ -754,6 +865,16 @@ class NomadLDA:
             arrays.update(tok_slot=put(lay.tok_slot, self._sh_tok))
         if lay.doc_tile > 0:
             arrays.update(doc_tile_of=put(lay.doc_tile_of, self._sh_tok))
+        if self.r_mode == "sparse":
+            from repro.kernels.fused_sweep import rbucket
+            cap = self.r_cap or lay.T
+            tpc, cnt = rbucket.build_side_table(
+                jnp.asarray(n_td.reshape(lay.W * lay.I_max, lay.T)), cap)
+            arrays.update(
+                rb_topics=put(np.asarray(
+                    tpc.reshape(lay.W, lay.I_max, cap)), self._sh_tok),
+                rb_counts=put(np.asarray(
+                    cnt.reshape(lay.W, lay.I_max, cap)), self._sh_tok))
         return arrays
 
     def sweep(self, arrays: dict, seed: int) -> dict:
@@ -767,9 +888,13 @@ class NomadLDA:
             args += (arrays["tok_slot"],)
         if lay.doc_tile > 0:
             args += (arrays["doc_tile_of"],)
-        z, n_td, n_wt, n_t = self._sweep(*args)
+        if self.r_mode == "sparse":
+            args += (arrays["rb_topics"], arrays["rb_counts"])
+        res = self._sweep(*args)
         out = dict(arrays)
-        out.update(z=z, n_td=n_td, n_wt=n_wt, n_t=n_t)
+        out.update(z=res[0], n_td=res[1], n_wt=res[2], n_t=res[3])
+        if self.r_mode == "sparse":
+            out.update(rb_topics=res[4], rb_counts=res[5])
         return out
 
     # -- evaluation -----------------------------------------------------------

@@ -35,9 +35,28 @@ __all__ = [
     "alias_draw", "alias_init", "alias_update",
     "bsearch_draw", "bsearch_init", "bsearch_update",
     "ftree_draw", "ftree_init", "ftree_update",
-    "lsearch_draw", "lsearch_init", "lsearch_update",
+    "lsearch_draw", "lsearch_guarded", "lsearch_init", "lsearch_update",
     "SAMPLERS",
 ]
+
+
+def lsearch_guarded(c: jax.Array, u_val: jax.Array) -> jax.Array:
+    """Zero-mass-aware LSearch over a cumulative vector: ``min{t : c_t > u}``,
+    guarded to the last positive-mass index.
+
+    The naive ``Σ(c ≤ u)`` walks off the end of the support whenever ``u``
+    reaches ``c[-1]`` — which a boundary draw CAN produce when the caller
+    scales ``u01`` by a separately computed total (``p.sum()`` and
+    ``cumsum(p)[-1]`` are different float reductions and disagree on mixed-
+    magnitude vectors), selecting an out-of-range or zero-mass index.  The
+    guard ``Σ(c < c[-1])`` is exactly the index of the last entry with
+    positive mass (every earlier entry's cumsum is strictly below the
+    total), so boundary draws collapse onto the topmost valid topic and
+    interior draws are untouched (interior indices satisfy both bounds).
+    """
+    last = jnp.sum((c < c[-1]).astype(jnp.int32))
+    return jnp.minimum(jnp.sum((c <= u_val).astype(jnp.int32)),
+                       last).astype(jnp.int32)
 
 
 # --------------------------------------------------------------------------
@@ -53,10 +72,11 @@ def lsearch_init(p: jax.Array) -> LSearchState:
 
 
 def lsearch_draw(state: LSearchState, u01: jax.Array) -> jax.Array:
-    u = u01 * state.c_T
-    c = jnp.cumsum(state.p)
-    # z = min{t : c_t > u}; vectorized linear search (Θ(T) work).
-    return jnp.sum(c <= u).astype(jnp.int32)
+    # z = min{t : c_t > u}; vectorized linear search (Θ(T) work).  The
+    # cached normalizer c_T is a different float reduction than cumsum(p)
+    # (and drifts under Θ(1) updates), so u01·c_T can reach past the last
+    # cumsum entry — the guard keeps boundary draws in-support.
+    return lsearch_guarded(jnp.cumsum(state.p), u01 * state.c_T)
 
 
 def lsearch_update(state: LSearchState, t: jax.Array,

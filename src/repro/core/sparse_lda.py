@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.cgs import LDAState
+from repro.core.samplers import lsearch_guarded
 
 __all__ = ["sweep_sparse_lda"]
 
@@ -31,7 +32,6 @@ def sweep_sparse_lda(state: LDAState, doc_ids, word_ids, order,
                      return_bucket_stats: bool = False):
     """One exact doc-by-doc SparseLDA sweep. Optionally returns per-token
     bucket choice (0=smoothing, 1=doc, 2=word) for Table-2 style analysis."""
-    T = state.n_t.shape[0]
     beta_bar = beta * state.n_wt.shape[0]
     key, sweep_key = jax.random.split(state.key)
     u = jax.random.uniform(sweep_key, (order.shape[0],))
@@ -56,13 +56,19 @@ def sweep_sparse_lda(state: LDAState, doc_ids, word_ids, order,
         # Bucket dispatch (SparseLDA order: word bucket checked first).
         in_q = u_val < q_mass
         in_r = (~in_q) & (u_val < q_mass + r_mass)
-        # LSearch within each bucket.
-        t_from = lambda vec, uu: jnp.sum(jnp.cumsum(vec) <= uu).astype(jnp.int32)
+        # Guarded LSearch within each bucket: the bucket masses are .sum()
+        # reductions but the walk is over cumsum(vec) — different float
+        # reductions that disagree on mixed-magnitude vectors — so a draw
+        # the dispatch assigns to a bucket can overrun that bucket's cumsum
+        # (the old dense clip to T-1 then selected topic T-1 regardless of
+        # its mass).  lsearch_guarded pins such draws to the bucket's last
+        # positive-mass topic instead, keeping the draw in-support and the
+        # bucket stats consistent with the dispatch.
+        t_from = lambda vec, uu: lsearch_guarded(jnp.cumsum(vec), uu)
         t_new = jnp.where(
             in_q, t_from(q_vec, u_val),
             jnp.where(in_r, t_from(r_vec, u_val - q_mass),
                       t_from(s_vec, u_val - q_mass - r_mass)))
-        t_new = jnp.clip(t_new, 0, T - 1)
         bucket = jnp.where(in_q, 2, jnp.where(in_r, 1, 0)).astype(jnp.int32)
 
         n_td = n_td.at[d, t_new].add(1)

@@ -285,6 +285,9 @@ class NomadLayout:
     cell_of_tile: np.ndarray | None = None   # ragged (W,W,n_tiles) int32
     tok_slot: np.ndarray | None = None       # ragged (W,W,S) int32;
                                  #   dense too when doc_tile grouping is on
+    r_cap: int = 0               # sparse r-bucket capacity: the per-shard
+                                 #   T_d_max bound min(T, max doc length)
+                                 #   (0 = unknown, callers fall back to T)
     doc_tile: int = 0            # doc rows per slab (0 = ungrouped)
     n_doc_tiles: int = 1         # slabs per worker shard (ceil(I_max/doc_tile))
     doc_blk: int = 0             # dense: tokens per doc-tile-aligned grid step
@@ -571,12 +574,17 @@ def build_layout(corpus: Corpus, *, n_workers: int, T: int,
     prev_same_word[1:] = swrd[1:] == swrd[:-1]
     bound = ~(prev_same_cell & prev_same_word)
 
+    # Sparse r-bucket capacity (rbucket module docstring): a document of n
+    # tokens holds ≤ min(T, n) distinct topics, and at increment time one
+    # token is unassigned, so min(T, max doc length) slots always suffice.
+    r_cap = max(1, min(T, int(corpus.doc_lengths().max(initial=1))))
+
     common = dict(
         W=W, B=B, L=L, T=T, num_words=corpus.num_words,
         doc_of_worker=doc_of_worker, word_of_block=word_of_block,
         I_max=I_max, J_max=J_max,
         doc_assign=doc_assign, word_assign=word_assign,
-        cell_sizes=cell_sizes)
+        cell_sizes=cell_sizes, r_cap=r_cap)
 
     def _seg_layout(gran: int):
         """Doc-group segment geometry at grid step ``gran`` tokens; the

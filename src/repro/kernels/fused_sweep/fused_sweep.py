@@ -83,6 +83,21 @@ order as ``cgs.sweep_fplda_word``, so given identical uniforms the kernel
 reproduces that sweep's ``z``/counts bit-for-bit (the clip/max guards are
 no-ops on consistent count tables).  ``interpret=True`` is the CPU-safe
 default; the compiled path targets the layout above.
+
+The r-bucket draw is **doc-sparse** (paper §3's |T_d| ≪ T argument,
+DESIGN.md §7): the r-term cumsum runs over the capacity-``r_cap``
+compacted vector of the document's nonzero topics
+(:mod:`repro.kernels.fused_sweep.rbucket`).  Every kernel takes a static
+``r_cap`` and a ``sparse`` switch: dense mode recomputes the compaction
+from the VMEM ``n_td`` row per token (Θ(T)); sparse mode maintains it as
+per-doc ``(topics, counts)`` side tables — two extra ``(I, r_cap)`` i32
+operands riding in/out exactly like ``n_td`` (whole-VMEM with constant
+index maps, *including* in the doc-tiled twins: the tables are a factor
+``T/r_cap`` smaller than the table the slab paging evicts) — making the
+per-token r-draw Θ(r_cap), independent of T.  Both modes draw from the
+same compacted vector, so their chains are bit-identical (the rbucket
+module docstring carries the exactness argument; ``r_cap`` itself is
+chain-affecting, so compared runs must share it).
 """
 from __future__ import annotations
 
@@ -94,21 +109,28 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import ftree
+from repro.kernels.fused_sweep import rbucket
 
 N_BLK = 256  # tokens per grid program
 
 F32 = jnp.float32
 
 
-def _sweep_tile(T: int, n_blk: int, alpha: float, beta: float,
+def _sweep_tile(T: int, n_blk: int, r_cap: int, alpha: float, beta: float,
                 beta_bar: float, tok_doc, tok_wrd, tok_valid, tok_bound,
                 z_tile, u_tile, nt0, F0,
-                ntd_load, ntd_store, nwt_load, nwt_store):
+                ntd_load, ntd_store, nwt_load, nwt_store,
+                rb_load=None, rb_store=None):
     """Exact Alg. 3 chain over one token tile.
 
     Row access to the doc-topic / word-topic tables is abstracted behind
     ``*_load(idx) -> (T,)`` / ``*_store(idx, row)`` so the single-block and
-    cell-batch kernels share the float-op order exactly.
+    cell-batch kernels share the float-op order exactly.  The r-bucket
+    draw runs over the capacity-``r_cap`` compacted topic vector: with
+    ``rb_load``/``rb_store`` unset (dense mode) it is recomputed from the
+    decremented doc row per token; set, it is loaded from / stored to the
+    per-doc side table (``rb_load(d) -> (topics, counts)``,
+    ``rb_store(d, topics, counts)``) and maintained incrementally.
     """
 
     def q_of(nwt_row, nt):
@@ -140,16 +162,21 @@ def _sweep_tile(T: int, n_blk: int, alpha: float, beta: float,
         F = ftree.set_leaf(F, t_old,
                            jnp.where(valid, new_leaf, F[T + t_old]))
 
-        # --- two-level draw p = α·q + r (eq. (6)) --------------------------
+        # --- two-level draw p = α·q + r (eq. (6), doc-sparse r-bucket) -----
         q = ftree.leaves(F)
-        r = ntd_row.astype(F32) * q
-        c = jnp.cumsum(r)
+        if rb_load is None:
+            topics_d, counts_d = rbucket.compact_row(ntd_row, r_cap)
+        else:
+            topics_d, counts_d = rb_load(d)
+            topics_d, counts_d = rbucket.decrement(topics_d, counts_d,
+                                                   t_old, valid)
+        c = rbucket.r_cumsum(topics_d, counts_d, q)
         r_mass = c[-1]
         q_total = ftree.total(F)
         norm = alpha * q_total + r_mass
         u_val = u01 * norm
         in_r = u_val < r_mass
-        t_r = jnp.clip(jnp.sum(c <= u_val), 0, T - 1).astype(jnp.int32)
+        t_r = rbucket.pick(topics_d, counts_d, c, u_val)
         t_q = ftree.sample(F, jnp.clip((u_val - r_mass)
                                        / jnp.maximum(alpha * q_total, 1e-30),
                                        0.0, 1.0 - 1e-7))
@@ -164,6 +191,10 @@ def _sweep_tile(T: int, n_blk: int, alpha: float, beta: float,
         F = ftree.set_leaf(F, t_new,
                            jnp.where(valid, new_leaf2, F[T + t_new]))
 
+        if rb_store is not None:
+            topics_d, counts_d = rbucket.increment(topics_d, counts_d,
+                                                   t_new, valid)
+            rb_store(d, topics_d, counts_d)
         ntd_store(d, ntd_row)
         nwt_store(w, nwt_row)
         z_tile = z_tile.at[k].set(t_new)
@@ -172,12 +203,35 @@ def _sweep_tile(T: int, n_blk: int, alpha: float, beta: float,
     return jax.lax.fori_loop(0, n_blk, body, (z_tile, nt0, F0))
 
 
-def _kernel(T: int, n_blk: int, alpha: float, beta: float, beta_bar: float,
-            # inputs
-            tok_doc_ref, tok_wrd_ref, tok_valid_ref, tok_bound_ref,
-            z_in_ref, u_ref, ntd_in_ref, nwt_in_ref, nt_in_ref,
-            # outputs
-            z_ref, ntd_ref, nwt_ref, nt_ref, f_ref):
+def _rb_accessors(tpc_ref, cnt_ref):
+    """Row load/store on the whole-VMEM per-doc side tables (sparse mode)."""
+    def load(d):
+        return (tpc_ref[pl.ds(d, 1), :][0], cnt_ref[pl.ds(d, 1), :][0])
+
+    def store(d, topics, counts):
+        tpc_ref[pl.ds(d, 1), :] = topics[None]
+        cnt_ref[pl.ds(d, 1), :] = counts[None]
+
+    return load, store
+
+
+def _rb_kw(sparse, tpc_ref, cnt_ref):
+    if not sparse:
+        return {}
+    rb_load, rb_store = _rb_accessors(tpc_ref, cnt_ref)
+    return dict(rb_load=rb_load, rb_store=rb_store)
+
+
+def _kernel(T: int, n_blk: int, r_cap: int, sparse: bool, alpha: float,
+            beta: float, beta_bar: float, *refs):
+    (tok_doc_ref, tok_wrd_ref, tok_valid_ref, tok_bound_ref,
+     z_in_ref, u_ref, ntd_in_ref, nwt_in_ref, nt_in_ref) = refs[:9]
+    if sparse:
+        tpc_in_ref, cnt_in_ref = refs[9:11]
+        z_ref, ntd_ref, nwt_ref, nt_ref, f_ref, tpc_ref, cnt_ref = refs[11:]
+    else:
+        tpc_ref = cnt_ref = None
+        z_ref, ntd_ref, nwt_ref, nt_ref, f_ref = refs[9:]
     first = pl.program_id(0) == 0
 
     @pl.when(first)
@@ -186,9 +240,12 @@ def _kernel(T: int, n_blk: int, alpha: float, beta: float, beta_bar: float,
         nwt_ref[...] = nwt_in_ref[...]
         nt_ref[...] = nt_in_ref[...]
         f_ref[...] = jnp.zeros((2 * T,), F32)
+        if sparse:
+            tpc_ref[...] = tpc_in_ref[...]
+            cnt_ref[...] = cnt_in_ref[...]
 
     z_tile, nt, F = _sweep_tile(
-        T, n_blk, alpha, beta, beta_bar,
+        T, n_blk, r_cap, alpha, beta, beta_bar,
         tok_doc_ref[...], tok_wrd_ref[...], tok_valid_ref[...],
         tok_bound_ref[...], z_in_ref[...], u_ref[...],
         nt_ref[...], f_ref[...],
@@ -197,7 +254,8 @@ def _kernel(T: int, n_blk: int, alpha: float, beta: float, beta_bar: float,
             (pl.ds(d, 1), slice(None)), row[None]),
         nwt_load=lambda w: nwt_ref[pl.ds(w, 1), :][0],
         nwt_store=lambda w, row: nwt_ref.__setitem__(
-            (pl.ds(w, 1), slice(None)), row[None]))
+            (pl.ds(w, 1), slice(None)), row[None]),
+        **_rb_kw(sparse, tpc_ref, cnt_ref))
 
     z_ref[...] = z_tile
     nt_ref[...] = nt
@@ -205,39 +263,55 @@ def _kernel(T: int, n_blk: int, alpha: float, beta: float, beta_bar: float,
 
 
 @functools.partial(jax.jit, static_argnames=("alpha", "beta", "beta_bar",
-                                             "n_blk", "interpret"))
+                                             "n_blk", "r_cap", "interpret"))
 def fused_sweep_pallas(tok_doc: jax.Array, tok_wrd: jax.Array,
                        tok_valid: jax.Array, tok_bound: jax.Array,
                        z: jax.Array, u: jax.Array,
-                       n_td: jax.Array, n_wt: jax.Array, n_t: jax.Array, *,
+                       n_td: jax.Array, n_wt: jax.Array, n_t: jax.Array,
+                       topics: jax.Array | None = None,
+                       counts: jax.Array | None = None, *,
                        alpha: float, beta: float, beta_bar: float,
+                       r_cap: int = 0,
                        n_blk: int = N_BLK, interpret: bool = True):
     """One fused F+LDA sweep over a padded token stream.
 
     Shapes: tok_* / z / u are (N,) with N % n_blk == 0; n_td (I, T) i32;
     n_wt (J, T) i32; n_t (T,) i32; T a power of two.  Returns
     (z', n_td', n_wt', n_t', F) with F the final F+tree (2T,) f32.
+
+    ``r_cap`` (static; 0 → T) is the compacted r-vector capacity.  Passing
+    ``topics``/``counts`` side tables ((I, r_cap) i32 each) selects sparse
+    r-mode: they are maintained in VMEM and returned appended — a 7-tuple.
     """
     n = tok_doc.shape[0]
     I, T = n_td.shape
     J = n_wt.shape[0]
+    cap = int(r_cap) if r_cap else T
+    sparse = topics is not None
     grid = (n // n_blk,)
 
     tile = lambda: pl.BlockSpec((n_blk,), lambda b: (b,))
     whole = lambda *shape: pl.BlockSpec(shape, lambda b: (0,) * len(shape))
 
+    rb_specs = [whole(I, cap), whole(I, cap)] if sparse else []
+    rb_shape = ([jax.ShapeDtypeStruct((I, cap), jnp.int32)] * 2
+                if sparse else [])
+    rb_args = (topics, counts) if sparse else ()
+
     return pl.pallas_call(
-        functools.partial(_kernel, T, n_blk,
+        functools.partial(_kernel, T, n_blk, cap, sparse,
                           float(alpha), float(beta), float(beta_bar)),
         grid=grid,
         in_specs=[
             tile(), tile(), tile(), tile(), tile(), tile(),   # token stream
             whole(I, T), whole(J, T), whole(T),               # count tables
+            *rb_specs,                                        # side tables
         ],
         out_specs=[
             tile(),                                           # z'
             whole(I, T), whole(J, T), whole(T),               # tables
             whole(2 * T),                                     # final F+tree
+            *rb_specs,                                        # side tables
         ],
         out_shape=[
             jax.ShapeDtypeStruct((n,), jnp.int32),
@@ -245,18 +319,23 @@ def fused_sweep_pallas(tok_doc: jax.Array, tok_wrd: jax.Array,
             jax.ShapeDtypeStruct((J, T), jnp.int32),
             jax.ShapeDtypeStruct((T,), jnp.int32),
             jax.ShapeDtypeStruct((2 * T,), F32),
+            *rb_shape,
         ],
         interpret=interpret,
-    )(tok_doc, tok_wrd, tok_valid, tok_bound, z, u, n_td, n_wt, n_t)
+    )(tok_doc, tok_wrd, tok_valid, tok_bound, z, u, n_td, n_wt, n_t,
+      *rb_args)
 
 
-def _cells_kernel(T: int, n_blk: int, alpha: float, beta: float,
-                  beta_bar: float,
-                  # inputs
-                  tok_doc_ref, tok_wrd_ref, tok_valid_ref, tok_bound_ref,
-                  z_in_ref, u_ref, ntd_in_ref, nwt_in_ref, nt_in_ref,
-                  # outputs
-                  z_ref, ntd_ref, nwt_ref, nt_ref, f_ref):
+def _cells_kernel(T: int, n_blk: int, r_cap: int, sparse: bool,
+                  alpha: float, beta: float, beta_bar: float, *refs):
+    (tok_doc_ref, tok_wrd_ref, tok_valid_ref, tok_bound_ref,
+     z_in_ref, u_ref, ntd_in_ref, nwt_in_ref, nt_in_ref) = refs[:9]
+    if sparse:
+        tpc_in_ref, cnt_in_ref = refs[9:11]
+        z_ref, ntd_ref, nwt_ref, nt_ref, f_ref, tpc_ref, cnt_ref = refs[11:]
+    else:
+        tpc_ref = cnt_ref = None
+        z_ref, ntd_ref, nwt_ref, nt_ref, f_ref = refs[9:]
     first = (pl.program_id(0) == 0) & (pl.program_id(1) == 0)
     cell_start = pl.program_id(1) == 0
 
@@ -265,6 +344,9 @@ def _cells_kernel(T: int, n_blk: int, alpha: float, beta: float,
         ntd_ref[...] = ntd_in_ref[...]
         nt_ref[...] = nt_in_ref[...]
         f_ref[...] = jnp.zeros((2 * T,), F32)
+        if sparse:
+            tpc_ref[...] = tpc_in_ref[...]
+            cnt_ref[...] = cnt_in_ref[...]
 
     # New cell ⇒ new word-topic block paged into the output accumulator.
     @pl.when(cell_start)
@@ -272,7 +354,7 @@ def _cells_kernel(T: int, n_blk: int, alpha: float, beta: float,
         nwt_ref[...] = nwt_in_ref[...]
 
     z_tile, nt, F = _sweep_tile(
-        T, n_blk, alpha, beta, beta_bar,
+        T, n_blk, r_cap, alpha, beta, beta_bar,
         tok_doc_ref[0], tok_wrd_ref[0], tok_valid_ref[0],
         tok_bound_ref[0], z_in_ref[0], u_ref[0],
         nt_ref[...], f_ref[...],
@@ -281,7 +363,8 @@ def _cells_kernel(T: int, n_blk: int, alpha: float, beta: float,
             (pl.ds(d, 1), slice(None)), row[None]),
         nwt_load=lambda w: nwt_ref[0, pl.ds(w, 1), :][0],
         nwt_store=lambda w, row: nwt_ref.__setitem__(
-            (0, pl.ds(w, 1), slice(None)), row[None]))
+            (0, pl.ds(w, 1), slice(None)), row[None]),
+        **_rb_kw(sparse, tpc_ref, cnt_ref))
 
     z_ref[...] = z_tile[None]
     nt_ref[...] = nt
@@ -289,13 +372,16 @@ def _cells_kernel(T: int, n_blk: int, alpha: float, beta: float,
 
 
 @functools.partial(jax.jit, static_argnames=("alpha", "beta", "beta_bar",
-                                             "n_blk", "interpret"))
+                                             "n_blk", "r_cap", "interpret"))
 def fused_sweep_cells_pallas(tok_doc: jax.Array, tok_wrd: jax.Array,
                              tok_valid: jax.Array, tok_bound: jax.Array,
                              z: jax.Array, u: jax.Array,
                              n_td: jax.Array, n_wt: jax.Array,
-                             n_t: jax.Array, *,
+                             n_t: jax.Array,
+                             topics: jax.Array | None = None,
+                             counts: jax.Array | None = None, *,
                              alpha: float, beta: float, beta_bar: float,
+                             r_cap: int = 0,
                              n_blk: int = N_BLK, interpret: bool = True):
     """One fused F+LDA sweep over a batch of k cells (a nomad block queue).
 
@@ -303,11 +389,14 @@ def fused_sweep_cells_pallas(tok_doc: jax.Array, tok_wrd: jax.Array,
     shared across cells; n_wt (k, J, T) i32, one word-topic block per cell
     (``tok_wrd`` is block-local); n_t (T,) i32.  Cells are swept in order
     c = 0..k-1 with the exact chain carried through ``n_td``/``n_t``/``F``;
-    returns (z', n_td', n_wt', n_t', F).
+    returns (z', n_td', n_wt', n_t', F), plus the ``(topics, counts)``
+    side tables appended when they are passed (sparse r-mode).
     """
     k, L = tok_doc.shape
     I, T = n_td.shape
     J = n_wt.shape[1]
+    cap = int(r_cap) if r_cap else T
+    sparse = topics is not None
     grid = (k, L // n_blk)
 
     tile = lambda: pl.BlockSpec((1, n_blk), lambda c, t: (c, t))
@@ -315,18 +404,25 @@ def fused_sweep_cells_pallas(tok_doc: jax.Array, tok_wrd: jax.Array,
     whole = lambda *shape: pl.BlockSpec(shape,
                                         lambda c, t: (0,) * len(shape))
 
+    rb_specs = [whole(I, cap), whole(I, cap)] if sparse else []
+    rb_shape = ([jax.ShapeDtypeStruct((I, cap), jnp.int32)] * 2
+                if sparse else [])
+    rb_args = (topics, counts) if sparse else ()
+
     return pl.pallas_call(
-        functools.partial(_cells_kernel, T, n_blk,
+        functools.partial(_cells_kernel, T, n_blk, cap, sparse,
                           float(alpha), float(beta), float(beta_bar)),
         grid=grid,
         in_specs=[
             tile(), tile(), tile(), tile(), tile(), tile(),   # token stream
             whole(I, T), blk(), whole(T),                     # count tables
+            *rb_specs,                                        # side tables
         ],
         out_specs=[
             tile(),                                           # z'
             whole(I, T), blk(), whole(T),                     # tables
             whole(2 * T),                                     # final F+tree
+            *rb_specs,                                        # side tables
         ],
         out_shape=[
             jax.ShapeDtypeStruct((k, L), jnp.int32),
@@ -334,19 +430,24 @@ def fused_sweep_cells_pallas(tok_doc: jax.Array, tok_wrd: jax.Array,
             jax.ShapeDtypeStruct((k, J, T), jnp.int32),
             jax.ShapeDtypeStruct((T,), jnp.int32),
             jax.ShapeDtypeStruct((2 * T,), F32),
+            *rb_shape,
         ],
         interpret=interpret,
-    )(tok_doc, tok_wrd, tok_valid, tok_bound, z, u, n_td, n_wt, n_t)
+    )(tok_doc, tok_wrd, tok_valid, tok_bound, z, u, n_td, n_wt, n_t,
+      *rb_args)
 
 
-def _ragged_kernel(T: int, n_blk: int, alpha: float, beta: float,
-                   beta_bar: float,
-                   # scalar prefetch, then inputs
-                   cot_ref,
-                   tok_doc_ref, tok_wrd_ref, tok_valid_ref, tok_bound_ref,
-                   z_in_ref, u_ref, ntd_in_ref, nwt_in_ref, nt_in_ref,
-                   # outputs
-                   z_ref, ntd_ref, nwt_ref, nt_ref, f_ref):
+def _ragged_kernel(T: int, n_blk: int, r_cap: int, sparse: bool,
+                   alpha: float, beta: float, beta_bar: float, *refs):
+    cot_ref = refs[0]                                  # scalar prefetch
+    (tok_doc_ref, tok_wrd_ref, tok_valid_ref, tok_bound_ref,
+     z_in_ref, u_ref, ntd_in_ref, nwt_in_ref, nt_in_ref) = refs[1:10]
+    if sparse:
+        tpc_in_ref, cnt_in_ref = refs[10:12]
+        z_ref, ntd_ref, nwt_ref, nt_ref, f_ref, tpc_ref, cnt_ref = refs[12:]
+    else:
+        tpc_ref = cnt_ref = None
+        z_ref, ntd_ref, nwt_ref, nt_ref, f_ref = refs[10:]
     t = pl.program_id(0)
     first = t == 0
     # Cell start: the tile→cell map steps (it is non-decreasing, one
@@ -359,13 +460,16 @@ def _ragged_kernel(T: int, n_blk: int, alpha: float, beta: float,
         ntd_ref[...] = ntd_in_ref[...]
         nt_ref[...] = nt_in_ref[...]
         f_ref[...] = jnp.zeros((2 * T,), F32)
+        if sparse:
+            tpc_ref[...] = tpc_in_ref[...]
+            cnt_ref[...] = cnt_in_ref[...]
 
     @pl.when(cell_start)
     def _load_block():
         nwt_ref[...] = nwt_in_ref[...]
 
     z_tile, nt, F = _sweep_tile(
-        T, n_blk, alpha, beta, beta_bar,
+        T, n_blk, r_cap, alpha, beta, beta_bar,
         tok_doc_ref[...], tok_wrd_ref[...], tok_valid_ref[...],
         tok_bound_ref[...], z_in_ref[...], u_ref[...],
         nt_ref[...], f_ref[...],
@@ -374,7 +478,8 @@ def _ragged_kernel(T: int, n_blk: int, alpha: float, beta: float,
             (pl.ds(d, 1), slice(None)), row[None]),
         nwt_load=lambda w: nwt_ref[0, pl.ds(w, 1), :][0],
         nwt_store=lambda w, row: nwt_ref.__setitem__(
-            (0, pl.ds(w, 1), slice(None)), row[None]))
+            (0, pl.ds(w, 1), slice(None)), row[None]),
+        **_rb_kw(sparse, tpc_ref, cnt_ref))
 
     z_ref[...] = z_tile
     nt_ref[...] = nt
@@ -382,14 +487,17 @@ def _ragged_kernel(T: int, n_blk: int, alpha: float, beta: float,
 
 
 @functools.partial(jax.jit, static_argnames=("alpha", "beta", "beta_bar",
-                                             "n_blk", "interpret"))
+                                             "n_blk", "r_cap", "interpret"))
 def fused_sweep_ragged_pallas(cell_of_tile: jax.Array,
                               tok_doc: jax.Array, tok_wrd: jax.Array,
                               tok_valid: jax.Array, tok_bound: jax.Array,
                               z: jax.Array, u: jax.Array,
                               n_td: jax.Array, n_wt: jax.Array,
-                              n_t: jax.Array, *,
+                              n_t: jax.Array,
+                              topics: jax.Array | None = None,
+                              counts: jax.Array | None = None, *,
                               alpha: float, beta: float, beta_bar: float,
+                              r_cap: int = 0,
                               n_blk: int, interpret: bool = True):
     """One fused F+LDA sweep over a ragged cell stream (a nomad queue).
 
@@ -399,12 +507,23 @@ def fused_sweep_ragged_pallas(cell_of_tile: jax.Array,
     (``tok_wrd`` is block-local); n_t (T,) i32.  Tiles run in sequence
     with ``n_td``/``n_t``/``F`` carried; tile ``t`` addresses word-topic
     block ``cell_of_tile[t]``, paged by scalar-prefetched index map.
-    Returns (z', n_td', n_wt', n_t', F).
+    Returns (z', n_td', n_wt', n_t', F), plus the ``(topics, counts)``
+    side tables appended when they are passed (sparse r-mode).
     """
     n = tok_doc.shape[0]
     I, T = n_td.shape
     k, J = n_wt.shape[0], n_wt.shape[1]
+    cap = int(r_cap) if r_cap else T
+    sparse = topics is not None
     n_tiles = n // n_blk
+
+    rb_in = ([pl.BlockSpec((I, cap), lambda t, cot: (0, 0))] * 2
+             if sparse else [])
+    rb_out = ([pl.BlockSpec((I, cap), lambda t, cot: (0, 0))] * 2
+              if sparse else [])
+    rb_shape = ([jax.ShapeDtypeStruct((I, cap), jnp.int32)] * 2
+                if sparse else [])
+    rb_args = (topics, counts) if sparse else ()
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
@@ -415,6 +534,7 @@ def fused_sweep_ragged_pallas(cell_of_tile: jax.Array,
             pl.BlockSpec((I, T), lambda t, cot: (0, 0)),
             pl.BlockSpec((1, J, T), lambda t, cot: (cot[t], 0, 0)),
             pl.BlockSpec((T,), lambda t, cot: (0,)),
+            *rb_in,                                        # side tables
         ],
         out_specs=[
             pl.BlockSpec((n_blk,), lambda t, cot: (t,)),   # z'
@@ -422,10 +542,11 @@ def fused_sweep_ragged_pallas(cell_of_tile: jax.Array,
             pl.BlockSpec((1, J, T), lambda t, cot: (cot[t], 0, 0)),
             pl.BlockSpec((T,), lambda t, cot: (0,)),
             pl.BlockSpec((2 * T,), lambda t, cot: (0,)),   # final F+tree
+            *rb_out,                                       # side tables
         ],
     )
     return pl.pallas_call(
-        functools.partial(_ragged_kernel, T, n_blk,
+        functools.partial(_ragged_kernel, T, n_blk, cap, sparse,
                           float(alpha), float(beta), float(beta_bar)),
         grid_spec=grid_spec,
         out_shape=[
@@ -434,10 +555,11 @@ def fused_sweep_ragged_pallas(cell_of_tile: jax.Array,
             jax.ShapeDtypeStruct((k, J, T), jnp.int32),
             jax.ShapeDtypeStruct((T,), jnp.int32),
             jax.ShapeDtypeStruct((2 * T,), F32),
+            *rb_shape,
         ],
         interpret=interpret,
     )(cell_of_tile, tok_doc, tok_wrd, tok_valid, tok_bound, z, u,
-      n_td, n_wt, n_t)
+      n_td, n_wt, n_t, *rb_args)
 
 
 # ---------------------------------------------------------------------------
@@ -479,16 +601,21 @@ def _slab_accessors(slab, g, doc_rows):
     return load, store
 
 
-def _docs_kernel(T: int, n_blk: int, doc_rows: int, alpha: float,
-                 beta: float, beta_bar: float,
-                 # scalar prefetch, then inputs
-                 dto_ref,
-                 tok_doc_ref, tok_wrd_ref, tok_valid_ref, tok_bound_ref,
-                 z_in_ref, u_ref, ntd_in_ref, nwt_in_ref, nt_in_ref,
-                 # outputs
-                 z_ref, ntd_out_ref, nwt_ref, nt_ref, f_ref,
-                 # scratch
-                 slab, sem):
+def _docs_kernel(T: int, n_blk: int, doc_rows: int, r_cap: int,
+                 sparse: bool, alpha: float, beta: float, beta_bar: float,
+                 *refs):
+    dto_ref = refs[0]                                  # scalar prefetch
+    (tok_doc_ref, tok_wrd_ref, tok_valid_ref, tok_bound_ref,
+     z_in_ref, u_ref, ntd_in_ref, nwt_in_ref, nt_in_ref) = refs[1:10]
+    if sparse:
+        tpc_in_ref, cnt_in_ref = refs[10:12]
+        (z_ref, ntd_out_ref, nwt_ref, nt_ref, f_ref,
+         tpc_ref, cnt_ref) = refs[12:19]
+        slab, sem = refs[19:]
+    else:
+        tpc_ref = cnt_ref = None
+        z_ref, ntd_out_ref, nwt_ref, nt_ref, f_ref = refs[10:15]
+        slab, sem = refs[15:]
     t = pl.program_id(0)
     first = t == 0
     g = dto_ref[t]
@@ -499,20 +626,24 @@ def _docs_kernel(T: int, n_blk: int, doc_rows: int, alpha: float,
         nwt_ref[...] = nwt_in_ref[...]
         nt_ref[...] = nt_in_ref[...]
         f_ref[...] = jnp.zeros((2 * T,), F32)
+        if sparse:
+            tpc_ref[...] = tpc_in_ref[...]
+            cnt_ref[...] = cnt_in_ref[...]
 
     _doc_slab_page(doc_rows, g, g_prev, first, ntd_in_ref, ntd_out_ref,
                    slab, sem)
     ntd_load, ntd_store = _slab_accessors(slab, g, doc_rows)
 
     z_tile, nt, F = _sweep_tile(
-        T, n_blk, alpha, beta, beta_bar,
+        T, n_blk, r_cap, alpha, beta, beta_bar,
         tok_doc_ref[...], tok_wrd_ref[...], tok_valid_ref[...],
         tok_bound_ref[...], z_in_ref[...], u_ref[...],
         nt_ref[...], f_ref[...],
         ntd_load=ntd_load, ntd_store=ntd_store,
         nwt_load=lambda w: nwt_ref[pl.ds(w, 1), :][0],
         nwt_store=lambda w, row: nwt_ref.__setitem__(
-            (pl.ds(w, 1), slice(None)), row[None]))
+            (pl.ds(w, 1), slice(None)), row[None]),
+        **_rb_kw(sparse, tpc_ref, cnt_ref))
 
     z_ref[...] = z_tile
     nt_ref[...] = nt
@@ -524,28 +655,42 @@ def _docs_kernel(T: int, n_blk: int, doc_rows: int, alpha: float,
 
 
 @functools.partial(jax.jit, static_argnames=("alpha", "beta", "beta_bar",
-                                             "doc_rows", "n_blk",
+                                             "doc_rows", "n_blk", "r_cap",
                                              "interpret"))
 def fused_sweep_docs_pallas(doc_tile_of: jax.Array,
                             tok_doc: jax.Array, tok_wrd: jax.Array,
                             tok_valid: jax.Array, tok_bound: jax.Array,
                             z: jax.Array, u: jax.Array,
                             n_td: jax.Array, n_wt: jax.Array,
-                            n_t: jax.Array, *,
+                            n_t: jax.Array,
+                            topics: jax.Array | None = None,
+                            counts: jax.Array | None = None, *,
                             alpha: float, beta: float, beta_bar: float,
-                            doc_rows: int, n_blk: int = N_BLK,
+                            doc_rows: int, r_cap: int = 0,
+                            n_blk: int = N_BLK,
                             interpret: bool = True):
     """Doc-tiled twin of :func:`fused_sweep_pallas`.
 
     ``doc_tile_of`` is the (n // n_blk,) per-tile slab map; ``n_td`` rows
     must be a whole number of ``doc_rows`` slabs (``ops`` pads) and every
     tile's tokens must address rows of its own slab only (guaranteed by
-    ``build_layout(doc_tile=...)``'s grouped order).
+    ``build_layout(doc_tile=...)``'s grouped order).  The sparse-mode side
+    tables stay whole-VMEM (they are a factor T/r_cap smaller than the
+    table the slab paging evicts) and are not padded to slab multiples.
     """
     n = tok_doc.shape[0]
     I, T = n_td.shape
     J = n_wt.shape[0]
+    cap = int(r_cap) if r_cap else T
+    sparse = topics is not None
+    I_tab = topics.shape[0] if sparse else 0
     any_spec = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
+
+    rb_specs = ([pl.BlockSpec((I_tab, cap), lambda t, dto: (0, 0))] * 2
+                if sparse else [])
+    rb_shape = ([jax.ShapeDtypeStruct((I_tab, cap), jnp.int32)] * 2
+                if sparse else [])
+    rb_args = (topics, counts) if sparse else ()
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
@@ -556,6 +701,7 @@ def fused_sweep_docs_pallas(doc_tile_of: jax.Array,
             any_spec,                                      # n_td (HBM)
             pl.BlockSpec((J, T), lambda t, dto: (0, 0)),
             pl.BlockSpec((T,), lambda t, dto: (0,)),
+            *rb_specs,                                     # side tables
         ],
         out_specs=[
             pl.BlockSpec((n_blk,), lambda t, dto: (t,)),   # z'
@@ -563,12 +709,14 @@ def fused_sweep_docs_pallas(doc_tile_of: jax.Array,
             pl.BlockSpec((J, T), lambda t, dto: (0, 0)),
             pl.BlockSpec((T,), lambda t, dto: (0,)),
             pl.BlockSpec((2 * T,), lambda t, dto: (0,)),   # final F+tree
+            *rb_specs,                                     # side tables
         ],
         scratch_shapes=[pltpu.VMEM((doc_rows, T), jnp.int32),
                         pltpu.SemaphoreType.DMA],
     )
     return pl.pallas_call(
-        functools.partial(_docs_kernel, T, n_blk, int(doc_rows),
+        functools.partial(_docs_kernel, T, n_blk, int(doc_rows), cap,
+                          sparse,
                           float(alpha), float(beta), float(beta_bar)),
         grid_spec=grid_spec,
         out_shape=[
@@ -577,20 +725,28 @@ def fused_sweep_docs_pallas(doc_tile_of: jax.Array,
             jax.ShapeDtypeStruct((J, T), jnp.int32),
             jax.ShapeDtypeStruct((T,), jnp.int32),
             jax.ShapeDtypeStruct((2 * T,), F32),
+            *rb_shape,
         ],
         interpret=interpret,
     )(doc_tile_of, tok_doc, tok_wrd, tok_valid, tok_bound, z, u,
-      n_td, n_wt, n_t)
+      n_td, n_wt, n_t, *rb_args)
 
 
-def _cells_docs_kernel(T: int, n_blk: int, doc_rows: int, alpha: float,
-                       beta: float, beta_bar: float,
-                       dto_ref,
-                       tok_doc_ref, tok_wrd_ref, tok_valid_ref,
-                       tok_bound_ref, z_in_ref, u_ref,
-                       ntd_in_ref, nwt_in_ref, nt_in_ref,
-                       z_ref, ntd_out_ref, nwt_ref, nt_ref, f_ref,
-                       slab, sem):
+def _cells_docs_kernel(T: int, n_blk: int, doc_rows: int, r_cap: int,
+                       sparse: bool, alpha: float, beta: float,
+                       beta_bar: float, *refs):
+    dto_ref = refs[0]                                  # scalar prefetch
+    (tok_doc_ref, tok_wrd_ref, tok_valid_ref, tok_bound_ref,
+     z_in_ref, u_ref, ntd_in_ref, nwt_in_ref, nt_in_ref) = refs[1:10]
+    if sparse:
+        tpc_in_ref, cnt_in_ref = refs[10:12]
+        (z_ref, ntd_out_ref, nwt_ref, nt_ref, f_ref,
+         tpc_ref, cnt_ref) = refs[12:19]
+        slab, sem = refs[19:]
+    else:
+        tpc_ref = cnt_ref = None
+        z_ref, ntd_out_ref, nwt_ref, nt_ref, f_ref = refs[10:15]
+        slab, sem = refs[15:]
     c, t = pl.program_id(0), pl.program_id(1)
     n_c, n_t_g = pl.num_programs(0), pl.num_programs(1)
     first = (c == 0) & (t == 0)
@@ -606,6 +762,9 @@ def _cells_docs_kernel(T: int, n_blk: int, doc_rows: int, alpha: float,
     def _init():
         nt_ref[...] = nt_in_ref[...]
         f_ref[...] = jnp.zeros((2 * T,), F32)
+        if sparse:
+            tpc_ref[...] = tpc_in_ref[...]
+            cnt_ref[...] = cnt_in_ref[...]
 
     @pl.when(cell_start)
     def _load_block():
@@ -616,14 +775,15 @@ def _cells_docs_kernel(T: int, n_blk: int, doc_rows: int, alpha: float,
     ntd_load, ntd_store = _slab_accessors(slab, g, doc_rows)
 
     z_tile, nt, F = _sweep_tile(
-        T, n_blk, alpha, beta, beta_bar,
+        T, n_blk, r_cap, alpha, beta, beta_bar,
         tok_doc_ref[0], tok_wrd_ref[0], tok_valid_ref[0],
         tok_bound_ref[0], z_in_ref[0], u_ref[0],
         nt_ref[...], f_ref[...],
         ntd_load=ntd_load, ntd_store=ntd_store,
         nwt_load=lambda w: nwt_ref[0, pl.ds(w, 1), :][0],
         nwt_store=lambda w, row: nwt_ref.__setitem__(
-            (0, pl.ds(w, 1), slice(None)), row[None]))
+            (0, pl.ds(w, 1), slice(None)), row[None]),
+        **_rb_kw(sparse, tpc_ref, cnt_ref))
 
     z_ref[...] = z_tile[None]
     nt_ref[...] = nt
@@ -635,23 +795,35 @@ def _cells_docs_kernel(T: int, n_blk: int, doc_rows: int, alpha: float,
 
 
 @functools.partial(jax.jit, static_argnames=("alpha", "beta", "beta_bar",
-                                             "doc_rows", "n_blk",
+                                             "doc_rows", "n_blk", "r_cap",
                                              "interpret"))
 def fused_sweep_cells_docs_pallas(doc_tile_of: jax.Array,
                                   tok_doc: jax.Array, tok_wrd: jax.Array,
                                   tok_valid: jax.Array, tok_bound: jax.Array,
                                   z: jax.Array, u: jax.Array,
                                   n_td: jax.Array, n_wt: jax.Array,
-                                  n_t: jax.Array, *,
+                                  n_t: jax.Array,
+                                  topics: jax.Array | None = None,
+                                  counts: jax.Array | None = None, *,
                                   alpha: float, beta: float, beta_bar: float,
-                                  doc_rows: int, n_blk: int = N_BLK,
+                                  doc_rows: int, r_cap: int = 0,
+                                  n_blk: int = N_BLK,
                                   interpret: bool = True):
     """Doc-tiled twin of :func:`fused_sweep_cells_pallas`; ``doc_tile_of``
     is the (k, L // n_blk) per-(cell, tile) slab map."""
     k, L = tok_doc.shape
     I, T = n_td.shape
     J = n_wt.shape[1]
+    cap = int(r_cap) if r_cap else T
+    sparse = topics is not None
+    I_tab = topics.shape[0] if sparse else 0
     any_spec = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
+
+    rb_specs = ([pl.BlockSpec((I_tab, cap), lambda c, t, dto: (0, 0))] * 2
+                if sparse else [])
+    rb_shape = ([jax.ShapeDtypeStruct((I_tab, cap), jnp.int32)] * 2
+                if sparse else [])
+    rb_args = (topics, counts) if sparse else ()
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
@@ -662,6 +834,7 @@ def fused_sweep_cells_docs_pallas(doc_tile_of: jax.Array,
             any_spec,                                      # n_td (HBM)
             pl.BlockSpec((1, J, T), lambda c, t, dto: (c, 0, 0)),
             pl.BlockSpec((T,), lambda c, t, dto: (0,)),
+            *rb_specs,                                     # side tables
         ],
         out_specs=[
             pl.BlockSpec((1, n_blk), lambda c, t, dto: (c, t)),
@@ -669,12 +842,14 @@ def fused_sweep_cells_docs_pallas(doc_tile_of: jax.Array,
             pl.BlockSpec((1, J, T), lambda c, t, dto: (c, 0, 0)),
             pl.BlockSpec((T,), lambda c, t, dto: (0,)),
             pl.BlockSpec((2 * T,), lambda c, t, dto: (0,)),
+            *rb_specs,                                     # side tables
         ],
         scratch_shapes=[pltpu.VMEM((doc_rows, T), jnp.int32),
                         pltpu.SemaphoreType.DMA],
     )
     return pl.pallas_call(
         functools.partial(_cells_docs_kernel, T, n_blk, int(doc_rows),
+                          cap, sparse,
                           float(alpha), float(beta), float(beta_bar)),
         grid_spec=grid_spec,
         out_shape=[
@@ -683,20 +858,28 @@ def fused_sweep_cells_docs_pallas(doc_tile_of: jax.Array,
             jax.ShapeDtypeStruct((k, J, T), jnp.int32),
             jax.ShapeDtypeStruct((T,), jnp.int32),
             jax.ShapeDtypeStruct((2 * T,), F32),
+            *rb_shape,
         ],
         interpret=interpret,
     )(doc_tile_of, tok_doc, tok_wrd, tok_valid, tok_bound, z, u,
-      n_td, n_wt, n_t)
+      n_td, n_wt, n_t, *rb_args)
 
 
-def _ragged_docs_kernel(T: int, n_blk: int, doc_rows: int, alpha: float,
-                        beta: float, beta_bar: float,
-                        cot_ref, dto_ref,
-                        tok_doc_ref, tok_wrd_ref, tok_valid_ref,
-                        tok_bound_ref, z_in_ref, u_ref,
-                        ntd_in_ref, nwt_in_ref, nt_in_ref,
-                        z_ref, ntd_out_ref, nwt_ref, nt_ref, f_ref,
-                        slab, sem):
+def _ragged_docs_kernel(T: int, n_blk: int, doc_rows: int, r_cap: int,
+                        sparse: bool, alpha: float, beta: float,
+                        beta_bar: float, *refs):
+    cot_ref, dto_ref = refs[:2]                        # scalar prefetch
+    (tok_doc_ref, tok_wrd_ref, tok_valid_ref, tok_bound_ref,
+     z_in_ref, u_ref, ntd_in_ref, nwt_in_ref, nt_in_ref) = refs[2:11]
+    if sparse:
+        tpc_in_ref, cnt_in_ref = refs[11:13]
+        (z_ref, ntd_out_ref, nwt_ref, nt_ref, f_ref,
+         tpc_ref, cnt_ref) = refs[13:20]
+        slab, sem = refs[20:]
+    else:
+        tpc_ref = cnt_ref = None
+        z_ref, ntd_out_ref, nwt_ref, nt_ref, f_ref = refs[11:16]
+        slab, sem = refs[16:]
     t = pl.program_id(0)
     first = t == 0
     cell_start = first | (cot_ref[t] != cot_ref[jnp.maximum(t - 1, 0)])
@@ -707,6 +890,9 @@ def _ragged_docs_kernel(T: int, n_blk: int, doc_rows: int, alpha: float,
     def _init():
         nt_ref[...] = nt_in_ref[...]
         f_ref[...] = jnp.zeros((2 * T,), F32)
+        if sparse:
+            tpc_ref[...] = tpc_in_ref[...]
+            cnt_ref[...] = cnt_in_ref[...]
 
     @pl.when(cell_start)
     def _load_block():
@@ -717,14 +903,15 @@ def _ragged_docs_kernel(T: int, n_blk: int, doc_rows: int, alpha: float,
     ntd_load, ntd_store = _slab_accessors(slab, g, doc_rows)
 
     z_tile, nt, F = _sweep_tile(
-        T, n_blk, alpha, beta, beta_bar,
+        T, n_blk, r_cap, alpha, beta, beta_bar,
         tok_doc_ref[...], tok_wrd_ref[...], tok_valid_ref[...],
         tok_bound_ref[...], z_in_ref[...], u_ref[...],
         nt_ref[...], f_ref[...],
         ntd_load=ntd_load, ntd_store=ntd_store,
         nwt_load=lambda w: nwt_ref[0, pl.ds(w, 1), :][0],
         nwt_store=lambda w, row: nwt_ref.__setitem__(
-            (0, pl.ds(w, 1), slice(None)), row[None]))
+            (0, pl.ds(w, 1), slice(None)), row[None]),
+        **_rb_kw(sparse, tpc_ref, cnt_ref))
 
     z_ref[...] = z_tile
     nt_ref[...] = nt
@@ -736,7 +923,7 @@ def _ragged_docs_kernel(T: int, n_blk: int, doc_rows: int, alpha: float,
 
 
 @functools.partial(jax.jit, static_argnames=("alpha", "beta", "beta_bar",
-                                             "doc_rows", "n_blk",
+                                             "doc_rows", "n_blk", "r_cap",
                                              "interpret"))
 def fused_sweep_ragged_docs_pallas(cell_of_tile: jax.Array,
                                    doc_tile_of: jax.Array,
@@ -745,9 +932,12 @@ def fused_sweep_ragged_docs_pallas(cell_of_tile: jax.Array,
                                    tok_bound: jax.Array,
                                    z: jax.Array, u: jax.Array,
                                    n_td: jax.Array, n_wt: jax.Array,
-                                   n_t: jax.Array, *,
+                                   n_t: jax.Array,
+                                   topics: jax.Array | None = None,
+                                   counts: jax.Array | None = None, *,
                                    alpha: float, beta: float,
                                    beta_bar: float, doc_rows: int,
+                                   r_cap: int = 0,
                                    n_blk: int, interpret: bool = True):
     """Doc-tiled twin of :func:`fused_sweep_ragged_pallas`: two
     scalar-prefetch maps drive the paging — ``cell_of_tile`` pages the
@@ -757,7 +947,17 @@ def fused_sweep_ragged_docs_pallas(cell_of_tile: jax.Array,
     n = tok_doc.shape[0]
     I, T = n_td.shape
     k, J = n_wt.shape[0], n_wt.shape[1]
+    cap = int(r_cap) if r_cap else T
+    sparse = topics is not None
+    I_tab = topics.shape[0] if sparse else 0
     any_spec = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
+
+    rb_specs = ([pl.BlockSpec((I_tab, cap),
+                              lambda t, cot, dto: (0, 0))] * 2
+                if sparse else [])
+    rb_shape = ([jax.ShapeDtypeStruct((I_tab, cap), jnp.int32)] * 2
+                if sparse else [])
+    rb_args = (topics, counts) if sparse else ()
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
@@ -768,6 +968,7 @@ def fused_sweep_ragged_docs_pallas(cell_of_tile: jax.Array,
             any_spec,                                      # n_td (HBM)
             pl.BlockSpec((1, J, T), lambda t, cot, dto: (cot[t], 0, 0)),
             pl.BlockSpec((T,), lambda t, cot, dto: (0,)),
+            *rb_specs,                                     # side tables
         ],
         out_specs=[
             pl.BlockSpec((n_blk,), lambda t, cot, dto: (t,)),
@@ -775,12 +976,14 @@ def fused_sweep_ragged_docs_pallas(cell_of_tile: jax.Array,
             pl.BlockSpec((1, J, T), lambda t, cot, dto: (cot[t], 0, 0)),
             pl.BlockSpec((T,), lambda t, cot, dto: (0,)),
             pl.BlockSpec((2 * T,), lambda t, cot, dto: (0,)),
+            *rb_specs,                                     # side tables
         ],
         scratch_shapes=[pltpu.VMEM((doc_rows, T), jnp.int32),
                         pltpu.SemaphoreType.DMA],
     )
     return pl.pallas_call(
         functools.partial(_ragged_docs_kernel, T, n_blk, int(doc_rows),
+                          cap, sparse,
                           float(alpha), float(beta), float(beta_bar)),
         grid_spec=grid_spec,
         out_shape=[
@@ -789,7 +992,8 @@ def fused_sweep_ragged_docs_pallas(cell_of_tile: jax.Array,
             jax.ShapeDtypeStruct((k, J, T), jnp.int32),
             jax.ShapeDtypeStruct((T,), jnp.int32),
             jax.ShapeDtypeStruct((2 * T,), F32),
+            *rb_shape,
         ],
         interpret=interpret,
     )(cell_of_tile, doc_tile_of, tok_doc, tok_wrd, tok_valid, tok_bound,
-      z, u, n_td, n_wt, n_t)
+      z, u, n_td, n_wt, n_t, *rb_args)

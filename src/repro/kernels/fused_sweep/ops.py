@@ -5,6 +5,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.fused_sweep import rbucket
 from repro.kernels.fused_sweep.fused_sweep import (
     N_BLK, fused_sweep_cells_docs_pallas, fused_sweep_cells_pallas,
     fused_sweep_docs_pallas, fused_sweep_pallas,
@@ -20,17 +21,44 @@ def _is_pow2(n: int) -> bool:
 
 
 def fused_vmem_bytes(I: int, J: int, T: int, n_blk: int = N_BLK,
-                     doc_rows: int = 0) -> int:
+                     doc_rows: int = 0, r_cap: int = 0) -> int:
     """VMEM-resident bytes of one fused sweep call (DESIGN.md §7).
 
     Whole-shard mode (``doc_rows=0``) keeps the ``(I, T)`` doc-topic table
     in VMEM twice (input + output buffers); doc-tiled mode keeps a single
     ``(doc_rows, T)`` scratch slab and leaves the table in HBM.  Either
     way one ``(J, T)`` word-topic block rides in+out, plus ``n_t``, the
-    F+tree output and the seven token-tile streams.
+    F+tree output and the seven token-tile streams.  ``r_cap > 0``
+    (sparse r-mode) adds the two ``(I, r_cap)`` i32 side tables, each
+    riding in+out whole-VMEM (doc-tiled twins included — the tables are
+    never slabbed).
     """
     ntd = 4 * doc_rows * T if doc_rows > 0 else 2 * 4 * I * T
-    return ntd + 2 * 4 * (J * T + T) + 4 * 2 * T + 7 * 4 * n_blk
+    rb = 4 * 4 * I * r_cap if r_cap > 0 else 0
+    return ntd + rb + 2 * 4 * (J * T + T) + 4 * 2 * T + 7 * 4 * n_blk
+
+
+def _resolve_rmode(r_mode: str, r_cap, T: int):
+    """Validate ``r_mode``/``r_cap`` → (sparse, cap)."""
+    if r_mode not in ("dense", "sparse"):
+        raise ValueError(f"r_mode must be 'dense' or 'sparse', got {r_mode!r}")
+    cap = T if r_cap is None else int(r_cap)
+    if not 1 <= cap <= T:
+        raise ValueError(f"r_cap must be in [1, T={T}], got {cap}")
+    return r_mode == "sparse", cap
+
+
+def _side_tables(sparse, topics, counts, n_td, cap):
+    """Auto-build (or cast) the sparse-mode side tables; (None, None) in
+    dense mode."""
+    if not sparse:
+        if topics is not None or counts is not None:
+            raise ValueError("topics/counts side tables passed with "
+                             "r_mode='dense'")
+        return None, None
+    if topics is None:
+        return rbucket.build_side_table(n_td.astype(jnp.int32), cap)
+    return topics.astype(jnp.int32), counts.astype(jnp.int32)
 
 
 def _check_doc_args(doc_tile_of, doc_rows: int, shape) -> None:
@@ -72,6 +100,9 @@ def fused_sweep_tokens(tok_doc: jax.Array, tok_wrd: jax.Array,
                        alpha: float, beta: float, beta_bar: float,
                        doc_tile_of: jax.Array | None = None,
                        doc_rows: int = 0,
+                       r_mode: str = "dense", r_cap: int | None = None,
+                       topics: jax.Array | None = None,
+                       counts: jax.Array | None = None,
                        n_blk: int = N_BLK, interpret: bool = True):
     """Fused word-by-word F+LDA sweep over an arbitrary-length token stream.
 
@@ -84,15 +115,23 @@ def fused_sweep_tokens(tok_doc: jax.Array, tok_wrd: jax.Array,
     addressing doc rows of slab ``doc_tile_of[tile]`` only (the
     ``build_layout(doc_tile=...)`` grouped order); ``n_td`` stays in HBM
     and only one ``(doc_rows, T)`` slab is VMEM-resident.
+
+    ``r_mode="sparse"`` maintains the per-doc ``(topics, counts)`` side
+    tables ((I, r_cap) i32, built from ``n_td`` when not passed) instead
+    of recomputing the compacted r-vector per token; the tables are
+    returned appended — a 7-tuple.  ``r_cap`` defaults to ``T`` and is
+    chain-affecting (see :mod:`repro.kernels.fused_sweep.rbucket`).
     """
     I, T = n_td.shape
     J = n_wt.shape[0]
     if not _is_pow2(T):
         raise ValueError(f"fused sweep needs a power-of-two T, got {T}")
+    sparse, cap = _resolve_rmode(r_mode, r_cap, T)
+    topics, counts = _side_tables(sparse, topics, counts, n_td, cap)
     n = tok_doc.shape[0]
     if n == 0:
-        return (z, n_td, n_wt, n_t,
-                jnp.zeros((2 * T,), jnp.float32))
+        out = (z, n_td, n_wt, n_t, jnp.zeros((2 * T,), jnp.float32))
+        return out + ((topics, counts) if sparse else ())
     docs = doc_tile_of is not None
     if docs and n % n_blk != 0:
         raise ValueError(
@@ -105,7 +144,8 @@ def fused_sweep_tokens(tok_doc: jax.Array, tok_wrd: jax.Array,
         # tiled input streams and the z output tile (doc-tiled: one slab
         # scratch instead of the two n_td copies).
         vmem = fused_vmem_bytes(I, J, T, n_blk,
-                                doc_rows if docs else 0)
+                                doc_rows if docs else 0,
+                                cap if sparse else 0)
         if vmem > VMEM_BUDGET_BYTES:
             raise ValueError(
                 f"fused sweep state ({vmem / 2**20:.1f} MiB) exceeds the "
@@ -121,19 +161,24 @@ def fused_sweep_tokens(tok_doc: jax.Array, tok_wrd: jax.Array,
 
     kw = dict(alpha=float(alpha), beta=float(beta),
               beta_bar=float(beta_bar), n_blk=n_blk, interpret=interpret)
+    kw["r_cap"] = cap
+    if sparse:
+        kw.update(topics=topics, counts=counts)
     if docs:
         n_td_p, I = _pad_doc_slabs(n_td.astype(jnp.int32), doc_rows)
-        z_out, n_td, n_wt, n_t, F = fused_sweep_docs_pallas(
+        out = fused_sweep_docs_pallas(
             doc_tile_of.astype(jnp.int32),
             tok_doc, tok_wrd, tok_valid, tok_bound, z_p, u,
             n_td_p, n_wt.astype(jnp.int32), n_t.astype(jnp.int32),
             doc_rows=int(doc_rows), **kw)
-        return z_out[:n], n_td[:I], n_wt, n_t, F
-    z_out, n_td, n_wt, n_t, F = fused_sweep_pallas(
+        z_out, n_td, n_wt, n_t, F = out[:5]
+        return (z_out[:n], n_td[:I], n_wt, n_t, F) + tuple(out[5:])
+    out = fused_sweep_pallas(
         tok_doc, tok_wrd, tok_valid, tok_bound, z_p, u,
         n_td.astype(jnp.int32), n_wt.astype(jnp.int32),
         n_t.astype(jnp.int32), **kw)
-    return z_out[:n], n_td, n_wt, n_t, F
+    z_out = out[0]
+    return (z_out[:n],) + tuple(out[1:])
 
 
 def fused_sweep_cells(tok_doc: jax.Array, tok_wrd: jax.Array,
@@ -144,6 +189,9 @@ def fused_sweep_cells(tok_doc: jax.Array, tok_wrd: jax.Array,
                       cell_start: int = 0, num_cells: int | None = None,
                       doc_tile_of: jax.Array | None = None,
                       doc_rows: int = 0,
+                      r_mode: str = "dense", r_cap: int | None = None,
+                      topics: jax.Array | None = None,
+                      counts: jax.Array | None = None,
                       n_blk: int = N_BLK, interpret: bool = True):
     """Fused F+LDA sweep over a batch of ``k`` padded cells in ONE kernel.
 
@@ -167,12 +215,17 @@ def fused_sweep_cells(tok_doc: jax.Array, tok_wrd: jax.Array,
     unpads.  ``doc_tile_of`` ((k, L // n_blk), with ``L`` already tiled)
     + ``doc_rows`` switch to the doc-tiled kernel (see
     :func:`fused_sweep_tokens`); the map is sliced along the cell range
-    with the queue.  Returns ``(z', n_td', n_wt', n_t', F)``.
+    with the queue.  Returns ``(z', n_td', n_wt', n_t', F)``, plus the
+    ``(topics, counts)`` side tables appended under ``r_mode="sparse"``
+    (see :func:`fused_sweep_tokens`; the tables span the whole doc shard
+    and are never sliced with the cell range).
     """
     I, T = n_td.shape
     k_total, J = n_wt.shape[0], n_wt.shape[1]
     if not _is_pow2(T):
         raise ValueError(f"fused sweep needs a power-of-two T, got {T}")
+    sparse, cap = _resolve_rmode(r_mode, r_cap, T)
+    topics, counts = _side_tables(sparse, topics, counts, n_td, cap)
     if tok_doc.shape[0] != k_total:
         raise ValueError(f"queue length mismatch: tokens have "
                          f"{tok_doc.shape[0]} cells, n_wt has {k_total} "
@@ -200,12 +253,14 @@ def fused_sweep_cells(tok_doc: jax.Array, tok_wrd: jax.Array,
             doc_tile_of = sub(doc_tile_of)
     L = tok_doc.shape[1]
     if k == 0 or L == 0:
-        return z, n_td, n_wt, n_t, jnp.zeros((2 * T,), jnp.float32)
+        out = (z, n_td, n_wt, n_t, jnp.zeros((2 * T,), jnp.float32))
+        return out + ((topics, counts) if sparse else ())
     if not interpret:
         # Whole-array n_td in+out (or one slab scratch when doc-tiled),
         # ONE (J,T) word-topic block in+out (the queue is paged per
         # cell), tree output, token tiles.
-        vmem = fused_vmem_bytes(I, J, T, n_blk, doc_rows if docs else 0)
+        vmem = fused_vmem_bytes(I, J, T, n_blk, doc_rows if docs else 0,
+                                cap if sparse else 0)
         if vmem > VMEM_BUDGET_BYTES:
             raise ValueError(
                 f"fused cell-batch state ({vmem / 2**20:.1f} MiB) exceeds "
@@ -222,19 +277,23 @@ def fused_sweep_cells(tok_doc: jax.Array, tok_wrd: jax.Array,
 
     kw = dict(alpha=float(alpha), beta=float(beta),
               beta_bar=float(beta_bar), n_blk=n_blk, interpret=interpret)
+    kw["r_cap"] = cap
+    if sparse:
+        kw.update(topics=topics, counts=counts)
     if docs:
         n_td_p, I = _pad_doc_slabs(n_td.astype(jnp.int32), doc_rows)
-        z_out, n_td, n_wt, n_t, F = fused_sweep_cells_docs_pallas(
+        out = fused_sweep_cells_docs_pallas(
             doc_tile_of.astype(jnp.int32),
             tok_doc, tok_wrd, tok_valid, tok_bound, z_p, u,
             n_td_p, n_wt.astype(jnp.int32), n_t.astype(jnp.int32),
             doc_rows=int(doc_rows), **kw)
-        return z_out[:, :L], n_td[:I], n_wt, n_t, F
-    z_out, n_td, n_wt, n_t, F = fused_sweep_cells_pallas(
+        z_out, n_td, n_wt, n_t, F = out[:5]
+        return (z_out[:, :L], n_td[:I], n_wt, n_t, F) + tuple(out[5:])
+    out = fused_sweep_cells_pallas(
         tok_doc, tok_wrd, tok_valid, tok_bound, z_p, u,
         n_td.astype(jnp.int32), n_wt.astype(jnp.int32),
         n_t.astype(jnp.int32), **kw)
-    return z_out[:, :L], n_td, n_wt, n_t, F
+    return (out[0][:, :L],) + tuple(out[1:])
 
 
 def fused_sweep_ragged(tok_doc: jax.Array, tok_wrd: jax.Array,
@@ -247,6 +306,9 @@ def fused_sweep_ragged(tok_doc: jax.Array, tok_wrd: jax.Array,
                        cell_start: int = 0, num_cells: int | None = None,
                        doc_tile_of: jax.Array | None = None,
                        doc_rows: int = 0,
+                       r_mode: str = "dense", r_cap: int | None = None,
+                       topics: jax.Array | None = None,
+                       counts: jax.Array | None = None,
                        interpret: bool = True):
     """Fused F+LDA sweep over a ragged cell stream (the nomad hot path).
 
@@ -267,12 +329,16 @@ def fused_sweep_ragged(tok_doc: jax.Array, tok_wrd: jax.Array,
     ``z'``/``n_wt'`` cover only the requested ranges.  ``doc_tile_of``
     ((S // n_blk,), sliced with the tile range) + ``doc_rows`` switch to
     the doc-tiled kernel (see :func:`fused_sweep_tokens`).  Returns
-    ``(z', n_td', n_wt', n_t', F)``.
+    ``(z', n_td', n_wt', n_t', F)``, plus the ``(topics, counts)`` side
+    tables appended under ``r_mode="sparse"`` (whole doc shard, never
+    sliced with the tile/cell ranges).
     """
     I, T = n_td.shape
     k_total, J = n_wt.shape[0], n_wt.shape[1]
     if not _is_pow2(T):
         raise ValueError(f"fused sweep needs a power-of-two T, got {T}")
+    sparse, cap = _resolve_rmode(r_mode, r_cap, T)
+    topics, counts = _side_tables(sparse, topics, counts, n_td, cap)
     S = tok_doc.shape[0]
     if S % n_blk != 0 or cell_of_tile.shape[0] != S // n_blk:
         raise ValueError(
@@ -304,12 +370,14 @@ def fused_sweep_ragged(tok_doc: jax.Array, tok_wrd: jax.Array,
     if (cell_start, nc) != (0, k_total):
         n_wt = n_wt[cell_start:cell_start + nc]
     if nt_ == 0 or nc == 0:
-        return z, n_td, n_wt, n_t, jnp.zeros((2 * T,), jnp.float32)
+        out = (z, n_td, n_wt, n_t, jnp.zeros((2 * T,), jnp.float32))
+        return out + ((topics, counts) if sparse else ())
     if not interpret:
         # Whole-array n_td in+out (or one slab scratch when doc-tiled),
         # ONE (J,T) word-topic block in+out (the stream is paged per
         # tile), tree output, token tiles.
-        vmem = fused_vmem_bytes(I, J, T, n_blk, doc_rows if docs else 0)
+        vmem = fused_vmem_bytes(I, J, T, n_blk, doc_rows if docs else 0,
+                                cap if sparse else 0)
         if vmem > VMEM_BUDGET_BYTES:
             raise ValueError(
                 f"fused ragged-stream state ({vmem / 2**20:.1f} MiB) "
@@ -319,18 +387,21 @@ def fused_sweep_ragged(tok_doc: jax.Array, tok_wrd: jax.Array,
 
     kw = dict(alpha=float(alpha), beta=float(beta),
               beta_bar=float(beta_bar), n_blk=n_blk, interpret=interpret)
+    kw["r_cap"] = cap
+    if sparse:
+        kw.update(topics=topics, counts=counts)
     args = (tok_doc.astype(jnp.int32), tok_wrd.astype(jnp.int32),
             tok_valid.astype(jnp.int32), tok_bound.astype(jnp.int32),
             z.astype(jnp.int32), u.astype(jnp.float32))
     if docs:
         n_td_p, I = _pad_doc_slabs(n_td.astype(jnp.int32), doc_rows)
-        z_out, n_td, n_wt, n_t, F = fused_sweep_ragged_docs_pallas(
+        out = fused_sweep_ragged_docs_pallas(
             cot.astype(jnp.int32), doc_tile_of.astype(jnp.int32), *args,
             n_td_p, n_wt.astype(jnp.int32), n_t.astype(jnp.int32),
             doc_rows=int(doc_rows), **kw)
-        return z_out, n_td[:I], n_wt, n_t, F
-    z_out, n_td, n_wt, n_t, F = fused_sweep_ragged_pallas(
+        z_out, n_td, n_wt, n_t, F = out[:5]
+        return (z_out, n_td[:I], n_wt, n_t, F) + tuple(out[5:])
+    return tuple(fused_sweep_ragged_pallas(
         cot.astype(jnp.int32), *args,
         n_td.astype(jnp.int32), n_wt.astype(jnp.int32),
-        n_t.astype(jnp.int32), **kw)
-    return z_out, n_td, n_wt, n_t, F
+        n_t.astype(jnp.int32), **kw))

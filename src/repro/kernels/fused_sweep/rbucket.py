@@ -1,0 +1,129 @@
+"""Doc-sparse r-bucket: compacted (topics, counts) side tables (paper §3).
+
+The F+LDA conditional p = α·q + r has r_t = n_td·q_t supported on the
+document's |T_d| nonzero topics with |T_d| ≪ T (the paper's complexity
+argument for Alg. 3).  This module defines the **canonical r-draw** shared
+by every fused-sweep implementation (the Pallas kernels and the scan
+oracle): the r-term cumsum runs over a fixed-capacity compacted vector —
+the document's active topics in ascending order, zero-padded to a static
+capacity ``cap`` — instead of a dense ``(T,)`` vector.
+
+Two ways to obtain the compacted vector, selected by ``r_mode``:
+
+* ``"dense"``  — recompute it from the dense ``n_td`` row at every token
+  (:func:`compact_row`): Θ(T) per token, no extra state.
+* ``"sparse"`` — maintain it incrementally as a per-doc ``(topics, counts)``
+  side table (:func:`decrement` / :func:`increment`): Θ(cap) per token, so
+  the r-draw cost stops scaling with T.
+
+Exactness argument: both modes operate on the *same* compacted vector —
+the side table's invariant is ``(topics, counts) == compact_row(n_td[d])``
+at every step, preserved by the integer-only increment/decrement — so the
+float ops of the draw (``cumsum`` over ``counts·q[topics]``) are performed
+on bit-identical inputs and the two chains are bit-equal by construction.
+Note the compacted cumsum is **not** bit-equal to a dense ``(T,)`` cumsum
+(XLA's scan is blocked/tree-associated, so dropping zeros reorders the
+partial sums); that is why *both* modes draw from the compacted vector.
+For the same reason the capacity is chain-affecting: runs compared
+bit-for-bit must share ``cap`` (the default ``cap = T`` everywhere keeps
+cross-mode comparisons trivially paired).
+
+Zero padding is exact: pad slots are ``(topic 0, count 0)`` and contribute
+``0·q[0] = 0.0`` to the cumsum, and ``x + 0.0 == x`` for every finite f32,
+so the padded suffix never perturbs a partial sum.
+
+Capacity bound: ``cap = min(T, max_d len(d))`` suffices — a document of
+``n`` tokens holds at most ``n`` distinct topics, and at increment time the
+document holds ``n − 1`` assigned tokens, so either the incoming topic is
+already present or the table has a free slot (``NomadLayout.r_cap``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+__all__ = ["compact_row", "build_side_table", "decrement", "increment",
+           "r_cumsum", "pick"]
+
+
+def compact_row(row, cap: int):
+    """Compact a dense ``(T,)`` count row into capacity-``cap`` parallel
+    ``(topics, counts)`` int32 vectors: active topics ascending, padded
+    with ``(0, 0)`` slots.  Active topics beyond ``cap`` are dropped
+    (never happens under the layout's capacity bound)."""
+    T = row.shape[-1]
+    row = row.astype(jnp.int32)
+    active = row > 0
+    rank = jnp.cumsum(active.astype(jnp.int32)) - 1
+    pos = jnp.where(active, rank, cap)                   # inactive → dropped
+    topics = jnp.zeros((cap,), jnp.int32).at[pos].set(
+        jnp.arange(T, dtype=jnp.int32), mode="drop")
+    counts = jnp.zeros((cap,), jnp.int32).at[pos].set(row, mode="drop")
+    return topics, counts
+
+
+def build_side_table(n_td, cap: int):
+    """Per-doc side tables for a whole ``(I, T)`` doc-topic table:
+    returns ``(topics, counts)``, each ``(I, cap)`` int32."""
+    return jax.vmap(functools.partial(compact_row, cap=cap))(n_td)
+
+
+def decrement(topics, counts, t, valid):
+    """Remove one occurrence of topic ``t`` from the table (no-op when
+    ``valid`` is False).  ``t`` must be present with count ≥ 1 for a valid
+    token (it is the token's current assignment); a count reaching zero
+    shifts the tail left so active entries stay packed and ascending."""
+    cap = topics.shape[0]
+    j = jnp.arange(cap, dtype=jnp.int32)
+    pos = jnp.sum(((topics < t) & (counts > 0)).astype(jnp.int32))
+    newc = counts[pos] - 1
+    remove = newc == 0
+    t_next = jnp.concatenate([topics[1:], jnp.zeros((1,), jnp.int32)])
+    c_next = jnp.concatenate([counts[1:], jnp.zeros((1,), jnp.int32)])
+    topics2 = jnp.where(remove & (j >= pos), t_next, topics)
+    counts2 = jnp.where(remove,
+                        jnp.where(j >= pos, c_next, counts),
+                        jnp.where(j == pos, newc, counts))
+    return (jnp.where(valid, topics2, topics),
+            jnp.where(valid, counts2, counts))
+
+
+def increment(topics, counts, t, valid):
+    """Add one occurrence of topic ``t`` (no-op when ``valid`` is False):
+    bump the count if present, else shift the tail right and insert
+    ``(t, 1)`` at its ascending position (a free slot exists under the
+    capacity bound — see module docstring)."""
+    cap = topics.shape[0]
+    j = jnp.arange(cap, dtype=jnp.int32)
+    pos = jnp.sum(((topics < t) & (counts > 0)).astype(jnp.int32))
+    present = (counts[pos] > 0) & (topics[pos] == t)
+    t_prev = jnp.concatenate([jnp.zeros((1,), jnp.int32), topics[:-1]])
+    c_prev = jnp.concatenate([jnp.zeros((1,), jnp.int32), counts[:-1]])
+    ins_t = jnp.where(j > pos, t_prev, jnp.where(j == pos, t, topics))
+    ins_c = jnp.where(j > pos, c_prev, jnp.where(j == pos, 1, counts))
+    topics2 = jnp.where(present, topics, ins_t)
+    counts2 = jnp.where(present,
+                        jnp.where(j == pos, counts + 1, counts), ins_c)
+    return (jnp.where(valid, topics2, topics),
+            jnp.where(valid, counts2, counts))
+
+
+def r_cumsum(topics, counts, q):
+    """Cumulative r-bucket masses over the compacted vector:
+    ``cumsum(counts · q[topics])`` (pad slots contribute exactly 0.0)."""
+    return jnp.cumsum(counts.astype(F32) * q[topics])
+
+
+def pick(topics, counts, c, u_val):
+    """Zero-mass-aware LSearch on the compacted cumsum: the drawn slot is
+    ``#{c ≤ u_val}``, guarded to the last active slot so a boundary-rounded
+    ``u_val`` can never land on a zero-count pad (when ``u_val < c[-1]``
+    the guard is a no-op: pad entries all equal ``c[-1]``)."""
+    m = jnp.sum((counts > 0).astype(jnp.int32))
+    j_r = jnp.minimum(jnp.sum((c <= u_val).astype(jnp.int32)),
+                      jnp.maximum(m - 1, 0))
+    return topics[j_r]

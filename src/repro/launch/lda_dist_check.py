@@ -2,7 +2,7 @@
 
 Usage:  python -m repro.launch.lda_dist_check \
             [n_devices] [sync_mode] [pods] [inner_mode] [n_blocks] \
-            [ring_mode] [layout] [doc_tile]
+            [ring_mode] [layout] [doc_tile] [r_mode]
 
 Sets XLA_FLAGS *before* importing jax (the only supported way to fake a
 multi-device CPU platform), runs sweeps of Nomad F+LDA on a synthetic
@@ -14,6 +14,9 @@ so the padding cost of each geometry is visible next to its tokens/sec.
 ``doc_tile`` (0 = off) builds a doc-grouped layout and pages
 ``(doc_tile, T)`` doc-topic slabs through the fused kernels (DESIGN.md
 §7); the report then carries ``ntd_slab_bytes`` vs the whole-shard bytes.
+``r_mode`` (``dense`` | ``sparse``) selects the r-bucket draw; ``sparse``
+walks the per-doc compacted side tables at the layout's ``r_cap``
+capacity (DESIGN.md §7a) and the report carries both knobs.
 """
 import json
 import os
@@ -29,6 +32,7 @@ def main() -> None:
     ring_mode = sys.argv[6] if len(sys.argv) > 6 else "barrier"
     layout_kind = sys.argv[7] if len(sys.argv) > 7 else "dense"
     doc_tile = int(sys.argv[8]) if len(sys.argv) > 8 else 0
+    r_mode = sys.argv[9] if len(sys.argv) > 9 else "dense"
 
     os.environ["XLA_FLAGS"] = (
         f"--xla_force_host_platform_device_count={n_dev} "
@@ -64,10 +68,12 @@ def main() -> None:
             doc_kw["doc_blk"] = 16      # toy-corpus grid step (cf. N_BLK)
     layout = build_layout(corpus, n_workers=n_dev, T=T,
                           n_blocks=n_blocks, layout=layout_kind, **doc_kw)
+    r_cap = layout.r_cap if r_mode == "sparse" else 0
     lda = NomadLDA(mesh=mesh, ring_axes=ring_axes, layout=layout,
                    alpha=alpha, beta=beta, sync_mode=sync_mode,
                    inner_mode=inner_mode, ring_mode=ring_mode,
-                   doc_tile=doc_tile if doc_tile > 0 else None)
+                   doc_tile=doc_tile if doc_tile > 0 else None,
+                   r_mode=r_mode, r_cap=r_cap)
     arrays = lda.init_arrays(seed=0)
 
     # Host reference clock: a fixed jitted workload timed in the same
@@ -140,6 +146,8 @@ def main() -> None:
         "total_tiles": layout.total_tiles,
         "ragged_tile": layout.tile,
         "doc_tile": layout.doc_tile,
+        "r_mode": r_mode,
+        "r_cap": r_cap,
         "ntd_row_bytes": layout.ntd_row_bytes,
         "ntd_slab_bytes": layout.ntd_slab_bytes,
         "ntd_whole_bytes": layout.ntd_whole_bytes,

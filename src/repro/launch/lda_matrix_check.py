@@ -7,7 +7,7 @@ One faked-multi-device process sweeps every combination of
 ``sync_mode`` ∈ {stoken, stale, allreduce} × ``inner_mode`` ∈ {scan, fused,
 vectorized} × ``B`` × ``ring_mode`` ∈ {barrier, pipelined} × ``layout`` ∈
 {dense, ragged} × ``doc_tile`` ∈ {None, I_max//3, 8} and, after each run,
-rebuilds the count tables from the final assignments ``z``.  Four
+rebuilds the count tables from the final assignments ``z``.  Five
 invariants under test (DESIGN.md §4/§7):
 
 * at every sweep boundary ``global_counts`` must be **bit-equal** to the
@@ -24,7 +24,14 @@ invariants under test (DESIGN.md §4/§7):
 * for ``doc_tile`` layouts, the **paged** run (fused kernels keep one
   ``(doc_tile, T)`` doc-topic slab VMEM-resident) must be bit-identical
   to the **untiled** run (whole shard resident) over the same layout —
-  doc tiling changes memory residency only, never the chain.
+  doc tiling changes memory residency only, never the chain;
+* the **sparse r-bucket** run (``r_mode="sparse"``: the r-draw walks
+  per-doc compacted side tables instead of recompacting the dense
+  ``n_td`` row per token, DESIGN.md §7a) must be bit-identical to the
+  same-config dense run for every exact inner mode — both modes draw
+  from the same compacted vector, so maintenance strategy is
+  chain-invisible (``vectorized`` has no per-token chain and rejects
+  sparse mode by construction).
 
 ``doc_tile`` values are layout-build-time choices (they fix the token
 order), so the untiled reference runs on the *same grouped layout* with
@@ -35,7 +42,7 @@ axis to bound runtime.
 
 ``subset = "smoke"`` (argv[3]) runs a ~30 s slice — both layouts,
 doc_tile ∈ {None, 3}, fused/pipelined/stoken at B = 2W with the untiled
-twin — and reports each layout's ``ntd_slab_bytes`` vs whole-shard bytes
+twin and (ungrouped only) the sparse-r twin — and reports each layout's ``ntd_slab_bytes`` vs whole-shard bytes
 (``repro.kernels.fused_sweep.fused_vmem_bytes``) so CI prints the slab
 VMEM number; the full matrix stays behind the tier-1 ``slow`` marker.
 
@@ -75,11 +82,12 @@ def main() -> None:
         mean_doc_len=12.0, seed=5)
     mesh = jax.make_mesh((n_dev,), ("worker",))
 
-    def run(layout, sync_mode, inner_mode, ring_mode, doc_page):
+    def run(layout, sync_mode, inner_mode, ring_mode, doc_page,
+            r_mode="dense"):
         lda = NomadLDA(mesh=mesh, ring_axes=("worker",), layout=layout,
                        alpha=alpha, beta=beta, sync_mode=sync_mode,
                        inner_mode=inner_mode, ring_mode=ring_mode,
-                       doc_tile=doc_page)
+                       doc_tile=doc_page, r_mode=r_mode)
         arrays = lda.init_arrays(seed=0)
         for it in range(n_sweeps):
             arrays = lda.sweep(arrays, seed=it)
@@ -96,6 +104,7 @@ def main() -> None:
             "sync_mode": sync_mode,
             "inner_mode": inner_mode,
             "ring_mode": ring_mode,
+            "r_mode": r_mode,
             "pad_fraction": layout.pad_fraction,
             "n_td_mismatch": int(np.abs(n_td - td_ref).sum()),
             "n_wt_mismatch": int(np.abs(n_wt - wt_ref).sum()),
@@ -181,12 +190,25 @@ def main() -> None:
                             _diff(entry, "vs_untiled",
                                   per_run[kind, "untiled"],
                                   per_run[kind, ring_mode])
+                        # sparse vs dense r-bucket (same everything):
+                        # side-table maintenance must be chain-invisible.
+                        # (Smoke keeps one ungrouped sparse twin per
+                        # layout to bound runtime.)
+                        if inner_mode != "vectorized" and \
+                                not (smoke and dt):
+                            sentry, sres = run(
+                                layout, sync_mode, inner_mode, ring_mode,
+                                dt if dt else None, r_mode="sparse")
+                            combos.append(sentry)
+                            _diff(sentry, "vs_rdense",
+                                  per_run[kind, ring_mode], sres)
 
     all_exact = all(
         c["n_td_mismatch"] == 0 and c["n_wt_mismatch"] == 0
         and c["n_t_mismatch"] == 0 and c["tokens_preserved"]
         and all(c.get(f"{p}_{f}_mismatch", 0) == 0
-                for p in ("vs_barrier", "vs_dense", "vs_untiled")
+                for p in ("vs_barrier", "vs_dense", "vs_untiled",
+                          "vs_rdense")
                 for f in ("z", "n_wt", "n_t"))
         for c in combos)
     print(json.dumps({"n_devices": n_dev, "n_sweeps": n_sweeps,

@@ -475,6 +475,113 @@ class TestRaggedStreamKernel:
                                beta_bar=kw["beta_bar"], n_blk=rag.tile + 1)
 
 
+class TestSparseRBucket:
+    """Doc-sparse r-bucket (DESIGN.md §7a): ``r_mode="sparse"`` walks the
+    per-doc compacted side tables instead of recompacting the dense
+    ``n_td`` row per token.  Both modes draw from the same capacity-``cap``
+    compacted vector, so every kernel variant must stay bit-identical to
+    its dense twin — and the returned side tables must equal a fresh
+    compaction of the final ``n_td``."""
+
+    @staticmethod
+    def _tables_ok(topics, counts, n_td, cap):
+        from repro.kernels.fused_sweep import rbucket
+        ref_t, ref_c = rbucket.build_side_table(jnp.asarray(n_td), cap)
+        return (bool(jnp.array_equal(topics, ref_t))
+                and bool(jnp.array_equal(counts, ref_c)))
+
+    @pytest.mark.parametrize("T", [16, 64])
+    def test_sparse_tokens_match_dense_and_ref(self, T):
+        corpus, state, doc_ids, word_ids, order, boundary = _setup(
+            T, 15, 48, 11.0, seed=T + 1)
+        kw = dict(alpha=50.0 / T, beta=0.01,
+                  beta_bar=0.01 * corpus.num_words)
+        tok = _fused_inputs(state, doc_ids, word_ids, order, boundary)
+        dense = fused_sweep_tokens(*tok, state.n_td, state.n_wt,
+                                   state.n_t, **kw)
+        sparse = fused_sweep_tokens(*tok, state.n_td, state.n_wt,
+                                    state.n_t, r_mode="sparse", **kw)
+        assert len(sparse) == 7
+        for a, b in zip(dense, sparse[:5]):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        sref = fused_sweep_ref(*tok, state.n_td, state.n_wt, state.n_t,
+                               r_mode="sparse", **kw)
+        for a, b in zip(sparse, sref):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert self._tables_ok(sparse[5], sparse[6], sparse[1], T)
+
+    def test_sparse_cells_and_ragged_match_dense(self):
+        from repro.data.sharding import build_layout
+        from repro.kernels.fused_sweep import (fused_sweep_cells,
+                                               fused_sweep_ragged)
+        T = 16
+        helper = TestCellBatchKernel()
+        args = helper._queue_setup(T=T, B=4, seed=19)
+        kw = dict(alpha=50.0 / T, beta=0.01, beta_bar=0.01 * 60)
+        dense = fused_sweep_cells(*args, **kw)
+        sparse = fused_sweep_cells(*args, r_mode="sparse", **kw)
+        assert len(sparse) == 7
+        for a, b in zip(dense, sparse[:5]):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert self._tables_ok(sparse[5], sparse[6], sparse[1], T)
+
+        rhelper = TestRaggedStreamKernel()
+        _, rag, _, rag_tok, counts = rhelper._stream_setup(T=T, seed=19)
+        cot = jnp.asarray(rag.cell_of_tile[0, 0])
+        rdense = fused_sweep_ragged(*rag_tok, cot, *counts,
+                                    n_blk=rag.tile, **kw)
+        rsparse = fused_sweep_ragged(*rag_tok, cot, *counts,
+                                     n_blk=rag.tile, r_mode="sparse", **kw)
+        for a, b in zip(rdense, rsparse[:5]):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert self._tables_ok(rsparse[5], rsparse[6], rsparse[1], T)
+
+    def test_sub_T_cap_exact_when_valid(self):
+        """A capacity below T is exact as long as no doc ever holds more
+        than ``cap`` distinct topics mid-sweep; both modes share the cap,
+        so the sparse run must still equal the dense run at the same cap."""
+        T = 64
+        corpus, state, doc_ids, word_ids, order, boundary = _setup(
+            T, 15, 48, 6.0, seed=3)
+        # distinct-topics-per-doc is bounded by doc length, +1 headroom
+        # for the transient insert-before-remove inside a token update
+        cap = min(T, int(np.bincount(np.asarray(corpus.doc_ids)).max()) + 1)
+        assert cap < T
+        kw = dict(alpha=50.0 / T, beta=0.01,
+                  beta_bar=0.01 * corpus.num_words)
+        tok = _fused_inputs(state, doc_ids, word_ids, order, boundary)
+        dense = fused_sweep_tokens(*tok, state.n_td, state.n_wt,
+                                   state.n_t, r_cap=cap, **kw)
+        sparse = fused_sweep_tokens(*tok, state.n_td, state.n_wt,
+                                    state.n_t, r_mode="sparse", r_cap=cap,
+                                    **kw)
+        for a, b in zip(dense, sparse[:5]):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert self._tables_ok(sparse[5], sparse[6], sparse[1], cap)
+
+    def test_bad_args_rejected(self):
+        from repro.kernels.fused_sweep import fused_vmem_bytes
+        T = 8
+        zeros = lambda *s: jnp.zeros(s, jnp.int32)
+        base = (zeros(4), zeros(4), jnp.ones((4,), jnp.int32),
+                jnp.ones((4,), jnp.int32), zeros(4),
+                jnp.zeros((4,), jnp.float32),
+                zeros(3, T), zeros(5, T), zeros(T))
+        kw = dict(alpha=0.5, beta=0.01, beta_bar=0.05)
+        with pytest.raises(ValueError, match="r_mode"):
+            fused_sweep_tokens(*base, r_mode="compact", **kw)
+        with pytest.raises(ValueError, match="r_cap"):
+            fused_sweep_tokens(*base, r_mode="sparse", r_cap=T + 1, **kw)
+        with pytest.raises(ValueError, match="side tables"):
+            fused_sweep_tokens(*base, topics=zeros(3, T),
+                               counts=zeros(3, T), **kw)
+        # VMEM model: sparse adds exactly the two (I, cap) i32 tables
+        # (double-buffered), monotone in cap
+        a = fused_vmem_bytes(100, 10, T, r_cap=4)
+        b = fused_vmem_bytes(100, 10, T, r_cap=8)
+        assert b > a > fused_vmem_bytes(100, 10, T)
+
+
 class TestNomadFusedInnerMode:
     def test_single_device_ring_matches_scan(self):
         from repro.core.nomad import NomadLDA

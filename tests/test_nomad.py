@@ -21,13 +21,13 @@ from repro.data.sharding import build_layout, lpt_assign
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def _run_module(module, *args):
+def _run_module(module, *args, timeout=900):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(REPO, "src")
     env.pop("XLA_FLAGS", None)
     out = subprocess.run(
         [sys.executable, "-m", module, *map(str, args)],
-        capture_output=True, text=True, env=env, timeout=900)
+        capture_output=True, text=True, env=env, timeout=timeout)
     assert out.returncode == 0, out.stderr[-3000:]
     return json.loads(out.stdout.strip().splitlines()[-1])
 
@@ -385,17 +385,22 @@ class TestMultiDevice:
         assert "multiple" in out.stderr
 
     def test_exactness_matrix(self):
-        """The full sync × inner × B × ring × layout × doc_tile matrix on
-        the 8-device mesh: global counts bit-equal to a rebuild from z in
-        every combination, the pipelined ring bit-equal to the barrier
-        ring in every cell, the ragged layout bit-equal to the dense one
-        in every cell, and every doc-tiled (slab-paged) run bit-equal to
-        the untiled run over the same grouped layout."""
-        rep = _run_module("repro.launch.lda_matrix_check", 8, 2)
-        assert len(rep["combos"]) == 252
+        """The full sync × inner × B × ring × layout × doc_tile × r_mode
+        matrix on the 8-device mesh: global counts bit-equal to a rebuild
+        from z in every combination, the pipelined ring bit-equal to the
+        barrier ring in every cell, the ragged layout bit-equal to the
+        dense one in every cell, every doc-tiled (slab-paged) run
+        bit-equal to the untiled run over the same grouped layout, and
+        every sparse-r run bit-equal to its dense-r twin."""
+        # 420 combos (the r_mode axis grew the matrix 252 -> 420) need
+        # more than the default 900 s budget on a loaded CPU host
+        rep = _run_module("repro.launch.lda_matrix_check", 8, 2,
+                          timeout=2700)
+        assert len(rep["combos"]) == 420
         assert {c["ring_mode"] for c in rep["combos"]} == \
             {"barrier", "pipelined"}
         assert {c["layout"] for c in rep["combos"]} == {"dense", "ragged"}
+        assert {c["r_mode"] for c in rep["combos"]} == {"dense", "sparse"}
         assert len({c["doc_tile"] for c in rep["combos"]}) == 3  # None + 2
         cross_ring = [c for c in rep["combos"]
                       if "vs_barrier_z_mismatch" in c]
@@ -403,30 +408,41 @@ class TestMultiDevice:
                         if "vs_dense_z_mismatch" in c]
         cross_paging = [c for c in rep["combos"]
                         if "vs_untiled_z_mismatch" in c]
+        cross_rmode = [c for c in rep["combos"]
+                       if "vs_rdense_z_mismatch" in c]
         assert len(cross_ring) == 126 and len(cross_layout) == 126
         assert len(cross_paging) == 144
+        # every exact inner mode (scan, fused) gets a sparse twin
+        assert len(cross_rmode) == 168
+        assert all(c["r_mode"] == "sparse" for c in cross_rmode)
         bad = [c for c in rep["combos"]
                if c["n_td_mismatch"] or c["n_wt_mismatch"]
                or c["n_t_mismatch"] or not c["tokens_preserved"]
                or any(c.get(f"{p}_{f}_mismatch", 0)
-                      for p in ("vs_barrier", "vs_dense", "vs_untiled")
+                      for p in ("vs_barrier", "vs_dense", "vs_untiled",
+                                "vs_rdense")
                       for f in ("z", "n_wt", "n_t"))]
         assert rep["all_exact"], bad
 
 
 class TestDocTileSmoke:
-    """Fast (non-slow) doc-tiling regression signal: the matrix check's
-    smoke subset — fused/pipelined/stoken at B = 2W on both layouts,
-    doc_tile ∈ {None, 3}, paged vs untiled twins — so a doc-tiling chain
+    """Fast (non-slow) doc-tiling + sparse-r regression signal: the
+    matrix check's smoke subset — fused/pipelined/stoken at B = 2W on
+    both layouts, doc_tile ∈ {None, 3}, paged vs untiled twins, plus a
+    sparse-r twin per untiled layout — so a doc-tiling or r-bucket chain
     break fails tier-1's fast stage, not just the slow matrix."""
 
     def test_matrix_smoke_subset(self):
         rep = _run_module("repro.launch.lda_matrix_check", 4, 1, "smoke")
         assert rep["subset"] == "smoke"
-        assert len(rep["combos"]) == 4
+        assert len(rep["combos"]) == 6
         assert {c["layout"] for c in rep["combos"]} == {"dense", "ragged"}
         tiled = [c for c in rep["combos"] if c["doc_tile"]]
         assert tiled and all("vs_untiled_z_mismatch" in c for c in tiled)
+        sparse = [c for c in rep["combos"] if c["r_mode"] == "sparse"]
+        assert len(sparse) == 2
+        assert all("vs_rdense_z_mismatch" in c and not c["doc_tile"]
+                   for c in sparse)
         # the smoke subset reports the slab-vs-whole-shard VMEM numbers
         # (ci.sh prints them for silicon tuning)
         assert all(s["ntd_slab_bytes"] < s["ntd_whole_bytes"]

@@ -1,0 +1,329 @@
+"""Boundary-bug sweep across the sampler baselines (DESIGN.md §5a).
+
+The LSearch idiom ``t = Σ(cumsum(p) ≤ u)`` walks off the end of its support
+when ``u`` reaches ``cumsum(p)[-1]``.  That CAN happen whenever ``u`` is
+scaled by a total computed as a *different* float reduction than the cumsum
+(``p.sum()`` vs ``cumsum(p)[-1]`` disagree on mixed-magnitude f32 vectors —
+XLA's reductions and scans associate differently), and the old dense
+``clip(t, 0, T-1)`` then silently selected topic ``T-1`` regardless of its
+mass.  These tests pin the firing mechanism deterministically (they FAIL on
+the pre-fix code), and property-check the guarded draws and the r-bucket
+side tables around the same boundaries.
+"""
+from __future__ import annotations
+
+from unittest import mock
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import cgs
+from repro.core.alias_lda import sweep_alias_lda
+from repro.core.heldout import fold_in
+from repro.core.samplers import (LSearchState, lsearch_draw, lsearch_guarded,
+                                 lsearch_init)
+from repro.core.sparse_lda import sweep_sparse_lda
+from repro.data import synthetic
+from repro.kernels.fused_sweep import rbucket
+
+# The largest f32 uniform jax.random.uniform can return: 1 - 2^-24.
+U_MAX = np.float32(np.nextafter(np.float32(1.0), np.float32(0.0)))
+
+# A mixed-magnitude count row (found by random search) whose f32
+# ``sum()`` exceeds its blocked ``cumsum()[-1]`` — the reduction-mismatch
+# that makes the LSearch overrun reachable.  Trailing zero => the overrun
+# lands on a zero-mass topic, which is what the guard must prevent.
+ROW = np.array([73, 91, 289735, 8790, 11, 0, 0, 274, 461, 245, 2001000,
+                815, 88026, 3, 240, 0, 0, 1475, 0, 153, 8531, 34647, 1180,
+                800, 47, 170569, 9, 2231, 0, 5613, 5, 24, 2, 10729, 28371,
+                13, 948, 1, 166020, 45013, 105, 126, 190, 126246, 1, 691,
+                34649, 3168, 1389, 0, 439094, 1, 118, 10195, 119, 463,
+                1908, 0, 0, 646325, 4204, 6, 12890, 0], dtype=np.int64)
+
+
+def _forced_uniform(value):
+    """A jax.random.uniform stand-in returning ``value`` everywhere."""
+    def forced(key, shape=(), dtype=jnp.float32, **kw):
+        return jnp.full(shape, jnp.asarray(value, dtype))
+    return forced
+
+
+# ---------------------------------------------------------------------------
+# lsearch_guarded / lsearch_draw
+# ---------------------------------------------------------------------------
+def test_lsearch_guarded_boundary_drift():
+    """A drifted normalizer (Θ(1) updates track sums approximately) pushes
+    u past cumsum[-1]; the pre-fix draw returned T — out of range."""
+    p = jnp.asarray(ROW, jnp.float32)
+    c = jnp.cumsum(p)
+    state = LSearchState(p=p, c_T=jnp.float32(float(c[-1]) * (1 + 1e-6)))
+    t = lsearch_draw(state, jnp.float32(U_MAX))
+    assert 0 <= int(t) < p.shape[0]
+    assert float(p[t]) > 0.0
+
+
+def test_lsearch_sum_cumsum_mismatch_is_real():
+    """The firing mechanism itself: on the word-bucket vector the pinned
+    trigger produces (ROW scaled by (n_td+α)/denom), ``sum()`` exceeds
+    ``cumsum()[-1]`` — so a near-1 uniform scaled by the sum overruns."""
+    p = jnp.asarray(ROW, jnp.float32) * jnp.float32(0.5) / jnp.float32(7.08)
+    assert float(jnp.sum(p)) > float(jnp.cumsum(p)[-1])
+    # and lsearch_init caches the sum-reduction as the normalizer
+    st_ = lsearch_init(p)
+    assert float(st_.c_T) == float(jnp.sum(p))
+
+
+@settings(max_examples=10, deadline=None)
+@given(u01=st.sampled_from([0.0, float(U_MAX), 0.5]),
+       seed=st.integers(min_value=0, max_value=10_000))
+def test_lsearch_guarded_in_support(u01, seed):
+    """For any cumsum and any u01 (both boundaries forced), the guarded
+    draw lands on a positive-mass index."""
+    rng = np.random.default_rng(seed)
+    p = rng.choice([0.0, 1e-3, 1.0, 1e4], size=32).astype(np.float32)
+    if p.sum() == 0:
+        p[rng.integers(32)] = 1.0
+    c = jnp.cumsum(jnp.asarray(p))
+    t = int(lsearch_guarded(c, jnp.float32(u01) * c[-1]))
+    assert 0 <= t < 32
+    assert p[t] > 0.0
+
+
+# ---------------------------------------------------------------------------
+# SparseLDA (the live bug: three .sum() masses, three cumsum walks)
+# ---------------------------------------------------------------------------
+def _pinned_sparse_state():
+    T, J = 64, 8
+    n_wt = np.zeros((J, T), np.int32)
+    n_wt[0] = ROW
+    n_wt[0, 0] += 1              # token 0's own assignment
+    n_td = np.zeros((1, T), np.int32)
+    n_td[0, 0] = 1
+    n_t = np.full(T, 7, np.int32)
+    n_t[0] += 1
+    return cgs.LDAState(
+        z=jnp.zeros((1,), jnp.int32),
+        n_td=jnp.asarray(n_td), n_wt=jnp.asarray(n_wt),
+        n_t=jnp.asarray(n_t), key=jax.random.PRNGKey(0))
+
+
+def test_sparse_lda_word_bucket_zero_mass_guarded():
+    """Deterministic trigger: u01 = 1-2^-22 lands in the word bucket by the
+    .sum() dispatch but at the bucket's cumsum[-1] (which sits one ulp-gap
+    below q_mass on this ROW) — the pre-fix clip then selected topic T-1,
+    whose word-bucket mass is exactly zero."""
+    alpha, beta = 0.5, 0.01
+    u01 = np.float32(0.9999997615814209)           # 1 - 2^-22
+    state = _pinned_sparse_state()
+    order = jnp.zeros((1,), jnp.int32)
+    with mock.patch.object(jax.random, "uniform", _forced_uniform(u01)):
+        new, buckets = sweep_sparse_lda(
+            state, jnp.zeros((1,), jnp.int32), jnp.zeros((1,), jnp.int32),
+            order, alpha, beta, return_bucket_stats=True)
+
+    # mirror the step's f32 arithmetic on the post-decrement counts to pin
+    # the boundary actually exercised: in_q holds yet u_val ≥ cumsum(q)[-1]
+    f32 = jnp.float32
+    denom = jnp.full((64,), 7, f32) + beta * 8
+    s_mass = ((alpha * beta) / denom).sum()
+    q_vec = (jnp.asarray(ROW, f32) * (jnp.zeros((64,), f32) + alpha)
+             / denom)
+    q_mass = q_vec.sum()
+    u_val = u01 * (s_mass + f32(0.0) + q_mass)
+    assert bool(u_val < q_mass), "dispatch precondition (in_q) lost"
+    assert bool(u_val >= jnp.cumsum(q_vec)[-1]), \
+        "overrun precondition lost"
+    assert int(buckets[0]) == 2
+    t_new = int(new.z[0])
+    assert float(q_vec[t_new]) > 0.0, \
+        f"guarded word-bucket draw selected zero-mass topic {t_new}"
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=1000),
+       u01=st.sampled_from([0.0, float(U_MAX)]))
+def test_sparse_lda_boundary_invariants(seed, u01):
+    """Forced boundary uniforms on a toy corpus (incl. single-token docs):
+    counts stay consistent and every z stays in range."""
+    corpus, _, _ = synthetic.make_corpus(
+        num_docs=12, vocab_size=24, num_topics=4, mean_doc_len=3.0,
+        seed=seed)
+    T = 8
+    state = cgs.init_state(corpus, T, jax.random.PRNGKey(seed))
+    order = jnp.asarray(corpus.doc_order())
+    with mock.patch.object(jax.random, "uniform", _forced_uniform(u01)):
+        new = sweep_sparse_lda(state, jnp.asarray(corpus.doc_ids),
+                               jnp.asarray(corpus.word_ids), order,
+                               0.5, 0.01)
+    bad = cgs.check_invariants(new, corpus)
+    assert all(v == 0 for v in bad.values()), bad
+
+
+def test_sparse_lda_single_topic_doc():
+    """A document whose every token holds one topic: the doc bucket's
+    r-vector has a single nonzero — boundary draws must stay on it."""
+    T = 16
+    n_docs, n_words = 1, 4
+    doc_ids = jnp.zeros((5,), jnp.int32)
+    word_ids = jnp.asarray([0, 1, 2, 3, 0], jnp.int32)
+    z = jnp.full((5,), 3, jnp.int32)
+    n_td, n_wt, n_t = cgs.counts_from_assignments(
+        doc_ids, word_ids, z, n_docs, n_words, T)
+    state = cgs.LDAState(z=z, n_td=n_td, n_wt=n_wt, n_t=n_t,
+                         key=jax.random.PRNGKey(1))
+    with mock.patch.object(jax.random, "uniform", _forced_uniform(U_MAX)):
+        new, buckets = sweep_sparse_lda(
+            state, doc_ids, word_ids, jnp.arange(5, dtype=jnp.int32),
+            0.5, 0.01, return_bucket_stats=True)
+    rebuilt = cgs.counts_from_assignments(doc_ids, word_ids, new.z,
+                                          n_docs, n_words, T)
+    for ref, got in zip(rebuilt, (new.n_td, new.n_wt, new.n_t)):
+        assert int(jnp.abs(ref - got).sum()) == 0
+    assert bool(jnp.all((new.z >= 0) & (new.z < T)))
+
+
+def test_sparse_lda_word_bucket_dominates_zipf():
+    """Table-2 argument: on a Zipf corpus the word bucket absorbs nearly
+    all draws (β scales the other two buckets)."""
+    corpus, _, _ = synthetic.make_corpus(
+        num_docs=100, vocab_size=128, num_topics=8, mean_doc_len=30.0,
+        zipf_a=1.3, seed=7)
+    T = 16
+    state = cgs.init_state(corpus, T, jax.random.PRNGKey(0))
+    order = jnp.asarray(corpus.doc_order())
+    d, w = jnp.asarray(corpus.doc_ids), jnp.asarray(corpus.word_ids)
+    for _ in range(2):                       # brief burn-in
+        state = sweep_sparse_lda(state, d, w, order, 0.5, 0.01)
+    state, buckets = sweep_sparse_lda(state, d, w, order, 0.5, 0.01,
+                                      return_bucket_stats=True)
+    hit = np.bincount(np.asarray(buckets), minlength=3) / buckets.shape[0]
+    assert hit[2] > 0.5, f"word-bucket hit rate {hit[2]:.3f}"
+    assert hit[2] > hit[1] and hit[2] > hit[0]
+
+
+# ---------------------------------------------------------------------------
+# AliasLDA — guarded stale proposals + MH acceptance invariant
+# ---------------------------------------------------------------------------
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=1000),
+       u01=st.sampled_from([0.0, float(U_MAX)]))
+def test_alias_lda_mh_invariant(seed, u01):
+    """Every MH step must see a finite ratio and an acceptance probability
+    in (0, 1] — a zero-density proposal (what an unguarded boundary draw
+    can produce) breaks this."""
+    corpus, _, _ = synthetic.make_corpus(
+        num_docs=16, vocab_size=32, num_topics=4, mean_doc_len=8.0,
+        seed=seed)
+    T = 8
+    state = cgs.init_state(corpus, T, jax.random.PRNGKey(seed))
+    order = jnp.asarray(corpus.doc_order())
+    with mock.patch.object(jax.random, "uniform", _forced_uniform(u01)):
+        new, mh_ok = sweep_alias_lda(
+            state, jnp.asarray(corpus.doc_ids),
+            jnp.asarray(corpus.word_ids), order, 0.5, 0.01,
+            return_mh_stats=True)
+    assert bool(jnp.all(mh_ok)), \
+        f"{int((~mh_ok).sum())} tokens with broken MH acceptance"
+    assert bool(jnp.all((new.z >= 0) & (new.z < T)))
+    bad = cgs.check_invariants(new, corpus)
+    assert all(v == 0 for v in bad.values()), bad
+
+
+# ---------------------------------------------------------------------------
+# Held-out fold-in — guarded draw + named key derivation
+# ---------------------------------------------------------------------------
+def test_fold_in_all_zero_phi_row():
+    """A φ row with zero mass everywhere (word absent from training): the
+    pre-fix clip parked every such token on topic T-1; the guarded draw
+    keeps the table consistent and non-negative."""
+    T, n_docs = 8, 3
+    phi = np.full((4, T), 0.25, np.float32)
+    phi[2] = 0.0                                     # unseen word
+    word_ids = jnp.asarray([0, 2, 2, 1], jnp.int32)
+    doc_ids = jnp.asarray([0, 0, 1, 2], jnp.int32)
+    n_td = fold_in(word_ids, doc_ids, n_docs, jnp.asarray(phi), 0.5,
+                   jax.random.PRNGKey(0), sweeps=3)
+    assert int(n_td.sum()) == 4
+    assert bool(jnp.all(n_td >= 0))
+    # doc 1 holds only the unseen word: its conditional is all-zero every
+    # sweep, so the guarded draw collapses to index 0 — the pre-fix clip
+    # parked it on T-1 instead
+    assert int(n_td[1, 0]) == 1 and int(n_td[1].sum()) == 1
+
+
+def test_fold_in_boundary_uniform_in_range():
+    """u01 at both boundaries: all fold-in assignments stay in [0, T)."""
+    T, n_docs = 8, 4
+    rng = np.random.default_rng(0)
+    phi = rng.dirichlet(np.ones(T), size=16).astype(np.float32)
+    word_ids = jnp.asarray(rng.integers(0, 16, 20), jnp.int32)
+    doc_ids = jnp.asarray(np.sort(rng.integers(0, n_docs, 20)), jnp.int32)
+    for u01 in (0.0, float(U_MAX)):
+        with mock.patch.object(jax.random, "uniform", _forced_uniform(u01)):
+            n_td = fold_in(word_ids, doc_ids, n_docs, jnp.asarray(phi),
+                           0.5, jax.random.PRNGKey(1), sweeps=2)
+        assert int(n_td.sum()) == 20
+        assert bool(jnp.all(n_td >= 0))
+
+
+def test_fold_in_key_roles_distinct():
+    """The init draw and the per-sweep draws must come from distinct key
+    roles: 0 sweeps (init only) vs 1 sweep must differ, and the result is
+    a pure function of the key."""
+    T, n_docs = 8, 4
+    rng = np.random.default_rng(3)
+    phi = rng.dirichlet(np.ones(T), size=16).astype(np.float32)
+    word_ids = jnp.asarray(rng.integers(0, 16, 30), jnp.int32)
+    doc_ids = jnp.asarray(np.sort(rng.integers(0, n_docs, 30)), jnp.int32)
+    a = fold_in(word_ids, doc_ids, n_docs, jnp.asarray(phi), 0.5,
+                jax.random.PRNGKey(5), sweeps=2)
+    b = fold_in(word_ids, doc_ids, n_docs, jnp.asarray(phi), 0.5,
+                jax.random.PRNGKey(5), sweeps=2)
+    c = fold_in(word_ids, doc_ids, n_docs, jnp.asarray(phi), 0.5,
+                jax.random.PRNGKey(6), sweeps=2)
+    assert bool(jnp.array_equal(a, b))
+    assert not bool(jnp.array_equal(a, c))
+
+
+# ---------------------------------------------------------------------------
+# r-bucket side tables around the same boundaries
+# ---------------------------------------------------------------------------
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_rbucket_incremental_matches_compaction(seed):
+    """Random increment/decrement walks preserve the side-table invariant
+    (topics, counts) == compact_row(dense row)."""
+    T, cap = 16, 16
+    rng = np.random.default_rng(seed)
+    row = rng.integers(0, 3, T).astype(np.int32)
+    topics, counts = rbucket.compact_row(jnp.asarray(row), cap)
+    for _ in range(20):
+        t = int(rng.integers(T))
+        if rng.random() < 0.5 and row[t] > 0:
+            row[t] -= 1
+            topics, counts = rbucket.decrement(topics, counts,
+                                               jnp.int32(t), True)
+        else:
+            row[t] += 1
+            topics, counts = rbucket.increment(topics, counts,
+                                               jnp.int32(t), True)
+        ref_t, ref_c = rbucket.compact_row(jnp.asarray(row), cap)
+        assert bool(jnp.array_equal(topics, ref_t))
+        assert bool(jnp.array_equal(counts, ref_c))
+
+
+def test_rbucket_pick_boundary_stays_on_support():
+    """rbucket.pick at u = c[-1] (the padded plateau) returns the last
+    active topic, never a zero-count pad slot."""
+    topics = jnp.asarray([1, 5, 9, 0, 0, 0], jnp.int32)
+    counts = jnp.asarray([2, 1, 3, 0, 0, 0], jnp.int32)
+    q = jnp.ones((16,), jnp.float32)
+    c = rbucket.r_cumsum(topics, counts, q)
+    for u in (0.0, float(c[-1]) * float(U_MAX), float(c[-1])):
+        t = int(rbucket.pick(topics, counts, c, jnp.float32(u)))
+        assert t in (1, 5, 9)
+    assert int(rbucket.pick(topics, counts, c, c[-1])) == 9

@@ -65,11 +65,12 @@ if [[ "${1:-}" == "--bench-smoke" ]]; then
 fi
 
 doc_tile_smoke() {
-    # Doc-axis tiling regression signal (DESIGN.md §7): the matrix
-    # check's smoke subset — paged vs untiled twins on both layouts —
-    # plus the measured slab VMEM estimate, printed so silicon tuning
-    # has a number to start from.
-    echo "== doc-tile smoke: lda_matrix_check 4 1 smoke =="
+    # Doc-axis tiling + sparse-r regression signal (DESIGN.md §7/§7a):
+    # the matrix check's smoke subset — paged vs untiled twins on both
+    # layouts plus a sparse-r fused twin per ungrouped layout — and the
+    # measured slab VMEM estimate, printed so silicon tuning has a
+    # number to start from.
+    echo "== doc-tile + sparse-r smoke: lda_matrix_check 4 1 smoke =="
     local out
     out=$(python -m repro.launch.lda_matrix_check 4 1 smoke) || {
         echo "$out"; echo "doc-tile smoke: check exited non-zero"
@@ -88,8 +89,13 @@ if not rep["all_exact"]:
            if any(v for k, v in c.items() if k.endswith("mismatch"))]
     print("doc-tile smoke: INEXACT:", bad)
     sys.exit(1)
-print(f"doc-tile smoke: {len(rep['combos'])} combos bit-exact "
-      f"(paged == untiled == dense == ragged)")
+n_sparse = sum(c["r_mode"] == "sparse" for c in rep["combos"])
+if not n_sparse:
+    print("doc-tile smoke: no sparse-r combo in the smoke subset")
+    sys.exit(1)
+print(f"doc-tile smoke: {len(rep['combos'])} combos bit-exact, "
+      f"{n_sparse} sparse-r "
+      f"(paged == untiled == dense == ragged == dense-r)")
 PY
 }
 
