@@ -19,7 +19,12 @@ Measures tokens/sec of the three sweep paths —
   ``pad_fraction``/``total_tiles`` and its ``doc_tile`` +
   ``ntd_vmem_bytes`` (doc-topic bytes the kernel keeps VMEM-resident) so
   the dense-padding blowup, the ragged fix and the doc-slab budget all
-  stay visible in the trajectory —
+  stay visible in the trajectory;
+* ingestion throughput (host-side layout-build tokens/sec): the
+  monolithic in-memory ``build_layout`` vs the chunked
+  ``CorpusStore.from_corpus`` + ``build_layout_from_store`` out-of-core
+  pipeline (DESIGN.md §9), measured back-to-back in-process so their
+  ratio cancels host speed; ``check_regression`` gates that ratio —
 
 and, besides the usual CSV rows, maintains ``BENCH_sweep.json`` at the
 repo root: a **history** of per-PR snapshots (``{"history": [{"rev",
@@ -41,7 +46,9 @@ matrix to the fused hot path (and never touches the committed history).
 REPRO_BENCH_REGRESSION_PCT overrides the regression threshold (default
 30); REPRO_BENCH_CANARY_PCT the canary threshold (default 30 — see
 ``_check_canary`` for why interpret-mode grid-step overhead rules out
-the tighter gate the padding math alone would allow).
+the tighter gate the padding math alone would allow);
+REPRO_BENCH_INGEST_PCT the chunked-vs-monolithic ingestion threshold
+(default 80 — see ``_check_ingest``).
 """
 from __future__ import annotations
 
@@ -118,6 +125,72 @@ def _rbucket_entries(fast: bool = False) -> list[dict]:
                             "n_tokens": int(corpus.num_tokens),
                             "tokens_per_sec": corpus.num_tokens / t})
     return entries
+
+
+def _ingest_entries(fast: bool = False) -> list[dict]:
+    """Ingestion-throughput rows (DESIGN.md §9): host-side layout-build
+    tokens/sec of the monolithic in-memory ``build_layout`` vs the
+    chunked ``build_layout_from_store`` streaming the same corpus back
+    from an on-disk ``CorpusStore`` (shard npz reads included).  The
+    store is written once, outside the timed region — it is ingested
+    once per corpus while layouts are rebuilt many times (updates,
+    resharding) — and its one-time write throughput rides along on the
+    chunked row as ``store_write_tokens_per_sec``.  Both builds run
+    back-to-back in this process, so the chunked/monolithic ratio
+    cancels host speed; ``check_regression`` gates that ratio via
+    ``_check_ingest``.  The chunked run also asserts the two layouts
+    came out byte-identical (``exact``); an inexact row is an ERROR in
+    the smoke gate, same as an inexact nomad sweep."""
+    import shutil
+    import tempfile
+    import time
+
+    import numpy as np
+
+    from repro.data import synthetic
+    from repro.data.corpus_store import CorpusStore, build_layout_from_store
+    from repro.data.sharding import build_layout
+
+    T = 16
+    num_docs = 192 if fast else 768
+    corpus, _, _ = synthetic.make_corpus(
+        num_docs=num_docs, vocab_size=256, num_topics=T,
+        mean_doc_len=40.0, seed=7)
+    kw = dict(n_workers=4, T=T, n_blocks=8, layout="ragged", doc_tile=8)
+    reps = 2 if fast else 4
+
+    def best(fn):
+        times, out = [], None
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            out = fn()
+            times.append(time.perf_counter() - t0)
+        return min(times), out
+
+    t_mono, lay_mono = best(lambda: build_layout(corpus, **kw))
+    n = int(corpus.num_tokens)
+
+    d = tempfile.mkdtemp(prefix="ingest_bench_")
+    try:
+        t0 = time.perf_counter()
+        store = CorpusStore.from_corpus(
+            corpus, os.path.join(d, "store"), tokens_per_shard=1 << 12)
+        t_write = time.perf_counter() - t0
+        t_chunk, lay_chunk = best(
+            lambda: build_layout_from_store(store, **kw))
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+    exact = all(
+        np.array_equal(getattr(lay_mono, f), getattr(lay_chunk, f))
+        for f in ("canon_idx", "tok_wrd", "tok_slot", "cell_sizes"))
+    return [
+        {"path": "ingest", "backend": "monolithic", "T": T, "n_tokens": n,
+         "num_docs": num_docs, "tokens_per_sec": n / t_mono, "exact": True},
+        {"path": "ingest", "backend": "chunked", "T": T, "n_tokens": n,
+         "num_docs": num_docs, "tokens_per_sec": n / t_chunk,
+         "store_write_tokens_per_sec": n / t_write,
+         "exact": bool(exact)},
+    ]
 
 
 def _nomad_entries(W: int, fast: bool = False) -> list[dict]:
@@ -259,7 +332,7 @@ def check_regression(threshold: float | None = None) -> list[str]:
         threshold = float(os.environ.get(
             "REPRO_BENCH_REGRESSION_PCT", "30")) / 100.0
     hist = _load_history()["history"]
-    regressions = _check_canary(hist)
+    regressions = _check_canary(hist) + _check_ingest(hist)
     if len(hist) < 2:
         return regressions
     if hist[-2].get("timing") != hist[-1].get("timing"):
@@ -363,6 +436,37 @@ def _check_canary(hist: list[dict]) -> list[str]:
     return out
 
 
+def _check_ingest(hist: list[dict]) -> list[str]:
+    """Chunked-ingestion gate: in the latest snapshot, the chunked
+    (``CorpusStore`` shard-stream) build's tokens/sec must not fall more
+    than the threshold (default 80%, REPRO_BENCH_INGEST_PCT) below the
+    monolithic in-memory build.  Both rows come from the same process
+    back-to-back (``_ingest_entries``), so the ratio is immune to the
+    host-speed drift that forces the nomad rows' multi-normalization
+    dance — but the chunked path legitimately pays the per-shard npz
+    reads + stream concatenation the monolithic build never does, which
+    measures as a stable ~0.30-0.35 ratio at the bench sizes, hence the
+    loose default (floor 0.2; a *structural* regression — e.g. an
+    accidental O(shards²) concat — lands well below it).  Pre-ingest
+    snapshots carry no ingest rows and are skipped."""
+    threshold = float(os.environ.get("REPRO_BENCH_INGEST_PCT", "80")) / 100.0
+    if not hist:
+        return []
+    rows = {e.get("backend"): e for e in hist[-1]["entries"]
+            if e.get("path") == "ingest"}
+    mono, chunk = rows.get("monolithic"), rows.get("chunked")
+    if not mono or not chunk or mono["tokens_per_sec"] <= 0:
+        return []
+    ratio = chunk["tokens_per_sec"] / mono["tokens_per_sec"]
+    if ratio < 1.0 - threshold:
+        return [
+            f"ingest: chunked store build ({chunk['tokens_per_sec']:.0f} "
+            f"tok/s) is {(1 - ratio) * 100:.0f}% below the monolithic "
+            f"build ({mono['tokens_per_sec']:.0f} tok/s, same process), "
+            f"limit {threshold * 100:.0f}% ({hist[-1]['rev']})"]
+    return []
+
+
 def _pad_fraction_summary(entries: list[dict]) -> str | None:
     """One-line dense-vs-ragged pad_fraction comparison at the largest B
     both layouts ran (the number `tools/ci.sh --bench-smoke` prints)."""
@@ -388,7 +492,7 @@ def run() -> list[str]:
     fast = bool(os.environ.get("REPRO_BENCH_FAST"))
     W = 2 if fast else 4
     entries = (_serial_entries() + _rbucket_entries(fast)
-               + _nomad_entries(W, fast=fast))
+               + _ingest_entries(fast) + _nomad_entries(W, fast=fast))
     if not os.environ.get("REPRO_BENCH_SKIP_CANARY"):
         # skipping the canary skips the measurement too, not just the
         # gate — and leaves no canary entry in the snapshot to be judged
@@ -432,12 +536,22 @@ def run() -> list[str]:
             extra += (f";pad_fraction={e['pad_fraction']:.3f}"
                       f";total_tiles={e['total_tiles']}"
                       f";ntd_vmem_bytes={e['ntd_vmem_bytes']}")
+        elif e["path"] == "ingest":
+            extra += f";num_docs={e['num_docs']};n_tokens={e['n_tokens']}"
+            if "store_write_tokens_per_sec" in e:
+                extra += (f";store_write_tokens_per_sec="
+                          f"{e['store_write_tokens_per_sec']:.0f}")
         out.append(row(tag, us, extra))
-        if e["path"] == "nomad" and not e["exact"]:
+        if not e.get("exact", True):
             # surface correctness in the smoke gate, not just the JSON:
-            # an inexact distributed sweep must fail `ci.sh --bench-smoke`
-            # (it greps for ERROR rows) even though the subprocess exited 0
-            out.append(row(tag + "/ERROR", -1.0, "counts_inexact"))
+            # an inexact distributed sweep (or a chunked layout build that
+            # diverged from the monolithic one) must fail
+            # `ci.sh --bench-smoke` (it greps for ERROR rows) even though
+            # the subprocess exited 0
+            out.append(row(
+                tag + "/ERROR", -1.0,
+                "layout_mismatch" if e["path"] == "ingest"
+                else "counts_inexact"))
     pad_line = _pad_fraction_summary(entries)
     if pad_line:
         out.append(row("sweep/pad_fraction", 0.0, pad_line))

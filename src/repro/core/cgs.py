@@ -41,7 +41,7 @@ from repro.data.corpus import Corpus
 __all__ = [
     "LDAState", "init_state", "counts_from_assignments", "check_invariants",
     "sweep_reference", "sweep_fplda_word", "sweep_fplda_doc",
-    "conditional_probs",
+    "conditional_probs", "state_to_checkpoint", "state_from_checkpoint",
 ]
 
 
@@ -71,6 +71,29 @@ def init_state(corpus: Corpus, T: int, key: jax.Array) -> LDAState:
     n_td, n_wt, n_t = counts_from_assignments(
         doc_ids, word_ids, z, corpus.num_docs, corpus.num_words, T)
     return LDAState(z=z, n_td=n_td, n_wt=n_wt, n_t=n_t, key=key)
+
+
+def state_to_checkpoint(state: LDAState) -> dict[str, np.ndarray]:
+    """Flatten a serial chain state for :func:`repro.train.checkpoint.
+    save_chain`.  The typed PRNG key is stored via ``key_data`` so the
+    split/fold sequence resumes bit-exactly."""
+    return {
+        "z": np.asarray(state.z),
+        "n_td": np.asarray(state.n_td),
+        "n_wt": np.asarray(state.n_wt),
+        "n_t": np.asarray(state.n_t),
+        "key_data": np.asarray(jax.random.key_data(state.key)),
+    }
+
+
+def state_from_checkpoint(d: dict[str, np.ndarray]) -> LDAState:
+    """Inverse of :func:`state_to_checkpoint`."""
+    return LDAState(
+        z=jnp.asarray(d["z"], jnp.int32),
+        n_td=jnp.asarray(d["n_td"], jnp.int32),
+        n_wt=jnp.asarray(d["n_wt"], jnp.int32),
+        n_t=jnp.asarray(d["n_t"], jnp.int32),
+        key=jax.random.wrap_key_data(jnp.asarray(d["key_data"])))
 
 
 def check_invariants(state: LDAState, corpus: Corpus) -> dict:

@@ -800,9 +800,20 @@ class NomadLDA:
     r_mode: str = "dense"          # r-bucket draw: "dense" | "sparse"
     r_cap: int = 0                 # compaction capacity (0 → T; the layout's
                                    #   T_d_max bound is ``layout.r_cap``)
+    checkpoint_every: int | None = None  # sweeps between chain checkpoints
+    checkpoint_path: str | None = None   # where ``run`` writes them
+    resume_from: str | None = None       # chain checkpoint ``run`` loads
 
     def __post_init__(self):
         lay = self.layout
+        if self.checkpoint_every is not None:
+            if self.checkpoint_every < 1:
+                raise ValueError(
+                    f"checkpoint_every must be >= 1, got "
+                    f"{self.checkpoint_every}")
+            if not self.checkpoint_path:
+                raise ValueError(
+                    "checkpoint_every needs checkpoint_path to write to")
         W = int(np.prod([self.mesh.shape[ax] for ax in self.ring_axes]))
         if lay.W != W:
             raise ValueError(
@@ -925,8 +936,8 @@ class NomadLDA:
         lay = self.layout
         n_td_p = np.asarray(arrays["n_td"])
         n_wt_p = np.asarray(arrays["n_wt"])
-        I = int((lay.doc_of_worker >= 0).sum())
-        J = lay.num_words
+        I = lay.doc_assign.shape[0]    # full doc-id space (retired docs
+        J = lay.num_words              # keep zero rows, corpus_store)
         n_td = np.zeros((I, lay.T), np.int64)
         for w in range(lay.W):
             ids = lay.doc_of_worker[w]
@@ -938,3 +949,160 @@ class NomadLDA:
             m = ids >= 0
             n_wt[ids[m]] = n_wt_p[b, m]
         return n_td, n_wt, np.asarray(arrays["n_t"], np.int64)
+
+    # -- chain checkpoint/resume (DESIGN.md §9) -------------------------------
+    def _chain_meta(self, *, next_seed: int) -> dict:
+        """Every chain-affecting knob; a resume with any of these different
+        would silently fork the chain, so :meth:`restore_chain_state`
+        refuses mismatches."""
+        lay = self.layout
+        return {
+            "next_seed": int(next_seed),    # the RNG counter: sweep seeds
+            "ring_round": 0,                # checkpoints sit at sweep
+            "half_pos": 0,                  # boundaries — queues are home
+            "T": lay.T, "alpha": float(self.alpha), "beta": float(self.beta),
+            "sync_mode": self.sync_mode, "r_mode": self.r_mode,
+            "r_cap": int(self.r_cap), "rng_stride": int(lay.L),
+            "n_tokens": int(lay.canon_idx.shape[0]),
+            "W": lay.W, "B": lay.B, "layout_kind": lay.kind,
+            "doc_tile": int(lay.doc_tile), "num_docs": lay.doc_assign.shape[0],
+            "num_words": lay.num_words,
+        }
+
+    def export_chain_state(self, arrays: dict, *, next_seed: int):
+        """Snapshot the chain at a sweep boundary → ``(state, meta)``.
+
+        ``z`` is stored in canonical token order and the count tables
+        compact (global doc/word ids), so the snapshot is independent of
+        the padded token geometry.  The sparse r-bucket side tables are
+        stored verbatim: they are maintained incrementally and a fresh
+        rebuild from ``n_td`` may list a doc's topics in a different
+        order — same distribution, different bits.  The F+tree is derived
+        state (rebuilt inside each sweep at every block boundary from the
+        current counts), so only a digest of its basis is kept, as a
+        restore-time integrity check.
+        """
+        import hashlib
+        lay = self.layout
+        z_canon = lay.extract_canonical(np.asarray(arrays["z"]))
+        n_td, n_wt, n_t = self.global_counts(arrays)
+        state = {
+            "z_canon": z_canon.astype(np.int32),
+            "n_td": n_td.astype(np.int32),
+            "n_wt": n_wt.astype(np.int32),
+            "n_t": n_t.astype(np.int32),
+        }
+        if self.r_mode == "sparse":
+            state["rb_topics"] = np.asarray(arrays["rb_topics"])
+            state["rb_counts"] = np.asarray(arrays["rb_counts"])
+        meta = self._chain_meta(next_seed=next_seed)
+        meta["ftree_digest"] = hashlib.sha256(
+            np.ascontiguousarray(state["n_wt"]).tobytes()).hexdigest()
+        return state, meta
+
+    def restore_chain_state(self, state: dict, meta: dict):
+        """Rebuild the sharded sweep arrays from a chain snapshot →
+        ``(arrays, next_seed)``.  Bit-exact inverse of
+        :meth:`export_chain_state` for this trainer's layout."""
+        import hashlib
+        lay = self.layout
+        want = self._chain_meta(next_seed=0)
+        for k in ("T", "alpha", "beta", "sync_mode", "r_mode", "r_cap",
+                  "rng_stride", "n_tokens", "W", "B", "doc_tile",
+                  "num_docs", "num_words"):
+            if meta.get(k) != want[k]:
+                raise ValueError(
+                    f"chain checkpoint mismatch on {k!r}: checkpoint has "
+                    f"{meta.get(k)!r}, this trainer has {want[k]!r} — "
+                    f"resuming would fork the chain")
+        if meta.get("ring_round") or meta.get("half_pos"):
+            raise ValueError(
+                "chain checkpoint not at a sweep boundary "
+                f"(ring_round={meta.get('ring_round')}, "
+                f"half_pos={meta.get('half_pos')})")
+        got = hashlib.sha256(np.ascontiguousarray(
+            state["n_wt"].astype(np.int32)).tobytes()).hexdigest()
+        if meta.get("ftree_digest") not in (None, got):
+            raise ValueError("chain checkpoint n_wt digest mismatch — "
+                             "corrupt or hand-edited snapshot")
+
+        z_canon = state["z_canon"].astype(np.int32)
+        n_td_c = state["n_td"]
+        n_wt_c = state["n_wt"]
+        n_td = np.zeros((lay.W, lay.I_max, lay.T), np.int32)
+        for w in range(lay.W):
+            ids = lay.doc_of_worker[w]
+            m = ids >= 0
+            n_td[w, m] = n_td_c[ids[m]]
+        n_wt = np.zeros((lay.B, lay.J_max, lay.T), np.int32)
+        for b in range(lay.B):
+            ids = lay.word_of_block[b]
+            m = ids >= 0
+            n_wt[b, m] = n_wt_c[ids[m]]
+
+        put = lambda a, sh: jax.device_put(a, sh)
+        arrays = dict(
+            tok_doc=put(lay.tok_doc, self._sh_tok),
+            tok_wrd=put(lay.tok_wrd, self._sh_tok),
+            tok_valid=put(lay.tok_valid, self._sh_tok),
+            tok_bound=put(lay.tok_bound, self._sh_tok),
+            z=put(lay.place_canonical(z_canon), self._sh_tok),
+            n_td=put(n_td, self._sh_tok),
+            n_wt=put(n_wt, self._sh_tok),
+            n_t=put(state["n_t"].astype(np.int32), self._sh_rep),
+        )
+        if lay.kind == "ragged":
+            arrays.update(
+                cell_of_tile=put(lay.cell_of_tile, self._sh_tok),
+                tok_slot=put(lay.tok_slot, self._sh_tok))
+        elif lay.doc_tile > 0:
+            arrays.update(tok_slot=put(lay.tok_slot, self._sh_tok))
+        if lay.doc_tile > 0:
+            arrays.update(doc_tile_of=put(lay.doc_tile_of, self._sh_tok))
+        if self.r_mode == "sparse":
+            cap = self.r_cap or lay.T
+            for k in ("rb_topics", "rb_counts"):
+                if state[k].shape != (lay.W, lay.I_max, cap):
+                    raise ValueError(
+                        f"checkpoint {k} shape {state[k].shape} != "
+                        f"{(lay.W, lay.I_max, cap)}")
+            arrays.update(
+                rb_topics=put(state["rb_topics"].astype(np.int32),
+                              self._sh_tok),
+                rb_counts=put(state["rb_counts"].astype(np.int32),
+                              self._sh_tok))
+        return arrays, int(meta["next_seed"])
+
+    def save_checkpoint(self, path: str, arrays: dict, *,
+                        next_seed: int) -> None:
+        from repro.train import checkpoint
+        state, meta = self.export_chain_state(arrays, next_seed=next_seed)
+        checkpoint.save_chain(path, state, meta)
+
+    def load_checkpoint(self, path: str):
+        from repro.train import checkpoint
+        state, meta = checkpoint.load_chain(path)
+        return self.restore_chain_state(state, meta)
+
+    def run(self, n_sweeps: int, *, init_seed: int = 0,
+            on_sweep=None) -> tuple[dict, int]:
+        """Drive the chain to ``n_sweeps`` total sweeps, checkpointing
+        every ``checkpoint_every`` sweeps (resuming from ``resume_from``
+        if set) → ``(arrays, sweeps_done)``.  Sweep ``s`` always runs with
+        ``seed=s`` whether reached directly or across a resume, so an
+        interrupted run is bit-identical to a straight-through one."""
+        if self.resume_from:
+            arrays, start = self.load_checkpoint(self.resume_from)
+        else:
+            arrays = self.init_arrays(seed=init_seed)
+            start = 0
+        for s in range(start, n_sweeps):
+            arrays = self.sweep(arrays, seed=s)
+            if on_sweep is not None:
+                on_sweep(s, arrays)
+            if (self.checkpoint_every
+                    and (s + 1) % self.checkpoint_every == 0):
+                jax.block_until_ready(arrays["n_t"])
+                self.save_checkpoint(self.checkpoint_path, arrays,
+                                     next_seed=s + 1)
+        return arrays, n_sweeps

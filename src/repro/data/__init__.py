@@ -1,1 +1,8 @@
 from repro.data.corpus import Corpus  # noqa: F401
+from repro.data.corpus_store import (  # noqa: F401
+    CorpusStore,
+    build_layout_from_store,
+    carry_assignments,
+    remap_canonical,
+    update_layout,
+)

@@ -32,8 +32,31 @@ class Corpus:
     num_words: int               # J (vocabulary size)
 
     def __post_init__(self):
-        assert self.doc_ids.shape == self.word_ids.shape
-        assert self.doc_ids.dtype == np.int32 and self.word_ids.dtype == np.int32
+        # Explicit ValueErrors, not asserts: validation must survive
+        # ``python -O``, and these arrays now also arrive from on-disk
+        # corpus-store shards (repro.data.corpus_store), not just code.
+        d, w = self.doc_ids, self.word_ids
+        if d.ndim != 1 or d.shape != w.shape:
+            raise ValueError(
+                f"doc_ids/word_ids must be 1-D parallel arrays; got shapes "
+                f"{d.shape} and {w.shape}")
+        if d.dtype != np.int32 or w.dtype != np.int32:
+            raise ValueError(
+                f"doc_ids/word_ids must be int32; got {d.dtype} and "
+                f"{w.dtype}")
+        if self.num_docs < 0 or self.num_words < 0:
+            raise ValueError(
+                f"num_docs/num_words must be >= 0; got {self.num_docs}, "
+                f"{self.num_words}")
+        if d.size:
+            if int(d.min()) < 0 or int(d.max()) >= self.num_docs:
+                raise ValueError(
+                    f"doc_ids out of range [0, {self.num_docs}): "
+                    f"[{d.min()}, {d.max()}]")
+            if int(w.min()) < 0 or int(w.max()) >= self.num_words:
+                raise ValueError(
+                    f"word_ids out of range [0, {self.num_words}): "
+                    f"[{w.min()}, {w.max()}]")
 
     @property
     def num_tokens(self) -> int:

@@ -68,38 +68,35 @@ def _pow2_ceil(n: int) -> int:
     return 1 << max(int(n) - 1, 0).bit_length()
 
 
-def _segment_positions(flat_cell: np.ndarray, sg: np.ndarray, gran: int):
-    """Within-cell token positions when each cell's (doc-group) segments
-    are padded to a multiple of ``gran``.
+def _segments_from_counts(seg_counts: np.ndarray, gran: int):
+    """Doc-group segment geometry from the ``(W·B, G)`` per-(cell, group)
+    token-count accumulator, with each segment padded to a multiple of
+    ``gran``.
 
-    ``flat_cell``/``sg`` are per-token flat cell ids and doc-group ids in
-    sorted (cell-major, group within cell) order.  Returns ``(pos,
-    cell_pad, seg_cell, seg_g, seg_start, seg_pad)``: per-token position
-    within its cell, per-cell padded length (indexed by flat cell id),
-    and per-segment cell id / group id / start-within-cell / padded
-    length — the pieces the ``doc_tile_of`` maps are built from.
+    Segments are the non-empty (cell, group) pairs in cell-major, group-
+    ascending order — exactly the runs a (cell, group)-sorted token stream
+    produces, but derived purely from counts so the chunked store builder
+    (:mod:`repro.data.corpus_store`) can accumulate them shard by shard
+    without the token arrays.  Returns ``(seg_cell, seg_g, seg_start,
+    seg_pad, cell_pad, seg_start_arr)``: per-segment cell id / group id /
+    start-within-cell / padded length, the per-cell padded length
+    (``(W·B,)``), and a ``(W·B, G)`` start-within-cell lookup used to
+    place tokens one worker at a time.
     """
-    n = flat_cell.shape[0]
-    if n == 0:
-        z = np.zeros(0, np.int64)
-        return z, z, z, z, z, z
-    change = np.ones(n, bool)
-    change[1:] = (flat_cell[1:] != flat_cell[:-1]) | (sg[1:] != sg[:-1])
-    seg_idx = np.cumsum(change) - 1                    # token → segment
-    seg_sizes = np.bincount(seg_idx)
+    WB, G = seg_counts.shape
+    seg_cell, seg_g = np.nonzero(seg_counts)           # row-major = sorted
+    seg_sizes = seg_counts[seg_cell, seg_g]
     seg_pad = -(-seg_sizes // gran) * gran
-    seg_cell = flat_cell[change]
-    seg_g = sg[change]
     cell_change = np.ones(seg_cell.shape[0], bool)
     cell_change[1:] = seg_cell[1:] != seg_cell[:-1]
     run = np.cumsum(seg_pad) - seg_pad                 # global segment start
     base = np.maximum.accumulate(np.where(cell_change, run, 0))
     seg_start = run - base                             # start within cell
-    pos = seg_start[seg_idx] + _running_count(seg_idx)
-    cell_pad = np.bincount(seg_cell, weights=seg_pad,
-                           minlength=int(flat_cell.max()) + 1).astype(
-                               np.int64)
-    return pos, cell_pad, seg_cell, seg_g, seg_start, seg_pad
+    cell_pad = np.zeros(WB, np.int64)
+    np.add.at(cell_pad, seg_cell, seg_pad)
+    seg_start_arr = np.zeros((WB, G), np.int64)
+    seg_start_arr[seg_cell, seg_g] = seg_start
+    return seg_cell, seg_g, seg_start, seg_pad, cell_pad, seg_start_arr
 
 
 def _dense_doc_blk() -> int:
@@ -451,12 +448,308 @@ def counts_from_layout(lay: NomadLayout, z: np.ndarray, T: int):
     rebuilds from the flat serial corpus arrays.)"""
     zz = lay.extract_canonical(z)
     gdoc, gwrd = lay.token_globals()
-    I = int((lay.doc_of_worker >= 0).sum())
-    n_td = np.zeros((I, T), np.int64)
+    I = lay.doc_assign.shape[0]        # full doc-id space: retired docs
+    n_td = np.zeros((I, T), np.int64)  # keep zero rows (corpus_store)
     n_wt = np.zeros((lay.num_words, T), np.int64)
     np.add.at(n_td, (gdoc, zz), 1)
     np.add.at(n_wt, (gwrd, zz), 1)
     return n_td, n_wt, np.bincount(zz, minlength=T).astype(np.int64)
+
+
+def _validate_build_args(W: int, B: int, layout: str,
+                         doc_tile: int | None, doc_blk: int | None) -> None:
+    """Shared argument validation for the monolithic and chunked builders."""
+    if layout not in ("dense", "ragged"):
+        raise ValueError(f"unknown layout {layout!r} (dense|ragged)")
+    if doc_tile is not None and int(doc_tile) < 1:
+        raise ValueError(f"doc_tile must be >= 1, got {doc_tile}")
+    if doc_blk is not None and doc_tile is None:
+        raise ValueError("doc_blk only applies with doc_tile grouping")
+    if doc_blk is not None and layout == "ragged":
+        raise ValueError(
+            "ragged doc grouping is tiled at the stream's own `tile` "
+            "granularity; doc_blk only applies to layout='dense'")
+    if B % W != 0 or B < W:
+        raise ValueError(
+            f"n_blocks must be a positive multiple of n_workers so each "
+            f"worker's block queue has equal length; got n_blocks={B}, "
+            f"n_workers={W}")
+
+
+def _plan_partition(doc_lengths: np.ndarray, freqs: np.ndarray, *,
+                    W: int, B: int, balance: bool, freq_w):
+    """Assign docs → workers and words → blocks from the marginal stats.
+
+    Hierarchical word packing: LPT into W ring chunks first (so per-round
+    queue loads are exactly as balanced as the B = W packing — flat LPT
+    into B small bins lets single heavy words dominate a bin and would
+    *worsen* round balance), then LPT each chunk into k = B/W blocks.
+    Block b of chunk c gets global id c*k + b, matching the queue layout.
+
+    ``freq_w`` is a callable ``doc_assign -> (W, J)`` per-worker word
+    frequency table, invoked only when the pipelined half ordering needs
+    it — the chunked store builder streams it shard by shard instead of
+    indexing the full token arrays.
+    """
+    doc_assign = lpt_assign(doc_lengths, W, balance)
+    chunk_assign = lpt_assign(freqs, W, balance)
+    if B == W:
+        return doc_assign, chunk_assign
+    kq = B // W
+    k0 = half_queue_split(kq)
+    # per-worker word frequencies: the half ordering balances not just
+    # the chunk's global halves but each worker's (identically for
+    # both layouts — the ragged streams pad each half to its heaviest
+    # per-worker occurrence)
+    fw = freq_w(doc_assign) if (balance and k0 > 0) else None
+    word_assign = np.zeros_like(chunk_assign)
+    for c in range(W):
+        ids = np.nonzero(chunk_assign == c)[0]
+        bins = lpt_assign(freqs[ids], kq, balance)
+        if balance and k0 > 0:
+            # order blocks within the chunk so the pipelined ring's
+            # half-queues [0, k0) / [k0, kq) are load-matched
+            wl = np.stack([np.bincount(bins, weights=fw[w, ids],
+                                       minlength=kq) for w in range(W)])
+            bins = _order_bins_for_halves(bins, freqs[ids], kq, k0, wl)
+        word_assign[ids] = c * kq + bins
+    return doc_assign, word_assign
+
+
+def _local_maps(doc_assign: np.ndarray, word_assign: np.ndarray,
+                W: int, B: int):
+    """Local doc / word index maps from the assignment vectors."""
+    I_counts = np.bincount(doc_assign, minlength=W)
+    J_counts = np.bincount(word_assign, minlength=B)
+    I_max, J_max = int(I_counts.max()), int(J_counts.max())
+    doc_of_worker = np.full((W, I_max), -1, np.int32)
+    doc_local = np.zeros(doc_assign.shape[0], np.int32)
+    for w in range(W):
+        ids = np.nonzero(doc_assign == w)[0]
+        doc_of_worker[w, :len(ids)] = ids
+        doc_local[ids] = np.arange(len(ids))
+    word_of_block = np.full((B, J_max), -1, np.int32)
+    word_local = np.zeros(word_assign.shape[0], np.int32)
+    for b in range(B):
+        ids = np.nonzero(word_assign == b)[0]
+        word_of_block[b, :len(ids)] = ids
+        word_local[ids] = np.arange(len(ids))
+    return (doc_of_worker, doc_local, word_of_block, word_local,
+            I_max, J_max)
+
+
+@dataclass
+class _Geom:
+    """Token-geometry constants derived purely from count accumulators
+    (``cell_sizes`` and, under doc grouping, the per-(cell, group) segment
+    counts) — everything :class:`_LayoutAssembler` needs to place one
+    worker's tokens without seeing any other worker's."""
+    layout: str
+    W: int
+    B: int
+    L: int                       # heaviest cell (RNG stride)
+    dt: int                      # doc_tile (0 = ungrouped)
+    gran: int                    # segment grid step (doc_blk / tile)
+    n_doc_tiles: int
+    shape: tuple
+    seg_start_arr: np.ndarray | None   # (W·B, G) segment start within cell
+    L_row: int = 0               # dense row length (≥ L under grouping)
+    tile: int = 0                # ragged tokens per tile
+    R0: int = 0                  # ragged first-half tiles
+    R: int = 0                   # ragged tiles per stream
+    S: int = 0                   # ragged stream length (R·tile)
+    off: np.ndarray | None = None          # ragged (W, W, k) cell → tile
+    cell_of_tile: np.ndarray | None = None
+    dto: np.ndarray | None = None          # doc_tile_of map
+
+
+def _build_geometry(cell_sizes: np.ndarray, seg_counts: np.ndarray | None,
+                    *, layout: str, W: int, B: int, dt: int, gran: int,
+                    n_doc_tiles: int, tile: int) -> _Geom:
+    """Global token geometry from the count accumulators alone."""
+    L = max(int(cell_sizes.max()), 1)
+    if layout == "dense":
+        if dt:
+            seg_cell, seg_g, seg_start, seg_pad, cp, seg_start_arr = \
+                _segments_from_counts(seg_counts, gran)
+            L_row = max(int(cp.max()), gran)
+            dto = np.full((W, B, L_row // gran), -1, np.int32)
+            for s in range(seg_cell.shape[0]):
+                w_, b_ = divmod(int(seg_cell[s]), B)
+                t0 = int(seg_start[s]) // gran
+                dto[w_, b_, t0:t0 + int(seg_pad[s]) // gran] = seg_g[s]
+            return _Geom(layout, W, B, L, dt, gran, n_doc_tiles,
+                         (W, B, L_row), seg_start_arr, L_row=L_row,
+                         dto=_ffill_nonneg(dto))
+        return _Geom(layout, W, B, L, 0, 0, 1, (W, B, L), None, L_row=L)
+    k = B // W
+    k0 = half_queue_split(k)
+    # Tiles per cell (empty cells keep one tile so every block is paged
+    # through the kernel exactly once per round), grouped (W, chunk, k).
+    if dt:
+        seg_cell, seg_g, seg_start, seg_pad, cp, seg_start_arr = \
+            _segments_from_counts(seg_counts, gran)
+        tiles_cell = np.maximum(1, cp // tile).reshape(W, W, k)
+    else:
+        seg_start_arr = None
+        tiles_cell = np.maximum(1, -(-cell_sizes // tile)).reshape(W, W, k)
+    half0 = tiles_cell[:, :, :k0].sum(axis=2)          # (W, W) tiles
+    half1 = tiles_cell[:, :, k0:].sum(axis=2)
+    # Each pipelined half-queue is padded to its own global tile max so
+    # the half split is one static tile index for every (w, chunk).
+    R0 = int(half0.max()) if k0 > 0 else 0
+    R1 = int(half1.max())
+    R = R0 + R1
+    S = R * tile
+    # tile offset of cell j within its (w, chunk) stream
+    start = np.cumsum(tiles_cell, axis=2) - tiles_cell
+    off = np.where(np.arange(k)[None, None, :] < k0,
+                   start, R0 + start - half0[:, :, None])
+    cell_of_tile = np.zeros((W, W, R), np.int32)
+    if k0 > 0:                     # half-padding tiles: last cell of the
+        cell_of_tile[:, :, :R0] = k0 - 1      # half (keeps the tile→cell
+    cell_of_tile[:, :, R0:] = k - 1           # map non-decreasing)
+    for w in range(W):
+        for c in range(W):
+            for j in range(k):
+                o, n = int(off[w, c, j]), int(tiles_cell[w, c, j])
+                cell_of_tile[w, c, o:o + n] = j
+    geom = _Geom("ragged", W, B, L, dt, gran, n_doc_tiles, (W, W, S),
+                 seg_start_arr, tile=tile, R0=R0, R=R, S=S, off=off,
+                 cell_of_tile=cell_of_tile)
+    if dt:
+        dto = np.full((W, W, R), -1, np.int32)
+        for s in range(seg_cell.shape[0]):
+            w_, b_ = divmod(int(seg_cell[s]), B)
+            c_, j_ = divmod(b_, k)
+            t0 = int(off[w_, c_, j_]) + int(seg_start[s]) // tile
+            dto[w_, c_, t0:t0 + int(seg_pad[s]) // tile] = seg_g[s]
+        geom.dto = _ffill_nonneg(dto)
+    return geom
+
+
+class _LayoutAssembler:
+    """Fills the token-geometry arrays one worker at a time.
+
+    Canonical order is worker-major, so feeding workers in ascending
+    order with each worker's tokens already sorted by (block[, doc
+    group], word id) — ties in original corpus order — reproduces the
+    global lexsorted order exactly.  Both :func:`build_layout` (which
+    sorts the whole corpus at once) and the chunked store builder (which
+    sorts one worker's shard-streamed tokens at a time) feed this same
+    assembler, which is what makes their outputs byte-identical by
+    construction.
+
+    ``slot`` may be supplied per worker to *preserve* historical slot
+    indices (the incremental add/retire path, where surviving tokens must
+    keep their RNG uids); by default it is the within-cell running count,
+    the initial-build rule.
+    """
+
+    def __init__(self, geom: _Geom, n_tokens: int):
+        g = self.geom = geom
+        self.tok_doc = np.zeros(g.shape, np.int32)
+        self.tok_wrd = np.zeros(g.shape, np.int32)
+        self.tok_gwrd = np.zeros(g.shape, np.int32)
+        self.tok_valid = np.zeros(g.shape, bool)
+        self.tok_bound = np.zeros(g.shape, bool)
+        need_slot = g.layout == "ragged" or g.dt > 0
+        self.tok_slot = np.zeros(g.shape, np.int32) if need_slot else None
+        self.canon_idx = np.zeros(n_tokens, np.int64)
+        self._n0 = 0
+        self._last_w = -1
+
+    def add_worker(self, w: int, sb: np.ndarray, dloc: np.ndarray,
+                   wloc: np.ndarray, gwrd: np.ndarray,
+                   sg: np.ndarray | None = None,
+                   slot: np.ndarray | None = None) -> None:
+        """Place worker ``w``'s tokens (sorted by (block[, group], word))."""
+        if w <= self._last_w:
+            raise ValueError("workers must be added in ascending order")
+        self._last_w = w
+        g = self.geom
+        n = sb.shape[0]
+        flat_cell = w * np.int64(g.B) + sb.astype(np.int64)
+        if slot is None:
+            # slot index of each token within its cell (canonical order is
+            # the lexsorted order itself: worker, block, word, occurrence)
+            slot = _running_count(flat_cell)
+        # word boundary within cell: first slot, or word differs from
+        # previous (the first token of a cell always bounds — its
+        # predecessor in the global order is another worker's cell)
+        prev_same_cell = np.zeros(n, bool)
+        prev_same_cell[1:] = flat_cell[1:] == flat_cell[:-1]
+        prev_same_word = np.zeros(n, bool)
+        prev_same_word[1:] = gwrd[1:] == gwrd[:-1]
+        bound = ~(prev_same_cell & prev_same_word)
+        if g.dt:
+            seg_key = flat_cell * np.int64(g.n_doc_tiles) + sg
+            pos_c = (g.seg_start_arr[flat_cell, sg]
+                     + _running_count(seg_key))
+        if g.layout == "dense":
+            pos = pos_c if g.dt else slot
+            canon = flat_cell * g.L_row + pos
+        else:
+            k = g.B // g.W
+            sc, sj = sb // k, sb % k
+            pos = g.off[w, sc, sj] * g.tile + (pos_c if g.dt else slot)
+            canon = (np.int64(w) * g.W + sc.astype(np.int64)) * g.S + pos
+        for arr, vals in ((self.tok_doc, dloc), (self.tok_wrd, wloc),
+                          (self.tok_gwrd, gwrd), (self.tok_valid, True),
+                          (self.tok_bound, bound), (self.tok_slot, slot)):
+            if arr is not None:
+                arr.reshape(-1)[canon] = vals
+        self.canon_idx[self._n0:self._n0 + n] = canon
+        self._n0 += n
+
+    def finish(self, *, T: int, num_words: int, doc_of_worker, word_of_block,
+               I_max: int, J_max: int, doc_assign, word_assign, cell_sizes,
+               r_cap: int) -> NomadLayout:
+        if self._n0 != self.canon_idx.shape[0]:
+            raise ValueError(
+                f"assembled {self._n0} tokens but the layout was sized for "
+                f"{self.canon_idx.shape[0]}")
+        g = self.geom
+        extra = {}
+        if g.layout == "dense":
+            if g.dt:
+                extra = dict(doc_tile=g.dt, n_doc_tiles=g.n_doc_tiles,
+                             doc_blk=g.gran, doc_tile_of=g.dto,
+                             tok_slot=self.tok_slot)
+        else:
+            extra = dict(kind="ragged", tile=g.tile, n_tiles=g.R,
+                         tile_split=g.R0, cell_of_tile=g.cell_of_tile,
+                         tok_slot=self.tok_slot)
+            if g.dt:
+                extra.update(doc_tile=g.dt, n_doc_tiles=g.n_doc_tiles,
+                             doc_blk=g.gran, doc_tile_of=g.dto)
+        return NomadLayout(
+            W=g.W, B=g.B, L=g.L, T=T, num_words=num_words,
+            tok_doc=self.tok_doc, tok_wrd=self.tok_wrd,
+            tok_gwrd=self.tok_gwrd, tok_valid=self.tok_valid,
+            tok_bound=self.tok_bound,
+            doc_of_worker=doc_of_worker, word_of_block=word_of_block,
+            I_max=I_max, J_max=J_max,
+            doc_assign=doc_assign, word_assign=word_assign,
+            cell_sizes=cell_sizes, canon_idx=self.canon_idx,
+            r_cap=r_cap, **extra)
+
+
+def _resolve_gran(layout: str, dt: int, doc_blk: int | None,
+                  tile: int | None, cell_sizes: np.ndarray) -> tuple:
+    """Resolve the (segment grid step, ragged tile) pair for a build."""
+    if layout == "ragged":
+        tile = (default_ragged_tile(cell_sizes) if tile is None
+                else int(tile))
+        if tile < 1:
+            raise ValueError(f"ragged tile must be >= 1, got {tile}")
+        return tile, tile
+    if dt:
+        gran = int(doc_blk) if doc_blk is not None else _dense_doc_blk()
+        if gran < 1:
+            raise ValueError(f"doc_blk must be >= 1, got {gran}")
+        return gran, 0
+    return 0, 0
 
 
 def build_layout(corpus: Corpus, *, n_workers: int, T: int,
@@ -482,67 +775,25 @@ def build_layout(corpus: Corpus, *, n_workers: int, T: int,
     and ``tile`` for ragged), so every aligned token tile touches exactly
     one ``(doc_tile, T)`` doc-topic slab, recorded in ``doc_tile_of``.
     ``doc_tile=None`` (default) keeps the ungrouped order bit-for-bit.
+
+    :func:`repro.data.corpus_store.build_layout_from_store` builds the
+    identical layout from an out-of-core shard store; both feed the same
+    :class:`_LayoutAssembler` so the outputs are byte-for-byte equal.
     """
     B = n_workers if n_blocks is None else n_blocks
     W = n_workers
-    if layout not in ("dense", "ragged"):
-        raise ValueError(f"unknown layout {layout!r} (dense|ragged)")
-    if doc_tile is not None and int(doc_tile) < 1:
-        raise ValueError(f"doc_tile must be >= 1, got {doc_tile}")
-    if doc_blk is not None and doc_tile is None:
-        raise ValueError("doc_blk only applies with doc_tile grouping")
-    if B % W != 0 or B < W:
-        raise ValueError(
-            f"n_blocks must be a positive multiple of n_workers so each "
-            f"worker's block queue has equal length; got n_blocks={B}, "
-            f"n_workers={W}")
-    doc_assign = lpt_assign(corpus.doc_lengths(), W, balance)
-    # Hierarchical word packing: LPT into W ring chunks first (so per-round
-    # queue loads are exactly as balanced as the B = W packing — flat LPT
-    # into B small bins lets single heavy words dominate a bin and would
-    # *worsen* round balance), then LPT each chunk into k = B/W blocks.
-    # Block b of chunk c gets global id c*k + b, matching the queue layout.
-    freqs = corpus.word_freqs()
-    chunk_assign = lpt_assign(freqs, W, balance)
-    if B == W:
-        word_assign = chunk_assign
-    else:
-        kq = B // W
-        k0 = half_queue_split(kq)
-        # per-worker word frequencies: the half ordering balances not just
-        # the chunk's global halves but each worker's (identically for
-        # both layouts — the ragged streams pad each half to its heaviest
-        # per-worker occurrence)
-        freq_w = np.zeros((W, corpus.num_words), np.int64)
-        np.add.at(freq_w, (doc_assign[corpus.doc_ids], corpus.word_ids), 1)
-        word_assign = np.zeros_like(chunk_assign)
-        for c in range(W):
-            ids = np.nonzero(chunk_assign == c)[0]
-            bins = lpt_assign(freqs[ids], kq, balance)
-            if balance and k0 > 0:
-                # order blocks within the chunk so the pipelined ring's
-                # half-queues [0, k0) / [k0, kq) are load-matched
-                wl = np.stack([np.bincount(bins, weights=freq_w[w, ids],
-                                           minlength=kq) for w in range(W)])
-                bins = _order_bins_for_halves(bins, freqs[ids], kq, k0, wl)
-            word_assign[ids] = c * kq + bins
+    _validate_build_args(W, B, layout, doc_tile, doc_blk)
 
-    # Local doc / word index maps.
-    I_counts = np.bincount(doc_assign, minlength=W)
-    J_counts = np.bincount(word_assign, minlength=B)
-    I_max, J_max = int(I_counts.max()), int(J_counts.max())
-    doc_of_worker = np.full((W, I_max), -1, np.int32)
-    doc_local = np.zeros(corpus.num_docs, np.int32)
-    for w in range(W):
-        ids = np.nonzero(doc_assign == w)[0]
-        doc_of_worker[w, :len(ids)] = ids
-        doc_local[ids] = np.arange(len(ids))
-    word_of_block = np.full((B, J_max), -1, np.int32)
-    word_local = np.zeros(corpus.num_words, np.int32)
-    for b in range(B):
-        ids = np.nonzero(word_assign == b)[0]
-        word_of_block[b, :len(ids)] = ids
-        word_local[ids] = np.arange(len(ids))
+    def freq_w(doc_assign):
+        fw = np.zeros((W, corpus.num_words), np.int64)
+        np.add.at(fw, (doc_assign[corpus.doc_ids], corpus.word_ids), 1)
+        return fw
+
+    doc_assign, word_assign = _plan_partition(
+        corpus.doc_lengths(), corpus.word_freqs(), W=W, B=B,
+        balance=balance, freq_w=freq_w)
+    (doc_of_worker, doc_local, word_of_block, word_local,
+     I_max, J_max) = _local_maps(doc_assign, word_assign, W, B)
 
     # Cell grid: sort tokens by (worker, block[, doc group], word id).
     tw = doc_assign[corpus.doc_ids]
@@ -561,133 +812,32 @@ def build_layout(corpus: Corpus, *, n_workers: int, T: int,
 
     cell_sizes = np.zeros((W, B), np.int64)
     np.add.at(cell_sizes, (sw, sb), 1)
-    L = max(int(cell_sizes.max()), 1)
+    seg_counts = None
+    if dt:
+        seg_counts = np.zeros((W * B, n_doc_tiles), np.int64)
+        np.add.at(seg_counts, (sw.astype(np.int64) * B + sb, sg), 1)
+    gran, tile = _resolve_gran(layout, dt, doc_blk, tile, cell_sizes)
 
-    # slot index of each token within its cell (canonical order is the
-    # lexsorted order itself: by worker, block, word id, occurrence)
-    flat_cell = sw.astype(np.int64) * B + sb
-    slot = _running_count(flat_cell)
-    # word boundary within cell: first slot, or word differs from previous
-    prev_same_cell = np.zeros_like(flat_cell, bool)
-    prev_same_cell[1:] = flat_cell[1:] == flat_cell[:-1]
-    prev_same_word = np.zeros_like(flat_cell, bool)
-    prev_same_word[1:] = swrd[1:] == swrd[:-1]
-    bound = ~(prev_same_cell & prev_same_word)
+    geom = _build_geometry(cell_sizes, seg_counts, layout=layout, W=W, B=B,
+                           dt=dt, gran=gran, n_doc_tiles=n_doc_tiles,
+                           tile=tile)
+    asm = _LayoutAssembler(geom, sw.shape[0])
+    w_bounds = np.searchsorted(sw, np.arange(W + 1))
+    for w in range(W):
+        lo, hi = int(w_bounds[w]), int(w_bounds[w + 1])
+        asm.add_worker(w, sb[lo:hi], doc_local[sdoc[lo:hi]],
+                       word_local[swrd[lo:hi]], swrd[lo:hi],
+                       sg[lo:hi] if dt else None)
 
     # Sparse r-bucket capacity (rbucket module docstring): a document of n
     # tokens holds ≤ min(T, n) distinct topics, and at increment time one
     # token is unassigned, so min(T, max doc length) slots always suffice.
     r_cap = max(1, min(T, int(corpus.doc_lengths().max(initial=1))))
-
-    common = dict(
-        W=W, B=B, L=L, T=T, num_words=corpus.num_words,
-        doc_of_worker=doc_of_worker, word_of_block=word_of_block,
-        I_max=I_max, J_max=J_max,
+    return asm.finish(
+        T=T, num_words=corpus.num_words, doc_of_worker=doc_of_worker,
+        word_of_block=word_of_block, I_max=I_max, J_max=J_max,
         doc_assign=doc_assign, word_assign=word_assign,
         cell_sizes=cell_sizes, r_cap=r_cap)
-
-    def _seg_layout(gran: int):
-        """Doc-group segment geometry at grid step ``gran`` tokens; the
-        per-cell padded lengths are returned for all W·B cells."""
-        pos, cell_pad, seg_cell, seg_g, seg_start, seg_pad = \
-            _segment_positions(flat_cell, sg, gran)
-        cp = np.zeros(W * B, np.int64)
-        cp[:cell_pad.shape[0]] = cell_pad
-        return pos, cp, seg_cell, seg_g, seg_start, seg_pad
-
-    if layout == "dense":
-        if dt:
-            gran = int(doc_blk) if doc_blk is not None else _dense_doc_blk()
-            if gran < 1:
-                raise ValueError(f"doc_blk must be >= 1, got {gran}")
-            pos, cp, seg_cell, seg_g, seg_start, seg_pad = _seg_layout(gran)
-            L_row = max(int(cp.max()), gran)
-            canon_idx = flat_cell * L_row + pos
-            shape = (W, B, L_row)
-            dto = np.full((W, B, L_row // gran), -1, np.int32)
-            for s in range(seg_cell.shape[0]):
-                w_, b_ = divmod(int(seg_cell[s]), B)
-                t0 = int(seg_start[s]) // gran
-                dto[w_, b_, t0:t0 + int(seg_pad[s]) // gran] = seg_g[s]
-            tok_slot = np.zeros(shape, np.int32)
-            tok_slot.reshape(-1)[canon_idx] = slot
-            extra = dict(doc_tile=dt, n_doc_tiles=n_doc_tiles, doc_blk=gran,
-                         doc_tile_of=_ffill_nonneg(dto), tok_slot=tok_slot)
-        else:
-            # flat position of each canonical token in the (W, B, L) grid
-            canon_idx = (sw.astype(np.int64) * B + sb) * L + slot
-            shape = (W, B, L)
-            extra = {}
-    else:
-        if doc_blk is not None:
-            raise ValueError(
-                "ragged doc grouping is tiled at the stream's own `tile` "
-                "granularity; doc_blk only applies to layout='dense'")
-        k = B // W
-        k0 = half_queue_split(k)
-        tile = default_ragged_tile(cell_sizes) if tile is None else int(tile)
-        if tile < 1:
-            raise ValueError(f"ragged tile must be >= 1, got {tile}")
-        # Tiles per cell (empty cells keep one tile so every block is paged
-        # through the kernel exactly once per round), grouped (W, chunk, k).
-        if dt:
-            pos_c, cp, seg_cell, seg_g, seg_start, seg_pad = \
-                _seg_layout(tile)
-            tiles_cell = np.maximum(1, cp // tile).reshape(W, W, k)
-        else:
-            tiles_cell = np.maximum(1, -(-cell_sizes // tile)).reshape(
-                W, W, k)
-        half0 = tiles_cell[:, :, :k0].sum(axis=2)          # (W, W) tiles
-        half1 = tiles_cell[:, :, k0:].sum(axis=2)
-        # Each pipelined half-queue is padded to its own global tile max so
-        # the half split is one static tile index for every (w, chunk).
-        R0 = int(half0.max()) if k0 > 0 else 0
-        R1 = int(half1.max())
-        R = R0 + R1
-        S = R * tile
-        # tile offset of cell j within its (w, chunk) stream
-        start = np.cumsum(tiles_cell, axis=2) - tiles_cell
-        off = np.where(np.arange(k)[None, None, :] < k0,
-                       start, R0 + start - half0[:, :, None])
-        cell_of_tile = np.zeros((W, W, R), np.int32)
-        if k0 > 0:                     # half-padding tiles: last cell of the
-            cell_of_tile[:, :, :R0] = k0 - 1      # half (keeps the tile→cell
-        cell_of_tile[:, :, R0:] = k - 1           # map non-decreasing)
-        for w in range(W):
-            for c in range(W):
-                for j in range(k):
-                    o, n = int(off[w, c, j]), int(tiles_cell[w, c, j])
-                    cell_of_tile[w, c, o:o + n] = j
-        sc, sj = sb // k, sb % k
-        pos = off[sw, sc, sj] * tile + (pos_c if dt else slot)
-        canon_idx = (sw.astype(np.int64) * W + sc) * S + pos
-        shape = (W, W, S)
-        tok_slot = np.zeros(shape, np.int32)
-        tok_slot.reshape(-1)[canon_idx] = slot
-        extra = dict(kind="ragged", tile=tile, n_tiles=R, tile_split=R0,
-                     cell_of_tile=cell_of_tile, tok_slot=tok_slot)
-        if dt:
-            dto = np.full((W, W, R), -1, np.int32)
-            for s in range(seg_cell.shape[0]):
-                w_, b_ = divmod(int(seg_cell[s]), B)
-                c_, j_ = divmod(b_, k)
-                t0 = int(off[w_, c_, j_]) + int(seg_start[s]) // tile
-                dto[w_, c_, t0:t0 + int(seg_pad[s]) // tile] = seg_g[s]
-            extra.update(doc_tile=dt, n_doc_tiles=n_doc_tiles, doc_blk=tile,
-                         doc_tile_of=_ffill_nonneg(dto))
-
-    def place(vals, dtype):
-        out = np.zeros(shape, dtype)
-        out.reshape(-1)[canon_idx] = vals
-        return out
-
-    return NomadLayout(
-        tok_doc=place(doc_local[sdoc], np.int32),
-        tok_wrd=place(word_local[swrd], np.int32),
-        tok_gwrd=place(swrd, np.int32),
-        tok_valid=place(np.ones(sw.shape[0], bool), bool),
-        tok_bound=place(bound, bool),
-        canon_idx=canon_idx, **common, **extra)
 
 
 def _running_count(groups: np.ndarray) -> np.ndarray:

@@ -1,8 +1,16 @@
 """Multi-device Nomad LDA correctness check (run as a subprocess).
 
 Usage:  python -m repro.launch.lda_dist_check \
-            [n_devices] [sync_mode] [pods] [inner_mode] [n_blocks] \
-            [ring_mode] [layout] [doc_tile] [r_mode]
+            [--n-devices N] [--sync-mode M] [--pods P] [--inner-mode M] \
+            [--n-blocks B] [--ring-mode M] [--layout L] [--doc-tile D] \
+            [--r-mode M] [--resume-from CKPT]
+
+The old positional form ``[n_devices] [sync_mode] [pods] [inner_mode]
+[n_blocks] [ring_mode] [layout] [doc_tile] [r_mode]`` still works for
+one release (a deprecation note goes to stderr); flags win over
+positionals when both are given.  ``--resume-from`` starts the chain
+from a ``launch/resume_check.py``-style checkpoint instead of a fresh
+init.
 
 Sets XLA_FLAGS *before* importing jax (the only supported way to fake a
 multi-device CPU platform), runs sweeps of Nomad F+LDA on a synthetic
@@ -18,21 +26,52 @@ so the padding cost of each geometry is visible next to its tokens/sec.
 walks the per-doc compacted side tables at the layout's ``r_cap``
 capacity (DESIGN.md §7a) and the report carries both knobs.
 """
+import argparse
 import json
 import os
 import sys
 
+# (name, type, default) — positional order of the deprecated legacy form.
+_ARGS = [("n_devices", int, 8), ("sync_mode", str, "stoken"),
+         ("pods", int, 1), ("inner_mode", str, "scan"),
+         ("n_blocks", int, 0), ("ring_mode", str, "barrier"),
+         ("layout", str, "dense"), ("doc_tile", int, 0),
+         ("r_mode", str, "dense")]
+
+
+def parse_args(argv):
+    p = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    for name, typ, default in _ARGS:
+        p.add_argument("--" + name.replace("_", "-"), type=typ, default=None)
+    p.add_argument("--resume-from", default="",
+                   help="chain checkpoint to start from (fresh init if "
+                        "unset)")
+    p.add_argument("--checkpoint-path", default="",
+                   help="write a chain checkpoint here after the last "
+                        "sweep (consumable by --resume-from)")
+    p.add_argument("legacy", nargs="*",
+                   help="deprecated positional form: "
+                        + " ".join(f"[{n}]" for n, _, _ in _ARGS))
+    args = p.parse_args(argv)
+    if args.legacy:
+        print("lda_dist_check: positional arguments are deprecated; use "
+              "the --flag form (see --help)", file=sys.stderr)
+        if len(args.legacy) > len(_ARGS):
+            p.error(f"at most {len(_ARGS)} positional arguments")
+    for i, (name, typ, default) in enumerate(_ARGS):
+        if getattr(args, name) is None:
+            setattr(args, name,
+                    typ(args.legacy[i]) if i < len(args.legacy) else default)
+    args.n_blocks = args.n_blocks or args.n_devices
+    return args
+
 
 def main() -> None:
-    n_dev = int(sys.argv[1]) if len(sys.argv) > 1 else 8
-    sync_mode = sys.argv[2] if len(sys.argv) > 2 else "stoken"
-    pods = int(sys.argv[3]) if len(sys.argv) > 3 else 1
-    inner_mode = sys.argv[4] if len(sys.argv) > 4 else "scan"
-    n_blocks = int(sys.argv[5]) if len(sys.argv) > 5 else n_dev
-    ring_mode = sys.argv[6] if len(sys.argv) > 6 else "barrier"
-    layout_kind = sys.argv[7] if len(sys.argv) > 7 else "dense"
-    doc_tile = int(sys.argv[8]) if len(sys.argv) > 8 else 0
-    r_mode = sys.argv[9] if len(sys.argv) > 9 else "dense"
+    args = parse_args(sys.argv[1:])
+    n_dev, sync_mode, pods = args.n_devices, args.sync_mode, args.pods
+    inner_mode, n_blocks = args.inner_mode, args.n_blocks
+    ring_mode, layout_kind = args.ring_mode, args.layout
+    doc_tile, r_mode = args.doc_tile, args.r_mode
 
     os.environ["XLA_FLAGS"] = (
         f"--xla_force_host_platform_device_count={n_dev} "
@@ -74,7 +113,10 @@ def main() -> None:
                    inner_mode=inner_mode, ring_mode=ring_mode,
                    doc_tile=doc_tile if doc_tile > 0 else None,
                    r_mode=r_mode, r_cap=r_cap)
-    arrays = lda.init_arrays(seed=0)
+    if args.resume_from:
+        arrays, seed0 = lda.load_checkpoint(args.resume_from)
+    else:
+        arrays, seed0 = lda.init_arrays(seed=0), 0
 
     # Host reference clock: a fixed jitted workload timed in the same
     # process, interleaved with the timed sweeps.  On a shared CI host a
@@ -95,7 +137,7 @@ def main() -> None:
 
     n_sweeps = 7                          # 6 timed sweeps
     lls = [lda.log_likelihood(arrays)]
-    arrays = lda.sweep(arrays, seed=0)        # compile + first sweep
+    arrays = lda.sweep(arrays, seed=seed0)    # compile + first sweep
     lls.append(lda.log_likelihood(arrays))
     sweep_times, ref_times = [], []
     for it in range(1, n_sweeps):
@@ -103,14 +145,18 @@ def main() -> None:
         jax.block_until_ready(_ref_step(ref_x))
         ref_times.append(time.perf_counter() - t0)
         t0 = time.perf_counter()              # time the sweep alone — the
-        arrays = lda.sweep(arrays, seed=it)   # LL eval is diagnostics, not
-        jax.block_until_ready(arrays["n_t"])  # the throughput under test
+        arrays = lda.sweep(arrays, seed=seed0 + it)  # LL eval is diagnostics,
+        jax.block_until_ready(arrays["n_t"])  # not the throughput under test
         sweep_times.append(time.perf_counter() - t0)
         lls.append(lda.log_likelihood(arrays))
     # Median per-sweep wall: a single stalled sweep must not swing the row.
     tokens_per_sec = corpus.num_tokens / max(float(np.median(sweep_times)),
                                              1e-9)
     ref_sweep_sec = float(np.median(ref_times))
+
+    if args.checkpoint_path:
+        lda.save_checkpoint(args.checkpoint_path, arrays,
+                            next_seed=seed0 + n_sweeps)
 
     # --- invariants ---------------------------------------------------------
     from repro.data.sharding import counts_from_layout
@@ -148,6 +194,8 @@ def main() -> None:
         "doc_tile": layout.doc_tile,
         "r_mode": r_mode,
         "r_cap": r_cap,
+        "resumed_from": args.resume_from,
+        "next_seed": seed0 + n_sweeps,
         "ntd_row_bytes": layout.ntd_row_bytes,
         "ntd_slab_bytes": layout.ntd_slab_bytes,
         "ntd_whole_bytes": layout.ntd_whole_bytes,

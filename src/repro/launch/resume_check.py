@@ -1,0 +1,173 @@
+"""Bit-exact checkpoint/resume check for the Nomad LDA chain (run as a
+subprocess).
+
+Three subprocess phases tell the preemption story end to end::
+
+    --phase straight   run ``--sweeps`` uninterrupted, print chain digest
+    --phase train      run to ``--checkpoint-at``, write ``--ckpt``, then
+                       die (``--kill`` exits abruptly, mid-process, the
+                       way a preempted job does)
+    --phase resume     resume from ``--ckpt``, run to ``--sweeps``, print
+                       chain digest
+
+The driver (``tools/ci.sh --resume-smoke``) asserts the straight and
+train→kill→resume digests are identical: the chain is bit-for-bit
+independent of the interruption.  ``--phase matrix`` runs the whole
+comparison in-process across {dense, ragged} × {barrier, pipelined} ×
+{dense, sparse} r_mode combos — the acceptance matrix of ISSUE 7.
+
+Sets ``XLA_FLAGS`` *before* importing jax (the only supported way to
+fake a multi-device CPU platform) and prints a JSON report as the last
+stdout line, like the other ``launch/*_check`` harnesses.
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+
+def _parse(argv):
+    p = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    p.add_argument("--phase", default="matrix",
+                   choices=["straight", "train", "resume", "matrix"])
+    p.add_argument("--n-devices", type=int, default=4)
+    p.add_argument("--sync-mode", default="stoken")
+    p.add_argument("--inner-mode", default="scan")
+    p.add_argument("--n-blocks", type=int, default=0,
+                   help="0 → n_devices")
+    p.add_argument("--ring-mode", default="barrier")
+    p.add_argument("--layout", default="dense", choices=["dense", "ragged"])
+    p.add_argument("--doc-tile", type=int, default=0)
+    p.add_argument("--r-mode", default="dense", choices=["dense", "sparse"])
+    p.add_argument("--sweeps", type=int, default=6)
+    p.add_argument("--checkpoint-at", type=int, default=3)
+    p.add_argument("--ckpt", default="")
+    p.add_argument("--kill", action="store_true",
+                   help="train phase: die abruptly after the checkpoint "
+                        "write instead of exiting cleanly")
+    return p.parse_args(argv)
+
+
+def _build(args, *, layout_kind, ring_mode, r_mode, ckpt_every=None,
+           ckpt_path=None, resume_from=None):
+    import jax
+
+    from repro.core.nomad import NomadLDA
+    from repro.data import synthetic
+    from repro.data.sharding import build_layout
+
+    T = 8
+    corpus, _, _ = synthetic.make_corpus(
+        num_docs=80, vocab_size=128, num_topics=T, mean_doc_len=25.0, seed=3)
+    n_dev = args.n_devices
+    B = args.n_blocks or n_dev
+    mesh = jax.make_mesh((n_dev,), ("worker",))
+    doc_kw = {}
+    if args.doc_tile > 0:
+        doc_kw = dict(doc_tile=args.doc_tile)
+        if layout_kind == "dense":
+            doc_kw["doc_blk"] = 16
+    lay = build_layout(corpus, n_workers=n_dev, T=T, n_blocks=B,
+                       layout=layout_kind, **doc_kw)
+    r_cap = lay.r_cap if r_mode == "sparse" else 0
+    lda = NomadLDA(mesh=mesh, ring_axes=("worker",), layout=lay,
+                   alpha=50.0 / T, beta=0.01, sync_mode=args.sync_mode,
+                   inner_mode=args.inner_mode, ring_mode=ring_mode,
+                   doc_tile=args.doc_tile or None, r_mode=r_mode,
+                   r_cap=r_cap, checkpoint_every=ckpt_every,
+                   checkpoint_path=ckpt_path, resume_from=resume_from)
+    return lda
+
+
+def chain_digest(lda, arrays) -> str:
+    """sha256 over every chain-carrying field, in canonical order."""
+    import numpy as np
+    lay = lda.layout
+    h = hashlib.sha256()
+    h.update(np.ascontiguousarray(
+        lay.extract_canonical(np.asarray(arrays["z"]))).tobytes())
+    for part in lda.global_counts(arrays):
+        h.update(np.ascontiguousarray(part).tobytes())
+    if lda.r_mode == "sparse":
+        h.update(np.ascontiguousarray(np.asarray(
+            arrays["rb_topics"])).tobytes())
+        h.update(np.ascontiguousarray(np.asarray(
+            arrays["rb_counts"])).tobytes())
+    return h.hexdigest()
+
+
+def _run_matrix(args) -> dict:
+    import numpy as np
+
+    combos, exact = [], True
+    for layout_kind in ("dense", "ragged"):
+        for ring_mode in ("barrier", "pipelined"):
+            for r_mode in ("dense", "sparse"):
+                lda = _build(args, layout_kind=layout_kind,
+                             ring_mode=ring_mode, r_mode=r_mode)
+                arrays = lda.init_arrays(seed=0)
+                for s in range(args.sweeps):
+                    arrays = lda.sweep(arrays, seed=s)
+                ref = chain_digest(lda, arrays)
+
+                arrays2 = lda.init_arrays(seed=0)
+                for s in range(args.checkpoint_at):
+                    arrays2 = lda.sweep(arrays2, seed=s)
+                state, meta = lda.export_chain_state(
+                    arrays2, next_seed=args.checkpoint_at)
+                # round-trip through bytes, as a real resume would
+                state = {k: np.asarray(v).copy() for k, v in state.items()}
+                meta = json.loads(json.dumps(meta))
+                arrays3, start = lda.restore_chain_state(state, meta)
+                for s in range(start, args.sweeps):
+                    arrays3 = lda.sweep(arrays3, seed=s)
+                got = chain_digest(lda, arrays3)
+                ok = got == ref
+                exact &= ok
+                combos.append({"layout": layout_kind, "ring_mode": ring_mode,
+                               "r_mode": r_mode, "exact": ok})
+    return {"phase": "matrix", "combos": combos, "all_exact": exact}
+
+
+def main(argv=None) -> None:
+    args = _parse(sys.argv[1:] if argv is None else argv)
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={args.n_devices} "
+        + os.environ.get("XLA_FLAGS", ""))
+
+    if args.phase == "matrix":
+        print(json.dumps(_run_matrix(args)))
+        return
+
+    if args.phase in ("train", "resume") and not args.ckpt:
+        raise SystemExit("--ckpt is required for train/resume phases")
+
+    if args.phase == "straight":
+        lda = _build(args, layout_kind=args.layout, ring_mode=args.ring_mode,
+                     r_mode=args.r_mode)
+        arrays, done = lda.run(args.sweeps, init_seed=0)
+        print(json.dumps({"phase": "straight", "sweeps": done,
+                          "digest": chain_digest(lda, arrays)}))
+    elif args.phase == "train":
+        lda = _build(args, layout_kind=args.layout, ring_mode=args.ring_mode,
+                     r_mode=args.r_mode, ckpt_every=args.checkpoint_at,
+                     ckpt_path=args.ckpt)
+        lda.run(args.checkpoint_at, init_seed=0)
+        print(json.dumps({"phase": "train", "sweeps": args.checkpoint_at,
+                          "ckpt": args.ckpt}))
+        if args.kill:                      # preemption: no clean teardown
+            sys.stdout.flush()
+            os._exit(137)
+    else:                                  # resume
+        lda = _build(args, layout_kind=args.layout, ring_mode=args.ring_mode,
+                     r_mode=args.r_mode, resume_from=args.ckpt)
+        arrays, done = lda.run(args.sweeps)
+        print(json.dumps({"phase": "resume", "sweeps": done,
+                          "digest": chain_digest(lda, arrays)}))
+
+
+if __name__ == "__main__":
+    main()

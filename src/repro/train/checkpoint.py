@@ -1,16 +1,33 @@
 """Checkpointing: msgpack-free, numpy ``.npz`` of the flattened pytree.
 
-Path-keyed flat dict → npz; restore rebuilds with the same treedef.  Works
-for params, optimizer state, and LDA count tables alike.
+Two stores live here:
+
+* :func:`save` / :func:`restore` — path-keyed flat dict → npz; restore
+  rebuilds with the same treedef.  Works for params, optimizer state,
+  and LDA count tables alike (the original transformer-side store).
+
+* :func:`save_chain` / :func:`load_chain` — the format-versioned LDA
+  chain store (DESIGN.md §9).  A chain checkpoint is ``state`` (a flat
+  ``str → ndarray`` dict: z in canonical order, compact count tables,
+  r-bucket side tables, …) plus ``meta`` (a JSON-able dict carrying the
+  format version, the RNG counter for the next sweep, and every
+  chain-affecting knob so a mismatched resume fails loudly instead of
+  silently forking the chain).  Writes are atomic (tmp + ``os.replace``)
+  so a preemption mid-write never corrupts the previous checkpoint.
 """
 from __future__ import annotations
 
+import json
 import os
+import tempfile
 
 import jax
 import numpy as np
 
-__all__ = ["save", "restore"]
+__all__ = ["save", "restore", "save_chain", "load_chain",
+           "CHAIN_FORMAT_VERSION"]
+
+CHAIN_FORMAT_VERSION = 1
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:
@@ -43,3 +60,56 @@ def restore(path: str, like):
         out.append(arr.astype(leaf.dtype))
     return jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(like), out)
+
+
+# ---------------------------------------------------------------------------
+# Format-versioned LDA chain store (DESIGN.md §9).
+# ---------------------------------------------------------------------------
+_META_KEY = "__chain_meta__"
+
+
+def save_chain(path: str, state: dict[str, np.ndarray], meta: dict) -> None:
+    """Atomically write a chain checkpoint (``state`` arrays + ``meta``).
+
+    ``meta`` must be JSON-able; ``format_version`` is stamped here.  The
+    write goes to a temp file in the destination directory and is
+    ``os.replace``d into place, so readers only ever see a complete file.
+    """
+    if _META_KEY in state:
+        raise ValueError(f"state may not use the reserved key {_META_KEY!r}")
+    meta = dict(meta)
+    meta["format_version"] = CHAIN_FORMAT_VERSION
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    d = os.path.dirname(path) or "."
+    os.makedirs(d, exist_ok=True)
+    payload = {k: np.asarray(v) for k, v in state.items()}
+    payload[_META_KEY] = np.frombuffer(
+        json.dumps(meta, sort_keys=True).encode(), np.uint8)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".npz.tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **payload)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def load_chain(path: str) -> tuple[dict[str, np.ndarray], dict]:
+    """Read a chain checkpoint; raises on unknown format versions."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    with np.load(path) as data:
+        if _META_KEY not in data:
+            raise ValueError(
+                f"{path} is not a chain checkpoint (no {_META_KEY})")
+        meta = json.loads(bytes(data[_META_KEY].tobytes()).decode())
+        ver = meta.get("format_version")
+        if ver != CHAIN_FORMAT_VERSION:
+            raise ValueError(
+                f"chain checkpoint format v{ver} unsupported (this build "
+                f"reads v{CHAIN_FORMAT_VERSION})")
+        state = {k: data[k] for k in data.files if k != _META_KEY}
+    return state, meta

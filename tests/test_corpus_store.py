@@ -1,0 +1,311 @@
+"""Out-of-core corpus store, incremental layout update, and bit-exact
+chain checkpoint/resume (ISSUE 7, DESIGN.md §9).
+
+Store/update tests are pure-numpy; checkpoint round-trips run a real
+``NomadLDA`` on a degenerate W=1 ring in-process (per the dry-run
+isolation rule), and the full {dense, ragged} × {barrier, pipelined} ×
+r_mode kill-at-round-r resume matrix runs ``launch/resume_check.py`` in
+a subprocess with faked devices.
+"""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.nomad import NomadLDA
+from repro.data import synthetic
+from repro.data.corpus_store import (CorpusStore, build_layout_from_store,
+                                     carry_assignments, remap_canonical,
+                                     update_layout)
+from repro.data.sharding import build_layout, counts_from_layout
+from repro.train import checkpoint
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _corpus(num_docs=40, vocab=96, seed=0, mean_len=15.0):
+    corpus, _, _ = synthetic.make_corpus(
+        num_docs=num_docs, vocab_size=vocab, num_topics=8,
+        mean_doc_len=mean_len, seed=seed)
+    return corpus
+
+
+class TestCorpusStore:
+    def test_create_open_append(self, tmp_path):
+        p = str(tmp_path / "s")
+        store = CorpusStore.create(p, num_words=50)
+        assert store.num_docs == 0 and store.num_tokens == 0
+        store.append(np.array([0, 0, 1], np.int32),
+                     np.array([3, 4, 3], np.int32), num_docs=2)
+        store.append(np.array([2, 2], np.int32),
+                     np.array([10, 11], np.int32), num_docs=3)
+        again = CorpusStore.open(p)
+        assert again.num_docs == 3
+        assert again.num_tokens == 5
+        assert again.num_shards == 2
+        np.testing.assert_array_equal(again.doc_lengths(), [2, 1, 2])
+        c = again.to_corpus()
+        np.testing.assert_array_equal(c.doc_ids, [0, 0, 1, 2, 2])
+
+    def test_create_refuses_existing(self, tmp_path):
+        p = str(tmp_path / "s")
+        CorpusStore.create(p, num_words=10)
+        with pytest.raises(FileExistsError):
+            CorpusStore.create(p, num_words=10)
+
+    def test_append_validates(self, tmp_path):
+        store = CorpusStore.create(str(tmp_path / "s"), num_words=10)
+        with pytest.raises(ValueError, match="range"):
+            store.append(np.array([0], np.int32),
+                         np.array([99], np.int32), num_docs=1)
+        with pytest.raises(ValueError, match="1-D"):
+            store.append(np.zeros((2, 2), np.int32),
+                         np.zeros((2, 2), np.int32), num_docs=1)
+
+    def test_retire_updates_stats_and_stream(self, tmp_path):
+        corpus = _corpus(seed=4)
+        store = CorpusStore.from_corpus(corpus, str(tmp_path / "s"),
+                                        tokens_per_shard=64)
+        store.retire(np.array([1, 7], np.int32))
+        live = corpus.subset(~np.isin(np.arange(corpus.num_docs), [1, 7]))
+        back = store.to_corpus()
+        np.testing.assert_array_equal(back.doc_ids, live.doc_ids)
+        np.testing.assert_array_equal(back.word_ids, live.word_ids)
+        np.testing.assert_array_equal(store.doc_lengths(),
+                                      live.doc_lengths())
+        np.testing.assert_array_equal(store.word_freqs(),
+                                      live.word_freqs())
+        with pytest.raises(ValueError, match="retired"):
+            store.retire(np.array([1], np.int32))
+        with pytest.raises(ValueError, match="retired"):
+            store.append(np.array([1], np.int32), np.array([0], np.int32))
+
+    def test_chunked_build_matches_monolithic_after_retire(self, tmp_path):
+        corpus = _corpus(seed=2)
+        store = CorpusStore.from_corpus(corpus, str(tmp_path / "s"),
+                                        tokens_per_shard=100)
+        store.retire(np.array([0, 13], np.int32))
+        live = corpus.subset(~np.isin(np.arange(corpus.num_docs), [0, 13]))
+        mono = build_layout(live, n_workers=2, T=8, n_blocks=4, doc_tile=4)
+        chunk = build_layout_from_store(store, n_workers=2, T=8,
+                                        n_blocks=4, doc_tile=4)
+        np.testing.assert_array_equal(mono.tok_doc, chunk.tok_doc)
+        np.testing.assert_array_equal(mono.tok_gwrd, chunk.tok_gwrd)
+        np.testing.assert_array_equal(mono.canon_idx, chunk.canon_idx)
+
+
+class TestUpdateLayout:
+    def _setup(self, kind="dense", seed=3):
+        corpus = _corpus(num_docs=60, vocab=96, seed=seed, mean_len=20.0)
+        lay = build_layout(corpus, n_workers=4, T=8, n_blocks=8,
+                           layout=kind, doc_tile=4)
+        return corpus, lay
+
+    @pytest.mark.parametrize("kind", ["dense", "ragged"])
+    def test_survivors_keep_uid_and_order(self, kind):
+        corpus, lay = self._setup(kind)
+        rng = np.random.default_rng(5)
+        ad = np.repeat(np.arange(60, 64, dtype=np.int32), 15)
+        aw = rng.integers(0, 96, ad.size).astype(np.int32)
+        new_lay, o2n = update_layout(lay, add_doc_ids=ad, add_word_ids=aw,
+                                     retire=[2, 30], num_new_docs=4)
+        ow, ob, odl, _ = lay.token_coords()
+        oslot = lay.extract_canonical(lay.tok_slot)
+        ogd = lay.doc_of_worker[ow, odl]
+        surv = o2n >= 0
+        # dropped tokens are exactly the retired docs'
+        np.testing.assert_array_equal(surv, ~np.isin(ogd, [2, 30]))
+        tgt = o2n[surv]
+        assert np.unique(tgt).size == tgt.size
+        nw, nb, _, _ = new_lay.token_coords()
+        nslot = new_lay.extract_canonical(new_lay.tok_slot)
+        # every survivor keeps its (worker, block, slot) → same RNG uid,
+        # and the surviving canonical order is preserved verbatim
+        np.testing.assert_array_equal(ow[surv], nw[tgt])
+        np.testing.assert_array_equal(ob[surv], nb[tgt])
+        np.testing.assert_array_equal(oslot[surv], nslot[tgt])
+        assert (np.diff(tgt) > 0).all()
+        assert new_lay.L == lay.L
+        # uid uniqueness per worker
+        uid = nb.astype(np.int64) * new_lay.L + nslot.astype(np.int64)
+        keyed = nw.astype(np.int64) * (int(uid.max()) + 1) + uid
+        assert np.unique(keyed).size == keyed.size
+        # carried z: survivors keep topics, counts stay consistent
+        z_old = np.random.default_rng(0).integers(
+            0, 8, lay.canon_idx.shape[0]).astype(np.int32)
+        z_new = carry_assignments(z_old, o2n, new_lay, seed=1)
+        np.testing.assert_array_equal(z_old[surv], z_new[tgt])
+        n_td, n_wt, n_t = counts_from_layout(
+            new_lay, new_lay.place_canonical(z_new), 8)
+        assert int(n_t.sum()) == new_lay.canon_idx.shape[0]
+        assert int(n_td[[2, 30]].sum()) == 0
+
+    @pytest.mark.parametrize("kind", ["dense", "ragged"])
+    def test_overflowing_cell_routes_to_free_uid_region(self, kind):
+        corpus, lay = self._setup(kind)
+        B = lay.B
+        # flood one block's vocabulary with more tokens than the frozen
+        # stride L can hold in-cell: slots must land past B·L, not alias
+        words = lay.word_of_block[0]
+        words = words[words >= 0]
+        n = int(lay.L) + 8
+        ad = np.full(n, 60, np.int32)
+        aw = np.resize(words, n).astype(np.int32)
+        new_lay, o2n = update_layout(lay, add_doc_ids=ad, add_word_ids=aw,
+                                     num_new_docs=1)
+        nw, nb, _, _ = new_lay.token_coords()
+        nslot = new_lay.extract_canonical(new_lay.tok_slot).astype(np.int64)
+        uid = nb.astype(np.int64) * new_lay.L + nslot
+        keyed = nw.astype(np.int64) * (int(uid.max()) + 1) + uid
+        assert np.unique(keyed).size == keyed.size
+        over = uid[nslot >= lay.L]
+        assert over.size > 0 and int(over.min()) >= B * lay.L
+
+    def test_rejects_ungrouped_and_bad_ids(self):
+        corpus = _corpus()
+        flat = build_layout(corpus, n_workers=2, T=8)
+        with pytest.raises(ValueError, match="doc_tile"):
+            update_layout(flat, add_doc_ids=np.array([40], np.int32),
+                          add_word_ids=np.array([0], np.int32))
+        lay = build_layout(corpus, n_workers=2, T=8, doc_tile=4)
+        with pytest.raises(ValueError, match="fresh"):
+            update_layout(lay, add_doc_ids=np.array([0], np.int32),
+                          add_word_ids=np.array([0], np.int32))
+        with pytest.raises(ValueError, match="range"):
+            update_layout(lay, retire=[999])
+
+    def test_remap_canonical(self):
+        o2n = np.array([2, -1, 0, 1])
+        out = remap_canonical(np.array([10, 11, 12, 13]), o2n, 3, fill=-5)
+        np.testing.assert_array_equal(out, [12, 13, 10])
+
+
+def _w1_lda(tmp=None, r_mode="dense", **kw):
+    corpus = _corpus(num_docs=30, vocab=64, seed=1)
+    lay = build_layout(corpus, n_workers=1, T=8, n_blocks=2, doc_tile=4)
+    mesh = jax.make_mesh((1,), ("worker",))
+    r_cap = lay.r_cap if r_mode == "sparse" else 0
+    return NomadLDA(mesh=mesh, ring_axes=("worker",), layout=lay,
+                    alpha=0.5, beta=0.01, doc_tile=4, r_mode=r_mode,
+                    r_cap=r_cap, **kw)
+
+
+class TestChainCheckpoint:
+    @settings(max_examples=6, deadline=None)
+    @given(sweeps=st.integers(1, 4), r_mode=st.sampled_from(
+        ["dense", "sparse"]))
+    def test_save_restore_roundtrip_identity(self, sweeps, r_mode):
+        """save→restore is the identity on every chain field, including
+        the RNG counter, through an actual on-disk npz."""
+        lda = _w1_lda(r_mode=r_mode)
+        arrays = lda.init_arrays(seed=0)
+        for s in range(sweeps):
+            arrays = lda.sweep(arrays, seed=s)
+        with tempfile.TemporaryDirectory() as td:
+            path = td + "/chain.npz"
+            lda.save_checkpoint(path, arrays, next_seed=sweeps)
+            restored, next_seed = lda.load_checkpoint(path)
+        assert next_seed == sweeps
+        fields = ["z", "n_td", "n_wt", "n_t", "tok_doc", "tok_wrd",
+                  "tok_valid", "tok_bound"]
+        if r_mode == "sparse":
+            fields += ["rb_topics", "rb_counts"]
+        for f in fields:
+            a, b = np.asarray(arrays[f]), np.asarray(restored[f])
+            assert a.dtype == b.dtype, f
+            np.testing.assert_array_equal(a, b, err_msg=f)
+        # ...and the resumed chain continues bit-identically
+        cont = lda.sweep(restored, seed=next_seed)
+        ref = lda.sweep(arrays, seed=next_seed)
+        np.testing.assert_array_equal(np.asarray(cont["z"]),
+                                      np.asarray(ref["z"]))
+        np.testing.assert_array_equal(np.asarray(cont["n_t"]),
+                                      np.asarray(ref["n_t"]))
+
+    def test_run_checkpoints_and_resumes(self, tmp_path):
+        path = str(tmp_path / "c.npz")
+        lda = _w1_lda(checkpoint_every=2, checkpoint_path=path)
+        arrays, done = lda.run(4, init_seed=0)
+        assert done == 4 and os.path.exists(path)
+        straight, _ = _w1_lda().run(6, init_seed=0)
+        resumed, done = _w1_lda(resume_from=path).run(6)
+        assert done == 6
+        np.testing.assert_array_equal(np.asarray(straight["z"]),
+                                      np.asarray(resumed["z"]))
+        np.testing.assert_array_equal(np.asarray(straight["n_td"]),
+                                      np.asarray(resumed["n_td"]))
+
+    def test_mismatched_chain_refused(self, tmp_path):
+        path = str(tmp_path / "c.npz")
+        lda = _w1_lda()
+        arrays = lda.init_arrays(seed=0)
+        lda.save_checkpoint(path, arrays, next_seed=0)
+        other = _w1_lda(r_mode="sparse")
+        with pytest.raises(ValueError, match="fork"):
+            other.load_checkpoint(path)
+
+    def test_format_version_gate(self, tmp_path):
+        path = str(tmp_path / "c.npz")
+        checkpoint.save_chain(path, {"x": np.zeros(3)}, {"next_seed": 0})
+        state, meta = checkpoint.load_chain(path)
+        np.testing.assert_array_equal(state["x"], np.zeros(3))
+        assert meta["format_version"] == checkpoint.CHAIN_FORMAT_VERSION
+        # corrupt the version and the loader must refuse
+        data = dict(np.load(path))
+        m = json.loads(bytes(data["__chain_meta__"].tobytes()).decode())
+        m["format_version"] = 999
+        data["__chain_meta__"] = np.frombuffer(
+            json.dumps(m).encode(), np.uint8)
+        np.savez(path, **data)
+        with pytest.raises(ValueError, match="format"):
+            checkpoint.load_chain(path)
+
+    def test_serial_cgs_state_roundtrip(self, tmp_path):
+        import jax.numpy as jnp
+
+        from repro.core import cgs
+        corpus = _corpus(num_docs=12, vocab=32, seed=0)
+        state = cgs.init_state(corpus, T=4, key=jax.random.key(0))
+        state = cgs.sweep_reference(
+            state, jnp.asarray(corpus.doc_ids), jnp.asarray(corpus.word_ids),
+            jnp.asarray(corpus.doc_order()), 0.5, 0.01)
+        path = str(tmp_path / "serial.npz")
+        checkpoint.save_chain(path, cgs.state_to_checkpoint(state),
+                              {"T": 4})
+        got, _ = checkpoint.load_chain(path)
+        back = cgs.state_from_checkpoint(got)
+        iskey = lambda x: jax.dtypes.issubdtype(x.dtype, jax.dtypes.prng_key)
+        for a, b in zip(state, back):
+            np.testing.assert_array_equal(
+                np.asarray(jax.random.key_data(a)) if iskey(a)
+                else np.asarray(a),
+                np.asarray(jax.random.key_data(b)) if iskey(b)
+                else np.asarray(b))
+
+
+@pytest.mark.slow
+class TestResumeMatrix:
+    """Kill-at-round-r bit-equality across {dense, ragged} × {barrier,
+    pipelined} × r_mode — the acceptance matrix, via the same harness
+    ``tools/ci.sh --resume-smoke`` gates on."""
+
+    def test_matrix_all_exact(self):
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(REPO, "src")
+        env.pop("XLA_FLAGS", None)
+        out = subprocess.run(
+            [sys.executable, "-m", "repro.launch.resume_check",
+             "--phase", "matrix", "--sweeps", "4", "--checkpoint-at", "2",
+             "--doc-tile", "4"],
+            capture_output=True, text=True, env=env, timeout=900)
+        assert out.returncode == 0, out.stderr[-3000:]
+        rep = json.loads(out.stdout.strip().splitlines()[-1])
+        assert rep["all_exact"], rep
+        assert len(rep["combos"]) == 8

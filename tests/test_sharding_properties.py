@@ -203,3 +203,73 @@ class TestRaggedLayout:
             build_layout(corpus, n_workers=2, T=8, layout="csr")
         with pytest.raises(ValueError, match="tile"):
             build_layout(corpus, n_workers=2, T=8, layout="ragged", tile=0)
+
+
+class TestChunkedBuild:
+    """The out-of-core chunked build (``build_layout_from_store``) must be
+    *byte-identical* to the monolithic ``build_layout`` on the same corpus
+    — this is what lets the whole distributed exactness matrix transfer to
+    store-fed layouts for free (ISSUE 7 / DESIGN.md §9)."""
+
+    @settings(max_examples=20, deadline=None)
+    @given(W=st.integers(1, 4), mult=st.integers(1, 3),
+           num_docs=st.integers(12, 60), vocab=st.integers(32, 128),
+           seed=st.integers(0, 10),
+           kind=st.sampled_from(["dense", "ragged"]),
+           doc_tile=st.sampled_from([None, 4]),
+           tokens_per_shard=st.sampled_from([64, 257, 1 << 20]))
+    def test_chunked_build_byte_identical(self, W, mult, num_docs, vocab,
+                                          seed, kind, doc_tile,
+                                          tokens_per_shard):
+        # tempfile, not the tmp_path fixture: function-scoped fixtures
+        # don't mix with @given under real hypothesis
+        import tempfile
+
+        from repro.data.corpus_store import (CorpusStore,
+                                             build_layout_from_store)
+        corpus = _corpus(num_docs, vocab, seed)
+        with tempfile.TemporaryDirectory() as td:
+            store = CorpusStore.from_corpus(
+                corpus, td + "/store", tokens_per_shard=tokens_per_shard)
+            kw = dict(n_workers=W, T=8, n_blocks=mult * W, layout=kind,
+                      doc_tile=doc_tile)
+            self._compare(corpus, store, kw)
+
+    @staticmethod
+    def _compare(corpus, store, kw):
+        from repro.data.corpus_store import build_layout_from_store
+        mono = build_layout(corpus, **kw)
+        chunk = build_layout_from_store(store, **kw)
+        for f in ("tok_doc", "tok_wrd", "tok_valid", "tok_bound",
+                  "tok_gwrd", "tok_slot", "canon_idx", "cell_sizes",
+                  "doc_of_worker", "word_of_block", "doc_assign",
+                  "word_assign", "cell_of_tile", "doc_tile_of"):
+            a, b = getattr(mono, f), getattr(chunk, f)
+            if a is None:
+                assert b is None, f
+                continue
+            assert a.dtype == b.dtype, f
+            np.testing.assert_array_equal(a, b, err_msg=f)
+        for f in ("L", "I_max", "J_max", "tile", "n_tiles", "tile_split",
+                  "stream_len", "doc_tile", "doc_blk", "r_cap", "kind"):
+            assert getattr(mono, f) == getattr(chunk, f), f
+
+    @settings(max_examples=10, deadline=None)
+    @given(num_docs=st.integers(12, 40), vocab=st.integers(32, 96),
+           seed=st.integers(0, 5))
+    def test_store_roundtrip_and_stats(self, num_docs, vocab, seed):
+        import tempfile
+
+        from repro.data.corpus_store import CorpusStore
+        corpus = _corpus(num_docs, vocab, seed)
+        with tempfile.TemporaryDirectory() as td:
+            store = CorpusStore.from_corpus(corpus, td + "/s",
+                                            tokens_per_shard=100)
+            back = store.to_corpus()
+            np.testing.assert_array_equal(back.doc_ids, corpus.doc_ids)
+            np.testing.assert_array_equal(back.word_ids, corpus.word_ids)
+            # stats come from the per-shard side tables, not a token scan
+            np.testing.assert_array_equal(store.doc_lengths(),
+                                          corpus.doc_lengths())
+            np.testing.assert_array_equal(store.word_freqs(),
+                                          corpus.word_freqs())

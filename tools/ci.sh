@@ -13,6 +13,11 @@
 #                             # vs the previous same-methodology snapshot +
 #                             # the interleaved B=4W ragged padding-blowup
 #                             # canary)
+#   tools/ci.sh --resume-smoke # checkpoint/resume smoke only: train k
+#                             # rounds -> checkpoint -> kill -> resume,
+#                             # assert the chain digest is bit-equal to
+#                             # the uninterrupted run (also part of the
+#                             # default and --fast stage lists)
 #
 # Property tests (tests/test_sharding_properties.py, ...) use `hypothesis`.
 # CI servers should run with REPRO_CI_INSTALL_HYPOTHESIS=1 so the real
@@ -58,9 +63,49 @@ bench_smoke() {
     python -m benchmarks.sweep_bench --check-regression
 }
 
+resume_smoke() {
+    # Preemption story end to end (DESIGN.md §9): train k rounds, write a
+    # chain checkpoint, die abruptly (--kill: os._exit, no teardown),
+    # resume from the checkpoint, and require the resumed chain's digest
+    # to be bit-equal to an uninterrupted run of the same length.
+    echo "== resume smoke: train -> checkpoint -> kill -> resume =="
+    local tmpd straight resume
+    tmpd=$(mktemp -d)
+    trap 'rm -rf "$tmpd"' RETURN
+    local common=(--n-devices 4 --n-blocks 8 --doc-tile 4 \
+                  --layout ragged --r-mode sparse --sweeps 4)
+    straight=$(python -m repro.launch.resume_check --phase straight \
+        "${common[@]}" | tail -n 1) || {
+        echo "resume smoke: straight phase failed"; return 1; }
+    # the train phase self-kills after the checkpoint write (exit 137)
+    python -m repro.launch.resume_check --phase train "${common[@]}" \
+        --checkpoint-at 2 --ckpt "$tmpd/chain.npz" --kill || true
+    [[ -f "$tmpd/chain.npz" ]] || {
+        echo "resume smoke: no checkpoint written"; return 1; }
+    resume=$(python -m repro.launch.resume_check --phase resume \
+        "${common[@]}" --ckpt "$tmpd/chain.npz" | tail -n 1) || {
+        echo "resume smoke: resume phase failed"; return 1; }
+    python - "$straight" "$resume" <<'PY'
+import json, sys
+s, r = (json.loads(a) for a in sys.argv[1:3])
+if s["digest"] != r["digest"]:
+    print(f"resume smoke: chain forked across the kill\n"
+          f"  straight {s['digest']}\n  resumed  {r['digest']}")
+    sys.exit(1)
+print(f"resume smoke: straight == kill+resume ({s['sweeps']} sweeps, "
+      f"digest {s['digest'][:16]}...)")
+PY
+}
+
 if [[ "${1:-}" == "--bench-smoke" ]]; then
     bench_smoke
     echo "CI OK (bench smoke)"
+    exit 0
+fi
+
+if [[ "${1:-}" == "--resume-smoke" ]]; then
+    resume_smoke
+    echo "CI OK (resume smoke)"
     exit 0
 fi
 
@@ -105,6 +150,8 @@ echo "== collection (all test modules must import cleanly) =="
 python -m pytest -q --collect-only >/dev/null
 
 doc_tile_smoke
+
+resume_smoke
 
 echo "== fast signal: kernels + samplers (-m 'not slow') =="
 python -m pytest -q -m "not slow"
