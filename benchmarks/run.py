@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV.  Sections:
     fig5/…     multicore nomad scaling (paper Fig 5)
     kernels/…  Pallas kernel oracle checks
     sweep/…    scan vs fused vs nomad tokens/sec (writes BENCH_sweep.json)
+    serve/…    fold-in θ-query latency/throughput (writes BENCH_serve.json)
     roofline/… (arch × shape × mesh) roofline terms from the dry-run
 
 Besides the CSV, the sweep section records its numbers in
@@ -27,7 +28,7 @@ def main() -> None:
     sections = []
     from benchmarks import (bucket_bench, convergence_bench, kernel_bench,
                             lda_sampler_bench, roofline_bench,
-                            sampler_bench, sweep_bench)
+                            sampler_bench, serve_bench, sweep_bench)
     sections = [
         ("table1", sampler_bench.run),
         ("table2", lda_sampler_bench.run),
@@ -35,6 +36,7 @@ def main() -> None:
         ("sec3.3", bucket_bench.run),
         ("kernels", kernel_bench.run),
         ("sweep", sweep_bench.run),
+        ("serve", serve_bench.run),
         ("roofline", roofline_bench.run),
     ]
     if not os.environ.get("REPRO_BENCH_FAST"):

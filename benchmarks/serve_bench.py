@@ -1,0 +1,274 @@
+"""Serving latency/throughput benchmark + ``BENCH_serve.json`` record.
+
+Measures the :class:`repro.serve.lda_engine.LdaEngine` θ-query path —
+the millions-of-users workload (DESIGN.md §10) — end to end, per query:
+pack → device transfer → jitted multi-sweep fold-in → θ → host.  For
+each batch size ∈ {1, 8, 64} it reports **p50/p99 latency** (ms) and
+**docs/sec** over a fixed pool of variable-length documents, plus a
+``publish`` row (snapshot build + atomic install) and an in-process
+``refclock`` row (a fixed jitted matmul) that prices the host/XLA speed
+at snapshot time.
+
+Like ``BENCH_sweep.json``, full-size runs maintain a **history** of
+per-PR snapshots at the repo root (``{"history": [{"rev", "timing",
+"entries"}]}``); a re-run at the same rev replaces its own snapshot.
+``--check-regression`` (wired into ``tools/ci.sh --bench-smoke``) gates:
+
+* per-batch docs/sec against the previous same-epoch snapshot — a row
+  fails only if it regresses under both the raw ratio and the
+  refclock-normalized ratio (default 40%, REPRO_SERVE_REGRESSION_PCT);
+* the **batching canary**: docs/sec at batch=64 over batch=1 from the
+  same snapshot — same process, so host noise cancels — must stay above
+  the threshold ratio (default 1.3, REPRO_SERVE_CANARY_RATIO).  Batched
+  serving that stops paying for itself is the structural failure this
+  file exists to catch (e.g. an accidental per-doc recompile or a
+  pack that stops bucketing shapes).
+
+Env: REPRO_BENCH_FAST=1 shrinks sizes/query counts and never touches
+the committed history.  Interpret-free pure-JAX CPU numbers: structure,
+not silicon.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.util import row
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(REPO, "BENCH_serve.json")
+
+BATCHES = (1, 8, 64)
+
+# Timing-methodology epoch (see sweep_bench.TIMING_EPOCH): rows are only
+# gated against a previous snapshot from the same epoch.
+TIMING_EPOCH = "perquery-p50p99"
+
+
+def _mk_engine(fast: bool):
+    import jax
+
+    from repro.serve.lda_engine import LdaEngine, snapshot_from_counts
+
+    J, T = (256, 16) if fast else (2048, 64)
+    rng = np.random.default_rng(11)
+    n_wt = rng.integers(0, 200, (J, T))
+    snap = snapshot_from_counts(n_wt, n_wt.sum(0), alpha=50.0 / T,
+                                beta=0.01)
+    t0 = time.perf_counter()
+    eng = LdaEngine(snap, sweeps=3 if fast else 5, tile=8, max_batch=64)
+    publish_s = time.perf_counter() - t0
+    pool = [rng.integers(0, J, int(n)).astype(np.int32)
+            for n in rng.geometric(1 / 20.0, size=64).clip(1, 64)]
+    return eng, snap, pool, publish_s, (J, T), jax
+
+
+def _refclock(jax_mod, phi) -> float:
+    """Fixed jitted matmul, median-of-5: the host/XLA speed proxy rows
+    are normalized by across snapshots (same role as sweep_bench's
+    serial-scan baseline)."""
+    import jax.numpy as jnp
+    x = jnp.asarray(phi[:256, :16])
+    f = jax_mod.jit(lambda a: (a @ a.T).sum())
+    jax_mod.block_until_ready(f(x))
+    ts = []
+    for _ in range(5):
+        t0 = time.perf_counter()
+        jax_mod.block_until_ready(f(x))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[2]
+
+
+def _measure(fast: bool) -> list[dict]:
+    from repro.serve.lda_engine import TopicQuery
+    import jax
+
+    eng, snap, pool, publish_s, (J, T), jax_mod = _mk_engine(fast)
+    n_queries = 8 if fast else 40
+    entries = [{"path": "publish", "J": J, "T": T,
+                "publish_ms": publish_s * 1e3},
+               {"path": "refclock", "ref_sec": _refclock(jax_mod, snap.phi)}]
+    for b in BATCHES:
+        def q(i):
+            docs = tuple(pool[(i * b + j) % len(pool)] for j in range(b))
+            return eng.query(TopicQuery(docs=docs,
+                                        key=jax.random.key(i % 4)))
+        for i in range(n_queries):              # warm every length bucket
+            q(i)                                # the rotation will hit
+        lats, docs_done = [], 0
+        t0 = time.perf_counter()
+        for i in range(n_queries):
+            res = q(i)
+            lats.append(res.latency_s)
+            docs_done += b
+        wall = time.perf_counter() - t0
+        lats = np.sort(np.asarray(lats))
+        entries.append({
+            "path": "serve", "batch": b, "J": J, "T": T,
+            "sweeps": eng.sweeps, "queries": n_queries,
+            "p50_ms": float(np.percentile(lats, 50) * 1e3),
+            "p99_ms": float(np.percentile(lats, 99) * 1e3),
+            "docs_per_sec": docs_done / wall,
+        })
+    return entries
+
+
+# ---------------------------------------------------------------------------
+# History bookkeeping + regression gate (the BENCH_sweep.json pattern).
+# ---------------------------------------------------------------------------
+def _load_history() -> dict:
+    if not os.path.exists(BENCH_JSON):
+        return {"history": []}
+    with open(BENCH_JSON) as f:
+        return json.load(f)
+
+
+def _git_rev() -> str:
+    if os.environ.get("REPRO_BENCH_LABEL"):
+        return os.environ["REPRO_BENCH_LABEL"]
+    try:
+        out = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             capture_output=True, text=True, cwd=REPO,
+                             timeout=30)
+        if out.returncode == 0:
+            return out.stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        pass
+    return "unknown"
+
+
+def _ref_sec(entries: list[dict]) -> float:
+    for e in entries:
+        if e.get("path") == "refclock":
+            return float(e.get("ref_sec", 0.0))
+    return 0.0
+
+
+def _check_canary(hist: list[dict]) -> list[str]:
+    """Batching canary on the latest snapshot: docs/sec at batch=64 must
+    exceed batch=1 by REPRO_SERVE_CANARY_RATIO (default 1.3).  Both rows
+    come from the same process seconds apart, so the ratio is immune to
+    host-speed drift between snapshots."""
+    ratio_min = float(os.environ.get("REPRO_SERVE_CANARY_RATIO", "1.3"))
+    if not hist:
+        return []
+    rows = {e.get("batch"): e for e in hist[-1]["entries"]
+            if e.get("path") == "serve"}
+    b1, b64 = rows.get(1), rows.get(max(BATCHES))
+    if not b1 or not b64 or b1["docs_per_sec"] <= 0:
+        return []
+    ratio = b64["docs_per_sec"] / b1["docs_per_sec"]
+    if ratio < ratio_min:
+        return [
+            f"serve canary: batch={max(BATCHES)} "
+            f"({b64['docs_per_sec']:.0f} docs/s) is only {ratio:.2f}x "
+            f"batch=1 ({b1['docs_per_sec']:.0f} docs/s, same process), "
+            f"floor {ratio_min:.2f}x — batching stopped paying "
+            f"({hist[-1]['rev']})"]
+    return []
+
+
+def check_regression(threshold: float | None = None) -> list[str]:
+    """Compare the last two same-epoch snapshots' serve rows on docs/sec;
+    a row fails only when it regresses past the threshold under every
+    normalization (raw, and refclock-normalized — snapshots come from
+    whatever machine produced them)."""
+    if threshold is None:
+        threshold = float(os.environ.get(
+            "REPRO_SERVE_REGRESSION_PCT", "40")) / 100.0
+    hist = _load_history()["history"]
+    regressions = _check_canary(hist)
+    if len(hist) < 2:
+        return regressions
+    if hist[-2].get("timing") != hist[-1].get("timing"):
+        print(f"serve gate: timing epoch changed "
+              f"({hist[-2].get('timing')} -> {hist[-1].get('timing')}); "
+              f"pairwise row gate skipped, canary still active")
+        return regressions
+    ref_old, ref_new = _ref_sec(hist[-2]["entries"]), \
+        _ref_sec(hist[-1]["entries"])
+    prev = {e.get("batch"): e for e in hist[-2]["entries"]
+            if e.get("path") == "serve"}
+    for e in hist[-1]["entries"]:
+        if e.get("path") != "serve":
+            continue
+        old = prev.get(e.get("batch"))
+        if old is None or old["docs_per_sec"] <= 0:
+            continue
+        ratio = e["docs_per_sec"] / old["docs_per_sec"]
+        if ref_old > 0 and ref_new > 0:
+            # docs/sec · ref_sec cancels host speed at snapshot time
+            ratio = max(ratio, (e["docs_per_sec"] * ref_new)
+                        / (old["docs_per_sec"] * ref_old))
+        if ratio < 1.0 - threshold:
+            regressions.append(
+                f"serve/batch{e['batch']}: {old['docs_per_sec']:.0f} -> "
+                f"{e['docs_per_sec']:.0f} docs/s "
+                f"({(1 - ratio) * 100:.0f}% drop under every "
+                f"normalization, limit {threshold * 100:.0f}%; "
+                f"{hist[-2]['rev']} -> {hist[-1]['rev']})")
+    return regressions
+
+
+def run() -> list[str]:
+    fast = bool(os.environ.get("REPRO_BENCH_FAST"))
+    entries = _measure(fast)
+    if not fast:
+        # only full-size runs touch the committed trajectory; a re-run at
+        # the same rev replaces its own snapshot
+        data = _load_history()
+        rev = _git_rev()
+        snap = {"rev": rev, "timing": TIMING_EPOCH, "entries": entries}
+        if data["history"] and data["history"][-1]["rev"] == rev:
+            data["history"][-1] = snap
+        else:
+            data["history"].append(snap)
+        with open(BENCH_JSON, "w") as f:
+            json.dump(data, f, indent=1)
+
+    out = []
+    for e in entries:
+        if e["path"] == "publish":
+            out.append(row(f"serve/publish/J{e['J']}T{e['T']}",
+                           e["publish_ms"] * 1e3,
+                           f"publish_ms={e['publish_ms']:.2f}"))
+        elif e["path"] == "refclock":
+            out.append(row("serve/refclock", e["ref_sec"] * 1e6,
+                           f"ref_sec={e['ref_sec']:.6f}"))
+        else:
+            out.append(row(
+                f"serve/query/batch{e['batch']}/J{e['J']}T{e['T']}"
+                f"/s{e['sweeps']}",
+                e["p50_ms"] * 1e3,
+                f"p50_ms={e['p50_ms']:.2f};p99_ms={e['p99_ms']:.2f};"
+                f"docs_per_sec={e['docs_per_sec']:.1f}"))
+    out.append(row("serve/json", 0.0,
+                   ("skipped=fast_mode" if fast else
+                    f"wrote={os.path.basename(BENCH_JSON)}")
+                   + f";entries={len(entries)}"))
+    return out
+
+
+def main() -> None:
+    if "--check-regression" in sys.argv:
+        regs = check_regression()
+        for r in regs:
+            print(f"REGRESSION: {r}")
+        if regs:
+            sys.exit(1)
+        hist = _load_history()["history"]
+        print(f"serve regression gate OK ({len(hist)} snapshot(s) in "
+              f"{os.path.basename(BENCH_JSON)})")
+        return
+    for line in run():
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

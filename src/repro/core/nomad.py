@@ -950,6 +950,22 @@ class NomadLDA:
             n_wt[ids[m]] = n_wt_p[b, m]
         return n_td, n_wt, np.asarray(arrays["n_t"], np.int64)
 
+    # -- φ snapshot export (DESIGN.md §10) ------------------------------------
+    def export_phi_snapshot(self, arrays: dict, *, sweep: int | None = None):
+        """Freeze the current word-topic counts into a serving snapshot
+        (``repro.serve.lda_engine.PhiSnapshot``): the posterior-mean φ̂
+        plus α/β and provenance meta.  Derived state only — publishing
+        never perturbs the chain, so a background ring can call this
+        every ``publish_every`` sweeps while readers keep serving."""
+        from repro.serve.lda_engine import snapshot_from_counts
+        _, n_wt, n_t = self.global_counts(arrays)
+        extra = {"source": "nomad", "T": self.layout.T,
+                 "num_words": self.layout.num_words}
+        if sweep is not None:
+            extra["sweep"] = int(sweep)
+        return snapshot_from_counts(n_wt, n_t, alpha=self.alpha,
+                                    beta=self.beta, extra_meta=extra)
+
     # -- chain checkpoint/resume (DESIGN.md §9) -------------------------------
     def _chain_meta(self, *, next_seed: int) -> dict:
         """Every chain-affecting knob; a resume with any of these different
@@ -1084,13 +1100,29 @@ class NomadLDA:
         state, meta = checkpoint.load_chain(path)
         return self.restore_chain_state(state, meta)
 
-    def run(self, n_sweeps: int, *, init_seed: int = 0,
-            on_sweep=None) -> tuple[dict, int]:
+    def run(self, n_sweeps: int, *, init_seed: int = 0, on_sweep=None,
+            publish_every: int | None = None,
+            on_publish=None) -> tuple[dict, int]:
         """Drive the chain to ``n_sweeps`` total sweeps, checkpointing
         every ``checkpoint_every`` sweeps (resuming from ``resume_from``
         if set) → ``(arrays, sweeps_done)``.  Sweep ``s`` always runs with
         ``seed=s`` whether reached directly or across a resume, so an
-        interrupted run is bit-identical to a straight-through one."""
+        interrupted run is bit-identical to a straight-through one.
+
+        ``publish_every``/``on_publish`` is the serving hook (DESIGN.md
+        §10): every ``publish_every`` sweeps the counts are frozen into a
+        φ snapshot (:meth:`export_phi_snapshot`) and handed to
+        ``on_publish`` — typically ``LdaEngine.publish`` — so readers get
+        fresh topics while the ring keeps training.  Publishing reads the
+        chain but never writes it: a run with and without the hook is
+        bit-identical."""
+        if publish_every is not None:
+            if publish_every < 1:
+                raise ValueError(
+                    f"publish_every must be >= 1, got {publish_every}")
+            if on_publish is None:
+                raise ValueError("publish_every needs an on_publish "
+                                 "callback to hand snapshots to")
         if self.resume_from:
             arrays, start = self.load_checkpoint(self.resume_from)
         else:
@@ -1100,6 +1132,9 @@ class NomadLDA:
             arrays = self.sweep(arrays, seed=s)
             if on_sweep is not None:
                 on_sweep(s, arrays)
+            if publish_every and (s + 1) % publish_every == 0:
+                jax.block_until_ready(arrays["n_t"])
+                on_publish(self.export_phi_snapshot(arrays, sweep=s + 1))
             if (self.checkpoint_every
                     and (s + 1) % self.checkpoint_every == 0):
                 jax.block_until_ready(arrays["n_t"])

@@ -1,0 +1,200 @@
+"""Publish-while-serving torn-read + parity check (run as a subprocess).
+
+The end-to-end serving story on fake CPU devices (DESIGN.md §10): a
+background :class:`NomadLDA` ring trains and publishes a φ snapshot every
+``--publish-every`` sweeps into a live :class:`LdaEngine` while the main
+thread fires ≥``--queries`` batched θ queries at it.  After the ring
+joins, every answer is audited:
+
+* **torn reads** — each answer's ``(generation, digest)`` must match
+  exactly one published snapshot.  Because a reader pins the buffer with
+  a single reference read, this count must be zero no matter how the
+  publishes interleave.
+* **fold-in parity** — each answer's per-document counts are recomputed
+  with the *serial* ``core/heldout.py:fold_in`` against the φ of the
+  generation the answer claims, under the same base key.  Batched padded
+  serving must be bit-exact, across every generation, for the whole run.
+
+Queries rotate through a fixed document pool (including an empty and a
+single-token document) and a small key cycle, so serial references are
+cached by ``(composition, key, generation)`` and the audit stays cheap.
+
+Sets ``XLA_FLAGS`` *before* importing jax and prints a JSON report as
+the last stdout line, like the other ``launch/*_check`` harnesses; exits
+nonzero unless every check passes.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import threading
+
+
+def _parse(argv):
+    p = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    p.add_argument("--n-devices", type=int, default=4)
+    p.add_argument("--sweeps", type=int, default=9,
+                   help="total trainer sweeps")
+    p.add_argument("--publish-every", type=int, default=3)
+    p.add_argument("--queries", type=int, default=100,
+                   help="minimum reader queries (keeps going while the "
+                        "trainer is still publishing)")
+    p.add_argument("--batch", type=int, default=8,
+                   help="documents per query")
+    p.add_argument("--fold-sweeps", type=int, default=3)
+    p.add_argument("--key-cycle", type=int, default=5)
+    p.add_argument("--pool", type=int, default=12,
+                   help="fixed document-pool size")
+    return p.parse_args(argv)
+
+
+def _build_trainer(args):
+    import jax
+
+    from repro.core.nomad import NomadLDA
+    from repro.data import synthetic
+    from repro.data.sharding import build_layout
+
+    T = 8
+    corpus, _, _ = synthetic.make_corpus(
+        num_docs=80, vocab_size=128, num_topics=T, mean_doc_len=25.0,
+        seed=3)
+    n_dev = args.n_devices
+    mesh = jax.make_mesh((n_dev,), ("worker",))
+    lay = build_layout(corpus, n_workers=n_dev, T=T, n_blocks=n_dev)
+    lda = NomadLDA(mesh=mesh, ring_axes=("worker",), layout=lay,
+                   alpha=50.0 / T, beta=0.01, sync_mode="stoken",
+                   inner_mode="scan")
+    return lda, corpus
+
+
+def _doc_pool(corpus, n_pool: int):
+    """Fixed query documents over the trained vocabulary; slots 0 and 1
+    are the degenerate cases (empty, single-token)."""
+    import numpy as np
+    rng = np.random.default_rng(7)
+    words = np.unique(np.asarray(corpus.word_ids))
+    lens = [0, 1] + [int(rng.integers(2, 24)) for _ in range(n_pool - 2)]
+    return [rng.choice(words, size=n, replace=True).astype(np.int32)
+            for n in lens]
+
+
+def run_check(args) -> dict:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.heldout import (_fold_in_core, _positions_in_doc)
+    from repro.serve.lda_engine import LdaEngine, TopicQuery
+
+    lda, corpus = _build_trainer(args)
+    engine = LdaEngine(sweeps=args.fold_sweeps, tile=4,
+                       max_batch=max(args.batch, 8))
+
+    published = {}            # generation -> {"digest", "phi", "alpha"}
+    pub_lock = threading.Lock()
+
+    def record_publish(snap):
+        gen = engine.publish(snap)
+        with pub_lock:
+            published[gen] = {"digest": snap.digest,
+                              "phi": np.asarray(snap.phi),
+                              "alpha": snap.alpha,
+                              "sweep": snap.meta.get("sweep")}
+        return gen
+
+    # generation 1: the init-state counts, published before serving opens
+    record_publish(lda.export_phi_snapshot(lda.init_arrays(seed=0),
+                                           sweep=0))
+
+    trainer_exc = []
+
+    def trainer():
+        try:
+            lda.run(args.sweeps, init_seed=0,
+                    publish_every=args.publish_every,
+                    on_publish=record_publish)
+        except BaseException as e:           # surfaced in the report
+            trainer_exc.append(repr(e))
+
+    pool = _doc_pool(corpus, args.pool)
+    P, b = len(pool), args.batch
+    answers = []
+    th = threading.Thread(target=trainer, daemon=True)
+    th.start()
+    i = 0
+    while i < args.queries or th.is_alive():
+        comp, kidx = i % P, i % args.key_cycle
+        docs = tuple(pool[(comp + j) % P] for j in range(b))
+        res = engine.query(TopicQuery(
+            docs=docs, key=jax.random.key(1000 + kidx)))
+        answers.append({"comp": comp, "kidx": kidx,
+                        "generation": res.generation, "digest": res.digest,
+                        "n_td": res.n_td, "theta": res.theta})
+        i += 1
+    th.join()
+
+    # ---- audit ----------------------------------------------------------
+    gens_seen = sorted({a["generation"] for a in answers})
+    torn = sum(1 for a in answers
+               if published.get(a["generation"], {}).get("digest")
+               != a["digest"])
+
+    ref_fn = jax.jit(_fold_in_core, static_argnames=("num_docs", "sweeps"))
+    ref_cache = {}
+
+    def serial_ref(comp, kidx, gen):
+        ck = (comp, kidx, gen)
+        if ck not in ref_cache:
+            docs = [pool[(comp + j) % P] for j in range(b)]
+            w = np.concatenate(docs).astype(np.int32)
+            d = np.concatenate([np.full(x.size, j, np.int32)
+                                for j, x in enumerate(docs)])
+            pub = published[gen]
+            n_td = ref_fn(jnp.asarray(w), jnp.asarray(d),
+                          jnp.asarray(_positions_in_doc(d)),
+                          jnp.asarray(pub["phi"]), pub["alpha"],
+                          jax.random.key(1000 + kidx),
+                          num_docs=b, sweeps=args.fold_sweeps)
+            ref_cache[ck] = np.asarray(n_td)
+        return ref_cache[ck]
+
+    mismatch = 0
+    theta_bad = 0
+    for a in answers:
+        if a["generation"] not in published:
+            mismatch += 1
+            continue
+        ref = serial_ref(a["comp"], a["kidx"], a["generation"])
+        if not np.array_equal(ref, a["n_td"]):
+            mismatch += 1
+        if not np.allclose(a["theta"].sum(1), 1.0, atol=1e-5):
+            theta_bad += 1
+
+    ok = (torn == 0 and mismatch == 0 and theta_bad == 0
+          and not trainer_exc and len(published) >= 3
+          and len(answers) >= args.queries
+          and len(gens_seen) >= 2)          # actually interleaved
+    return {"publishes": len(published), "queries": len(answers),
+            "generations_seen": gens_seen, "torn_reads": torn,
+            "fold_in_mismatch": mismatch, "theta_rows_bad": theta_bad,
+            "serial_refs_computed": len(ref_cache),
+            "trainer_error": trainer_exc[0] if trainer_exc else None,
+            "all_ok": ok}
+
+
+def main(argv=None) -> None:
+    args = _parse(sys.argv[1:] if argv is None else argv)
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={args.n_devices} "
+        + os.environ.get("XLA_FLAGS", ""))
+    report = run_check(args)
+    print(json.dumps(report))
+    if not report["all_ok"]:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

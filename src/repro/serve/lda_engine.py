@@ -1,0 +1,284 @@
+"""Online fold-in topic inference: the millions-of-users serving path.
+
+DESIGN.md §10.  The trainer (``core/nomad.py``) owns the chain; serving
+owns a *frozen* posterior-mean φ table.  Three pieces:
+
+* :class:`PhiSnapshot` — an immutable, format-versioned φ table plus the
+  hyperparameters and integrity digest needed to fold against it.
+  Built from trained counts by :func:`snapshot_from_counts` (the same
+  ``_phi_hat`` float ops as held-out evaluation) or loaded from the
+  ``train/checkpoint.py:save_phi`` store.
+
+* :func:`pack_docs` — ragged → padded: variable-length documents become
+  a ``(D, L)`` tile (rows and columns bucketed to powers of two so the
+  jit cache stays bounded) plus a validity mask.  Padded positions are
+  provably inert under ``fold_in_batch``'s counter-mode RNG contract.
+
+* :class:`LdaEngine` — double-buffered θ service.  ``publish`` builds
+  the device-resident buffer *off* the serving path and installs it
+  with one atomic reference swap (generation counter + content digest);
+  ``query`` pins the buffer with a single attribute read, so a reader
+  can never observe a torn or half-folded table even while a background
+  ``NomadLDA.run(publish_every=...)`` ring keeps publishing.  Every
+  answer carries the generation and digest it folded against, which is
+  what ``launch/serve_check.py`` audits for torn reads.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.heldout import (_phi_hat, doc_fold_key, fold_in_batch,
+                                theta_from_counts)
+from repro.data.sharding import _pow2_ceil
+from repro.train.checkpoint import (PHI_FORMAT_VERSION, load_phi, phi_digest,
+                                    save_phi)
+
+__all__ = ["PhiSnapshot", "snapshot_from_counts", "pack_docs",
+           "TopicQuery", "TopicResult", "LdaEngine"]
+
+
+# ---------------------------------------------------------------------------
+# Snapshots
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class PhiSnapshot:
+    """A frozen φ table: ``phi`` is ``(J, T)`` f32, ``meta`` carries
+    ``format_version``/``alpha``/``beta``/``J``/``T``/``digest`` (and any
+    trainer-side extras, e.g. the sweep it was exported at)."""
+    phi: np.ndarray
+    meta: dict
+
+    @property
+    def alpha(self) -> float:
+        return float(self.meta["alpha"])
+
+    @property
+    def beta(self) -> float:
+        return float(self.meta["beta"])
+
+    @property
+    def digest(self) -> str:
+        return self.meta["digest"]
+
+    def save(self, path: str) -> None:
+        save_phi(path, self.phi, self.meta)
+
+    @classmethod
+    def load(cls, path: str) -> "PhiSnapshot":
+        phi, meta = load_phi(path)
+        return cls(phi=phi, meta=meta)
+
+
+def snapshot_from_counts(n_wt, n_t, *, alpha: float, beta: float,
+                         extra_meta: dict | None = None) -> PhiSnapshot:
+    """Freeze trained counts into a snapshot: φ̂ = (n_wt+β)/(n_t+Jβ),
+    the identical float ops the held-out evaluator uses."""
+    phi = np.asarray(_phi_hat(jnp.asarray(n_wt), jnp.asarray(n_t), beta),
+                     np.float32)
+    meta = dict(extra_meta or {})
+    meta.update(format_version=PHI_FORMAT_VERSION,
+                alpha=float(alpha), beta=float(beta),
+                J=int(phi.shape[0]), T=int(phi.shape[1]),
+                digest=phi_digest(phi))
+    return PhiSnapshot(phi=phi, meta=meta)
+
+
+# ---------------------------------------------------------------------------
+# Ragged → padded batching
+# ---------------------------------------------------------------------------
+def pack_docs(docs, *, tile: int = 8):
+    """Pack variable-length documents into a padded ``(D_pad, L)`` tile.
+
+    ``L`` is the longest document rounded up to a multiple of ``tile``
+    and then to a power-of-two tile count; ``D_pad`` is the doc count
+    rounded to a power of two.  Both roundings bound the set of shapes
+    the jitted fold-in kernel ever sees (same motivation as
+    ``data/sharding.default_ragged_tile``: a handful of buckets instead
+    of one compile per request).  Returns ``(word_ids, valid, n_real)``;
+    padded positions and padded rows are all-False in ``valid`` and
+    carry word id 0 — inert by `fold_in_batch`'s contract.
+    """
+    if tile < 1:
+        raise ValueError(f"tile must be >= 1, got {tile}")
+    docs = [np.asarray(d, np.int32).reshape(-1) for d in docs]
+    if not docs:
+        raise ValueError("pack_docs got an empty document list")
+    n_real = len(docs)
+    l_max = max(d.size for d in docs)
+    n_tiles = _pow2_ceil(max(-(-l_max // tile), 1))
+    L = n_tiles * tile
+    D = _pow2_ceil(n_real)
+    word_ids = np.zeros((D, L), np.int32)
+    valid = np.zeros((D, L), bool)
+    for i, d in enumerate(docs):
+        word_ids[i, :d.size] = d
+        valid[i, :d.size] = True
+    return word_ids, valid, n_real
+
+
+# ---------------------------------------------------------------------------
+# Request / response types
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class TopicQuery:
+    """``docs``: variable-length token-id documents (empty docs allowed —
+    their θ is the uniform α prior).  ``key``: base RNG key; document
+    ``i`` of the query runs stream ``doc_fold_key(key, i)``, so a query
+    over docs 0..D−1 is bit-reproducible by the serial ``fold_in`` under
+    the same key.  ``sweeps`` overrides the engine default."""
+    docs: tuple
+    key: object = None
+    sweeps: int | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class TopicResult:
+    """θ rows for the query's documents plus the provenance needed to
+    audit exactly which snapshot answered: generation + digest."""
+    theta: np.ndarray        # (len(docs), T) f32, rows sum to 1
+    n_td: np.ndarray         # (len(docs), T) int32 fold-in counts
+    generation: int
+    digest: str
+    latency_s: float
+    batch_shape: tuple       # padded (D_pad, L) actually swept
+
+
+@dataclasses.dataclass(frozen=True)
+class _Buffer:
+    """One published φ buffer.  Immutable: a reader that grabbed this
+    object sees a consistent (phi, alpha, generation, digest) forever,
+    regardless of later publishes — the whole double-buffer protocol is
+    `buf = self._buf` being a single atomic reference read."""
+    phi: object              # device-resident (J, T) f32
+    alpha: float
+    generation: int
+    digest: str
+    meta: dict
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("sweeps",))
+def _theta_kernel(word_ids, valid, phi, alpha, doc_keys, sweeps):
+    n_td = fold_in_batch(word_ids, valid, phi, alpha, doc_keys, sweeps)
+    return n_td, theta_from_counts(n_td, alpha)
+
+
+class LdaEngine:
+    """Double-buffered fold-in θ service.
+
+    Thread-safety contract: ``publish`` may run concurrently with any
+    number of ``query`` calls.  Publishers serialize on a lock; readers
+    take no lock at all — they pin the current :class:`_Buffer` with one
+    reference read and use only that object, so a concurrent publish can
+    reorder *which* snapshot answered but never mix two snapshots inside
+    one answer.
+    """
+
+    def __init__(self, snapshot: PhiSnapshot | None = None, *,
+                 sweeps: int = 20, tile: int = 8, max_batch: int = 64,
+                 default_key=None):
+        if sweeps < 1:
+            raise ValueError(f"sweeps must be >= 1, got {sweeps}")
+        if max_batch < 1 or max_batch & (max_batch - 1):
+            raise ValueError(
+                f"max_batch must be a power of two (jit-cache bucketing), "
+                f"got {max_batch}")
+        self.sweeps = int(sweeps)
+        self.tile = int(tile)
+        self.max_batch = int(max_batch)
+        self._default_key = (jax.random.key(0) if default_key is None
+                             else default_key)
+        self._publish_lock = threading.Lock()
+        self._buf: _Buffer | None = None
+        self._queries = 0
+        if snapshot is not None:
+            self.publish(snapshot)
+
+    # -- publish side ------------------------------------------------------
+    def publish(self, snapshot: PhiSnapshot) -> int:
+        """Install a new φ buffer; returns its generation.
+
+        Refuses format-version mismatches, geometry changes against the
+        live buffer (a serving vocabulary cannot silently resize), and
+        digest-mismatched tables.  The device transfer happens *before*
+        the swap, so readers never wait on it.
+        """
+        ver = snapshot.meta.get("format_version")
+        if ver != PHI_FORMAT_VERSION:
+            raise ValueError(
+                f"refusing φ snapshot format v{ver}; this engine serves "
+                f"v{PHI_FORMAT_VERSION}")
+        phi = np.asarray(snapshot.phi, np.float32)
+        if phi.ndim != 2:
+            raise ValueError(f"φ must be (J, T); got shape {phi.shape}")
+        digest = phi_digest(phi)
+        if snapshot.meta.get("digest") not in (None, digest):
+            raise ValueError("φ snapshot digest mismatch — refusing to "
+                             "serve a corrupt table")
+        phi_dev = jax.device_put(jnp.asarray(phi))
+        jax.block_until_ready(phi_dev)
+        with self._publish_lock:
+            cur = self._buf
+            if cur is not None and cur.phi.shape != phi.shape:
+                raise ValueError(
+                    f"φ geometry change {cur.phi.shape} → {phi.shape}; "
+                    f"drain and restart the engine to resize")
+            gen = 1 if cur is None else cur.generation + 1
+            self._buf = _Buffer(phi=phi_dev, alpha=snapshot.alpha,
+                                generation=gen, digest=digest,
+                                meta=dict(snapshot.meta))
+        return gen
+
+    @property
+    def generation(self) -> int:
+        buf = self._buf
+        return 0 if buf is None else buf.generation
+
+    # -- query side --------------------------------------------------------
+    def query(self, q: TopicQuery) -> TopicResult:
+        buf = self._buf          # the one atomic read; pins the snapshot
+        if buf is None:
+            raise RuntimeError("LdaEngine has no published snapshot yet")
+        t0 = time.perf_counter()
+        docs = [np.asarray(d, np.int32).reshape(-1) for d in q.docs]
+        if not docs:
+            raise ValueError("TopicQuery carries no documents")
+        J = buf.phi.shape[0]
+        for i, d in enumerate(docs):
+            if d.size and (int(d.min()) < 0 or int(d.max()) >= J):
+                raise ValueError(
+                    f"doc {i}: word ids out of range [0, {J}): "
+                    f"[{d.min()}, {d.max()}]")
+        key = self._default_key if q.key is None else q.key
+        sweeps = self.sweeps if q.sweeps is None else int(q.sweeps)
+
+        thetas, counts, shapes = [], [], []
+        for lo in range(0, len(docs), self.max_batch):
+            chunk = docs[lo:lo + self.max_batch]
+            word_ids, valid, n_real = pack_docs(chunk, tile=self.tile)
+            doc_keys = jax.vmap(doc_fold_key, in_axes=(None, 0))(
+                key, jnp.arange(lo, lo + word_ids.shape[0],
+                                dtype=jnp.int32))
+            n_td, theta = _theta_kernel(jnp.asarray(word_ids),
+                                        jnp.asarray(valid), buf.phi,
+                                        buf.alpha, doc_keys, sweeps)
+            jax.block_until_ready(theta)
+            thetas.append(np.asarray(theta)[:n_real])
+            counts.append(np.asarray(n_td)[:n_real])
+            shapes.append(word_ids.shape)
+        self._queries += 1
+        return TopicResult(
+            theta=np.concatenate(thetas, 0),
+            n_td=np.concatenate(counts, 0),
+            generation=buf.generation, digest=buf.digest,
+            latency_s=time.perf_counter() - t0,
+            batch_shape=shapes[0] if len(shapes) == 1 else tuple(shapes))

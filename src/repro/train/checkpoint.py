@@ -14,9 +14,18 @@ Two stores live here:
   chain-affecting knob so a mismatched resume fails loudly instead of
   silently forking the chain).  Writes are atomic (tmp + ``os.replace``)
   so a preemption mid-write never corrupts the previous checkpoint.
+
+* :func:`save_phi` / :func:`load_phi` — the format-versioned φ snapshot
+  store (DESIGN.md §10).  A φ snapshot is the frozen posterior-mean
+  word-topic table the serving engine folds against — derived state, not
+  the chain — published by ``NomadLDA.export_phi_snapshot`` and consumed
+  by ``repro.serve.lda_engine``.  Same atomic-write discipline, its own
+  ``PHI_FORMAT_VERSION`` gate (a serving fleet and a trainer upgrade on
+  different schedules), and an integrity digest checked on load.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import tempfile
@@ -24,10 +33,11 @@ import tempfile
 import jax
 import numpy as np
 
-__all__ = ["save", "restore", "save_chain", "load_chain",
-           "CHAIN_FORMAT_VERSION"]
+__all__ = ["save", "restore", "save_chain", "load_chain", "save_phi",
+           "load_phi", "CHAIN_FORMAT_VERSION", "PHI_FORMAT_VERSION"]
 
 CHAIN_FORMAT_VERSION = 1
+PHI_FORMAT_VERSION = 1
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:
@@ -66,25 +76,23 @@ def restore(path: str, like):
 # Format-versioned LDA chain store (DESIGN.md §9).
 # ---------------------------------------------------------------------------
 _META_KEY = "__chain_meta__"
+_PHI_META_KEY = "__phi_meta__"
 
 
-def save_chain(path: str, state: dict[str, np.ndarray], meta: dict) -> None:
-    """Atomically write a chain checkpoint (``state`` arrays + ``meta``).
-
-    ``meta`` must be JSON-able; ``format_version`` is stamped here.  The
-    write goes to a temp file in the destination directory and is
-    ``os.replace``d into place, so readers only ever see a complete file.
-    """
-    if _META_KEY in state:
-        raise ValueError(f"state may not use the reserved key {_META_KEY!r}")
-    meta = dict(meta)
-    meta["format_version"] = CHAIN_FORMAT_VERSION
+def _atomic_savez(path: str, payload: dict, meta: dict,
+                  meta_key: str) -> str:
+    """Write ``payload`` + JSON ``meta`` as one npz, atomically: the write
+    goes to a temp file in the destination directory and is
+    ``os.replace``d into place, so readers only ever see a complete
+    file.  Returns the final path (``.npz`` appended if missing)."""
+    if meta_key in payload:
+        raise ValueError(f"state may not use the reserved key {meta_key!r}")
     if not path.endswith(".npz"):
         path = path + ".npz"
     d = os.path.dirname(path) or "."
     os.makedirs(d, exist_ok=True)
-    payload = {k: np.asarray(v) for k, v in state.items()}
-    payload[_META_KEY] = np.frombuffer(
+    payload = dict(payload)
+    payload[meta_key] = np.frombuffer(
         json.dumps(meta, sort_keys=True).encode(), np.uint8)
     fd, tmp = tempfile.mkstemp(dir=d, suffix=".npz.tmp")
     try:
@@ -95,6 +103,18 @@ def save_chain(path: str, state: dict[str, np.ndarray], meta: dict) -> None:
         if os.path.exists(tmp):
             os.unlink(tmp)
         raise
+    return path
+
+
+def save_chain(path: str, state: dict[str, np.ndarray], meta: dict) -> None:
+    """Atomically write a chain checkpoint (``state`` arrays + ``meta``).
+
+    ``meta`` must be JSON-able; ``format_version`` is stamped here.
+    """
+    meta = dict(meta)
+    meta["format_version"] = CHAIN_FORMAT_VERSION
+    _atomic_savez(path, {k: np.asarray(v) for k, v in state.items()},
+                  meta, _META_KEY)
 
 
 def load_chain(path: str) -> tuple[dict[str, np.ndarray], dict]:
@@ -113,3 +133,58 @@ def load_chain(path: str) -> tuple[dict[str, np.ndarray], dict]:
                 f"reads v{CHAIN_FORMAT_VERSION})")
         state = {k: data[k] for k in data.files if k != _META_KEY}
     return state, meta
+
+
+# ---------------------------------------------------------------------------
+# Format-versioned φ snapshot store (DESIGN.md §10).
+# ---------------------------------------------------------------------------
+def phi_digest(phi: np.ndarray) -> str:
+    """Content digest of a φ table — the torn-read/corruption detector the
+    serving engine threads through every answer."""
+    return hashlib.sha256(
+        np.ascontiguousarray(np.asarray(phi, np.float32)).tobytes()
+    ).hexdigest()
+
+
+def save_phi(path: str, phi: np.ndarray, meta: dict) -> None:
+    """Atomically write a φ snapshot (``(J, T)`` f32 table + ``meta``).
+
+    ``format_version`` and the integrity ``digest`` are stamped here;
+    ``meta`` must be JSON-able.
+    """
+    phi = np.asarray(phi, np.float32)
+    if phi.ndim != 2:
+        raise ValueError(f"phi must be a (J, T) table; got shape {phi.shape}")
+    meta = dict(meta)
+    meta["format_version"] = PHI_FORMAT_VERSION
+    meta["J"], meta["T"] = int(phi.shape[0]), int(phi.shape[1])
+    meta["digest"] = phi_digest(phi)
+    _atomic_savez(path, {"phi": phi}, meta, _PHI_META_KEY)
+
+
+def load_phi(path: str) -> tuple[np.ndarray, dict]:
+    """Read a φ snapshot; refuses unknown format versions and corrupt
+    (digest-mismatched) tables — a serving fleet must never fold against
+    a φ it cannot prove it understands."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    with np.load(path) as data:
+        if _PHI_META_KEY not in data:
+            raise ValueError(f"{path} is not a φ snapshot (no "
+                             f"{_PHI_META_KEY})")
+        meta = json.loads(bytes(data[_PHI_META_KEY].tobytes()).decode())
+        ver = meta.get("format_version")
+        if ver != PHI_FORMAT_VERSION:
+            raise ValueError(
+                f"φ snapshot format v{ver} unsupported (this build reads "
+                f"v{PHI_FORMAT_VERSION})")
+        phi = np.asarray(data["phi"], np.float32)
+    if phi.shape != (meta.get("J"), meta.get("T")):
+        raise ValueError(
+            f"φ snapshot shape {phi.shape} does not match its meta "
+            f"({meta.get('J')}, {meta.get('T')})")
+    got = phi_digest(phi)
+    if meta.get("digest") not in (None, got):
+        raise ValueError("φ snapshot digest mismatch — corrupt or "
+                         "hand-edited table")
+    return phi, meta

@@ -50,6 +50,42 @@ class TestDocumentCompletion:
         assert ppl_trained < ppl_untrained
 
 
+class TestFoldInValidation:
+    """fold_in inputs arrive from serving requests and held-out splits —
+    they must fail loudly (mirroring data/corpus.py), not fold garbage."""
+
+    def _phi(self):
+        import jax.numpy as jnp
+        return jnp.ones((16, 4), jnp.float32) / 4
+
+    def test_empty_token_list_raises(self):
+        with pytest.raises(ValueError, match="empty token list"):
+            heldout.fold_in(np.zeros(0, np.int32), np.zeros(0, np.int32),
+                            1, self._phi(), 0.1, jax.random.key(0))
+
+    def test_empty_corpus_raises(self):
+        with pytest.raises(ValueError, match="num_docs >= 1"):
+            heldout.fold_in(np.array([1], np.int32),
+                            np.array([0], np.int32), 0, self._phi(), 0.1,
+                            jax.random.key(0))
+
+    def test_out_of_range_ids_raise(self):
+        with pytest.raises(ValueError, match="doc_ids out of range"):
+            heldout.fold_in(np.array([1], np.int32),
+                            np.array([5], np.int32), 2, self._phi(), 0.1,
+                            jax.random.key(0))
+        with pytest.raises(ValueError, match="word_ids out of range"):
+            heldout.fold_in(np.array([16], np.int32),
+                            np.array([0], np.int32), 1, self._phi(), 0.1,
+                            jax.random.key(0))
+
+    def test_mismatched_shapes_raise(self):
+        with pytest.raises(ValueError, match="parallel arrays"):
+            heldout.fold_in(np.array([1, 2], np.int32),
+                            np.array([0], np.int32), 1, self._phi(), 0.1,
+                            jax.random.key(0))
+
+
 class TestServeEngine:
     def test_generate_batched_variable_lengths(self):
         from repro.configs import get_config

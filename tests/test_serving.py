@@ -1,0 +1,301 @@
+"""Serving subsystem tests (DESIGN.md §10).
+
+Three pillars, mirroring the ISSUE's acceptance list:
+
+* **Parity** — the batched padded fold-in (`fold_in_batch`, the serving
+  hot path) is bit-identical per document to the serial `fold_in`
+  reference, across doc lengths including empty and single-token docs,
+  and padded positions are provably inert.
+* **Snapshot publish** — concurrent publishes never tear a reader's
+  answer: every θ is attributable to exactly one published generation;
+  format-version / geometry / digest mismatches are refused at both the
+  store (`save_phi`/`load_phi`) and the engine.
+* **Perplexity through the engine** — `document_completion_perplexity`
+  recomputed from engine answers matches the direct call within f32
+  tolerance (the regression pin the quality-harness ROADMAP item
+  builds on).
+"""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.heldout import (doc_fold_key, fold_in, fold_in_batch,
+                                theta_from_counts)
+from repro.serve.lda_engine import (LdaEngine, PhiSnapshot, TopicQuery,
+                                    pack_docs, snapshot_from_counts)
+from repro.train import checkpoint
+
+J, T = 29, 7
+ALPHA = 0.4
+SWEEPS = 3
+
+
+@pytest.fixture(scope="module")
+def snap():
+    rng = np.random.default_rng(5)
+    n_wt = rng.integers(0, 40, (J, T))
+    return snapshot_from_counts(n_wt, n_wt.sum(0), alpha=ALPHA, beta=0.01)
+
+
+def _mk_docs(seed, lengths):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, J, n).astype(np.int32) for n in lengths]
+
+
+def _batched(docs, phi, key, L=16, sweeps=SWEEPS):
+    """fold_in_batch over ``docs`` at a fixed padded width, row d keyed
+    as serial document d under ``key``."""
+    D = len(docs)
+    w = np.zeros((D, L), np.int32)
+    v = np.zeros((D, L), bool)
+    for i, d in enumerate(docs):
+        w[i, :d.size] = d
+        v[i, :d.size] = True
+    keys = jax.vmap(doc_fold_key, in_axes=(None, 0))(
+        key, jnp.arange(D, dtype=jnp.int32))
+    return np.asarray(fold_in_batch(jnp.asarray(w), jnp.asarray(v),
+                                    phi, ALPHA, keys, sweeps))
+
+
+def _serial(docs, phi, key, sweeps=SWEEPS):
+    """Serial multi-doc reference: one flat token list, doc ids = list
+    position (empty docs contribute no tokens; their rows stay zero)."""
+    w = np.concatenate([d for d in docs]).astype(np.int32)
+    d = np.concatenate([np.full(x.size, i, np.int32)
+                        for i, x in enumerate(docs)])
+    return np.asarray(fold_in(jnp.asarray(w), jnp.asarray(d), len(docs),
+                              phi, ALPHA, key, sweeps))
+
+
+class TestFoldInParity:
+    @settings(max_examples=8, deadline=None)
+    @given(lengths=st.lists(st.integers(0, 12), min_size=1, max_size=5),
+           seed=st.integers(0, 3))
+    def test_batched_matches_serial_bitexact(self, snap, lengths, seed):
+        if not any(lengths):
+            lengths = lengths + [1]      # serial path refuses all-empty
+        docs = _mk_docs(seed, lengths)
+        phi = jnp.asarray(snap.phi)
+        key = jax.random.key(100 + seed)
+        got = _batched(docs, phi, key)
+        ref = _serial(docs, phi, key)
+        for i, d in enumerate(docs):
+            if d.size == 0:
+                assert got[i].sum() == 0    # empty doc: zero counts
+            else:
+                np.testing.assert_array_equal(got[i], ref[i])
+
+    def test_empty_and_single_token_docs(self, snap):
+        docs = _mk_docs(0, [0, 1, 1, 0, 5])
+        phi = jnp.asarray(snap.phi)
+        key = jax.random.key(9)
+        got = _batched(docs, phi, key)
+        ref = _serial(docs, phi, key)
+        for i, d in enumerate(docs):
+            if d.size:
+                np.testing.assert_array_equal(got[i], ref[i])
+            else:
+                assert got[i].sum() == 0
+        th = np.asarray(theta_from_counts(jnp.asarray(got), ALPHA))
+        np.testing.assert_allclose(th.sum(1), 1.0, atol=1e-5)
+        np.testing.assert_allclose(th[0], 1.0 / T, atol=1e-6)  # uniform
+
+    def test_padding_provably_inert(self, snap):
+        """Growing L and writing garbage into padded word slots cannot
+        perturb any row — the counter-mode RNG contract."""
+        docs = _mk_docs(1, [3, 7, 1])
+        phi = jnp.asarray(snap.phi)
+        key = jax.random.key(4)
+        base = _batched(docs, phi, key, L=8)
+        wider = _batched(docs, phi, key, L=32)
+        np.testing.assert_array_equal(base, wider)
+
+        D, L = len(docs), 32
+        w = np.full((D, L), J - 1, np.int32)        # garbage everywhere
+        v = np.zeros((D, L), bool)
+        for i, d in enumerate(docs):
+            w[i, :d.size] = d
+            v[i, :d.size] = True
+        keys = jax.vmap(doc_fold_key, in_axes=(None, 0))(
+            key, jnp.arange(D, dtype=jnp.int32))
+        garbage = np.asarray(fold_in_batch(
+            jnp.asarray(w), jnp.asarray(v), phi, ALPHA, keys, SWEEPS))
+        np.testing.assert_array_equal(base, garbage)
+
+    def test_row_independent_of_batch_neighbours(self, snap):
+        """A document's chain depends only on its own stream key — not
+        on which batch it rides in."""
+        phi = jnp.asarray(snap.phi)
+        key = jax.random.key(2)
+        docs = _mk_docs(2, [6, 4, 9])
+        full = _batched(docs, phi, key)
+        # same doc 1 alone, keyed with its original stream
+        alone_key = doc_fold_key(key, 1)
+        w = np.zeros((1, 16), np.int32)
+        v = np.zeros((1, 16), bool)
+        w[0, :4], v[0, :4] = docs[1], True
+        alone = np.asarray(fold_in_batch(
+            jnp.asarray(w), jnp.asarray(v), phi, ALPHA,
+            alone_key[None], SWEEPS))
+        np.testing.assert_array_equal(full[1], alone[0])
+
+    def test_pack_docs_buckets_shapes(self):
+        docs = _mk_docs(3, [1, 5, 11])
+        w, v, n = pack_docs(docs, tile=8)
+        assert n == 3
+        assert w.shape == (4, 16)          # pow2 rows, pow2 tile count
+        assert v.sum() == 1 + 5 + 11
+        assert not v[3].any()              # padded row inert
+        with pytest.raises(ValueError):
+            pack_docs([])
+
+
+class TestSnapshotPublish:
+    def test_concurrent_publish_no_torn_reads(self, snap):
+        """Interleave publishes with reader queries from two threads;
+        every answer must be attributable to exactly one published
+        generation (generation ↔ digest match)."""
+        eng = LdaEngine(snap, sweeps=2, tile=4, max_batch=8)
+        published = {1: snap.digest}
+        pub_lock = threading.Lock()
+        stop = threading.Event()
+
+        def publisher():
+            rng = np.random.default_rng(17)
+            for _ in range(6):
+                n_wt = rng.integers(0, 40, (J, T))
+                s = snapshot_from_counts(n_wt, n_wt.sum(0), alpha=ALPHA,
+                                         beta=0.01)
+                gen = eng.publish(s)
+                with pub_lock:
+                    published[gen] = s.digest
+            stop.set()
+
+        answers = []
+        ans_lock = threading.Lock()
+        docs = tuple(_mk_docs(6, [4, 0, 7, 2]))
+
+        def reader(tid):
+            i = 0
+            while not stop.is_set() or i < 10:
+                res = eng.query(TopicQuery(
+                    docs=docs, key=jax.random.key(tid * 100 + i % 3)))
+                with ans_lock:
+                    answers.append((res.generation, res.digest))
+                i += 1
+
+        th_p = threading.Thread(target=publisher)
+        readers = [threading.Thread(target=reader, args=(t,))
+                   for t in range(2)]
+        for t in readers:
+            t.start()
+        th_p.start()
+        th_p.join()
+        for t in readers:
+            t.join()
+
+        assert len(published) == 7          # initial + 6 publishes
+        assert answers
+        for gen, digest in answers:
+            assert published.get(gen) == digest, (
+                f"torn read: generation {gen} answered with a digest "
+                f"belonging to no single published snapshot")
+
+    def test_refuses_format_version_mismatch(self, snap):
+        eng = LdaEngine(snap)
+        bad = PhiSnapshot(phi=snap.phi,
+                          meta={**snap.meta, "format_version": 99})
+        with pytest.raises(ValueError, match="format"):
+            eng.publish(bad)
+        assert eng.generation == 1          # still serving gen 1
+
+    def test_refuses_geometry_change_and_corrupt_digest(self, snap):
+        eng = LdaEngine(snap)
+        resized = snapshot_from_counts(np.ones((J + 1, T)), np.ones(T),
+                                       alpha=ALPHA, beta=0.01)
+        with pytest.raises(ValueError, match="geometry"):
+            eng.publish(resized)
+        corrupt = PhiSnapshot(phi=snap.phi + 1.0, meta=dict(snap.meta))
+        with pytest.raises(ValueError, match="digest"):
+            eng.publish(corrupt)
+
+    def test_query_before_publish_raises(self):
+        with pytest.raises(RuntimeError):
+            LdaEngine().query(TopicQuery(docs=(np.arange(3),)))
+
+    def test_save_load_round_trip(self, snap, tmp_path):
+        p = str(tmp_path / "phi")
+        snap.save(p)
+        back = PhiSnapshot.load(p)
+        np.testing.assert_array_equal(back.phi, snap.phi)
+        assert back.digest == snap.digest
+        assert back.alpha == snap.alpha and back.beta == snap.beta
+        # a loaded snapshot publishes cleanly
+        assert LdaEngine(back).generation == 1
+
+    def test_load_refuses_version_and_digest_tampering(self, snap,
+                                                       tmp_path):
+        p = str(tmp_path / "phi_bad")
+        meta = dict(snap.meta, format_version=99)
+        checkpoint._atomic_savez(p, {"phi": snap.phi}, meta,
+                                 checkpoint._PHI_META_KEY)
+        with pytest.raises(ValueError, match="format"):
+            checkpoint.load_phi(p)
+        p2 = str(tmp_path / "phi_corrupt")
+        meta = dict(snap.meta, digest="0" * 64)
+        checkpoint._atomic_savez(p2, {"phi": snap.phi}, meta,
+                                 checkpoint._PHI_META_KEY)
+        with pytest.raises(ValueError, match="digest"):
+            checkpoint.load_phi(p2)
+        # a chain checkpoint is not a φ snapshot
+        checkpoint.save_chain(str(tmp_path / "chain"),
+                              {"z": np.arange(4)}, {})
+        with pytest.raises(ValueError, match="not a φ snapshot"):
+            checkpoint.load_phi(str(tmp_path / "chain"))
+
+
+class TestEnginePerplexity:
+    def test_engine_matches_direct_perplexity(self):
+        """`document_completion_perplexity` recomputed from engine
+        answers equals the direct call within f32 tolerance: the engine
+        keys doc i as `doc_fold_key(key, i)`, exactly the stream the
+        direct path's internal fold_in derives for doc id i."""
+        from repro.core.heldout import (_phi_hat, _positions_in_doc,
+                                        document_completion_perplexity)
+        from repro.data import synthetic
+
+        corpus, _, _ = synthetic.make_corpus(
+            num_docs=20, vocab_size=J, num_topics=T, mean_doc_len=12.0,
+            seed=2)
+        rng = np.random.default_rng(8)
+        n_wt = rng.integers(0, 40, (J, T))
+        n_t = n_wt.sum(0)
+        key = jax.random.key(31)
+        direct = document_completion_perplexity(
+            corpus, n_wt, n_t, alpha=ALPHA, beta=0.01, key=key,
+            fold_sweeps=SWEEPS)
+
+        # replicate the split, fold the estimation halves via the engine
+        order = corpus.doc_order()
+        pos = _positions_in_doc(corpus.doc_ids[order])
+        first = pos % 2 == 0
+        est_idx, score_idx = order[first], order[~first]
+        docs = [corpus.word_ids[est_idx][
+                    corpus.doc_ids[est_idx] == d].astype(np.int32)
+                for d in range(corpus.num_docs)]
+        snap = snapshot_from_counts(n_wt, n_t, alpha=ALPHA, beta=0.01)
+        eng = LdaEngine(snap, sweeps=SWEEPS, tile=4, max_batch=8)
+        res = eng.query(TopicQuery(docs=tuple(docs), key=key))
+
+        phi = np.asarray(_phi_hat(jnp.asarray(n_wt), jnp.asarray(n_t),
+                                  0.01))
+        w, d = corpus.word_ids[score_idx], corpus.doc_ids[score_idx]
+        p_tok = np.einsum("nt,nt->n", res.theta[d], phi[w])
+        ppl = float(np.exp(-np.log(np.maximum(p_tok, 1e-30)).sum()
+                           / max(len(score_idx), 1)))
+        assert ppl == pytest.approx(direct, rel=1e-4)

@@ -1,10 +1,10 @@
 #!/usr/bin/env bash
 # CI gate: import-clean collection, fast kernel/sampler signal, then tier-1.
 #
-#   tools/ci.sh               # collection check + doc-tile smoke + full
-#                             # tier-1 suite
-#   tools/ci.sh --fast        # collection check + doc-tile smoke +
-#                             # `-m "not slow"` subset only
+#   tools/ci.sh               # collection check + doc-tile/resume/serve
+#                             # smokes + full tier-1 suite
+#   tools/ci.sh --fast        # collection check + doc-tile/resume/serve
+#                             # smokes + `-m "not slow"` subset only
 #   tools/ci.sh --bench-smoke # benchmark smoke only: REPRO_BENCH_FAST=1
 #                             # harness run (both token layouts; prints the
 #                             # dense-vs-ragged pad_fraction delta), fails on
@@ -18,6 +18,13 @@
 #                             # assert the chain digest is bit-equal to
 #                             # the uninterrupted run (also part of the
 #                             # default and --fast stage lists)
+#   tools/ci.sh --serve-smoke # serving smoke only: publish-while-serving
+#                             # harness (launch/serve_check: >=3 publishes
+#                             # interleaved with >=100 batched queries,
+#                             # zero torn reads, batched==serial bit-exact)
+#                             # + the fast tests/test_serving.py subset
+#                             # (also part of the default and --fast
+#                             # stage lists)
 #
 # Property tests (tests/test_sharding_properties.py, ...) use `hypothesis`.
 # CI servers should run with REPRO_CI_INSTALL_HYPOTHESIS=1 so the real
@@ -61,6 +68,32 @@ bench_smoke() {
         || echo "pad_fraction summary row missing (no nomad rows?)"
     echo "== bench regression gate: BENCH_sweep.json nomad trajectory =="
     python -m benchmarks.sweep_bench --check-regression
+    echo "== serve regression gate: BENCH_serve.json docs/sec + canary =="
+    python -m benchmarks.serve_bench --check-regression
+}
+
+serve_smoke() {
+    # Publish-while-serving end to end (DESIGN.md §10): a background
+    # nomad ring publishes >=3 snapshots into a live LdaEngine while
+    # >=100 batched queries run against it; the harness audits zero
+    # torn reads (every answer attributable to exactly one published
+    # generation) and batched-vs-serial fold-in bit-exactness across
+    # the whole run, then the fast serving test subset runs.
+    echo "== serve smoke: publish-while-serving (launch/serve_check) =="
+    local out
+    out=$(python -m repro.launch.serve_check) || {
+        echo "$out"; echo "serve smoke: check exited non-zero"; return 1; }
+    python - "$out" <<'PY'
+import json, sys
+rep = json.loads(sys.argv[1].strip().splitlines()[-1])
+print(f"serve smoke: {rep['publishes']} publishes, {rep['queries']} "
+      f"queries across generations {rep['generations_seen']}, "
+      f"{rep['torn_reads']} torn reads, "
+      f"{rep['fold_in_mismatch']} fold-in mismatches")
+sys.exit(0 if rep["all_ok"] else 1)
+PY
+    echo "== serve tests: tests/test_serving.py (-m 'not slow') =="
+    python -m pytest -q -m "not slow" tests/test_serving.py
 }
 
 resume_smoke() {
@@ -109,6 +142,12 @@ if [[ "${1:-}" == "--resume-smoke" ]]; then
     exit 0
 fi
 
+if [[ "${1:-}" == "--serve-smoke" ]]; then
+    serve_smoke
+    echo "CI OK (serve smoke)"
+    exit 0
+fi
+
 doc_tile_smoke() {
     # Doc-axis tiling + sparse-r regression signal (DESIGN.md §7/§7a):
     # the matrix check's smoke subset — paged vs untiled twins on both
@@ -152,6 +191,8 @@ python -m pytest -q --collect-only >/dev/null
 doc_tile_smoke
 
 resume_smoke
+
+serve_smoke
 
 echo "== fast signal: kernels + samplers (-m 'not slow') =="
 python -m pytest -q -m "not slow"
