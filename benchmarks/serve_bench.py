@@ -22,7 +22,13 @@ per-PR snapshots at the repo root (``{"history": [{"rev", "timing",
   the threshold ratio (default 1.3, REPRO_SERVE_CANARY_RATIO).  Batched
   serving that stops paying for itself is the structural failure this
   file exists to catch (e.g. an accidental per-doc recompile or a
-  pack that stops bucketing shapes).
+  pack that stops bucketing shapes);
+* the **overload row** (DESIGN.md §11): an engine behind admission
+  control (``max_pending``/``degrade_pending``) under a thread flood —
+  shed rate, degraded-answer fraction and degraded p99 — gated by
+  ``_check_overload`` on within-entry invariants only (something shed,
+  pending stayed bounded, every attempt accounted, degraded p99 within
+  REPRO_SERVE_OVERLOAD_P99_RATIO × the entry's own p50).
 
 Env: REPRO_BENCH_FAST=1 shrinks sizes/query counts and never touches
 the committed history.  Interpret-free pure-JAX CPU numbers: structure,
@@ -116,7 +122,85 @@ def _measure(fast: bool) -> list[dict]:
             "p99_ms": float(np.percentile(lats, 99) * 1e3),
             "docs_per_sec": docs_done / wall,
         })
+    entries.append(_overload_entry(fast))
     return entries
+
+
+def _overload_entry(fast: bool) -> dict:
+    """Overload row (DESIGN.md §11): a fresh engine behind admission
+    control under a thread flood — more concurrent readers than
+    ``max_pending`` admits, so the engine must shed and degrade rather
+    than queue.  Reports the shed rate, the degraded fraction of the
+    answers that were admitted, and p50/p99 over them; every number the
+    gate judges is a within-entry ratio from this one process, immune to
+    host-speed drift between snapshots."""
+    import threading
+
+    import jax
+
+    from repro.serve.lda_engine import (EngineOverloadedError, LdaEngine,
+                                        TopicQuery, snapshot_from_counts)
+
+    J, T = (256, 16) if fast else (1024, 32)
+    max_pending, degrade_pending = 2, 1
+    rng = np.random.default_rng(13)
+    n_wt = rng.integers(0, 200, (J, T))
+    snap = snapshot_from_counts(n_wt, n_wt.sum(0), alpha=50.0 / T,
+                                beta=0.01)
+    eng = LdaEngine(snap, sweeps=8, tile=8, max_batch=8,
+                    max_pending=max_pending,
+                    degrade_pending=degrade_pending, degraded_sweeps=2)
+    docs = tuple(rng.integers(0, J, 12).astype(np.int32) for _ in range(3))
+    # warm both jit variants (full + degraded sweep counts) so the flood
+    # measures serving, not compilation
+    eng.query(TopicQuery(docs=docs))
+    eng.query(TopicQuery(docs=docs, sweeps=eng.degraded_sweeps))
+
+    n_threads = 6 if fast else 8
+    per_thread = 12 if fast else 25
+    lock = threading.Lock()
+    lats, deg_lats = [], []
+    shed = [0] * n_threads
+
+    def flood(tid):
+        for i in range(per_thread):
+            try:
+                res = eng.query(TopicQuery(
+                    docs=docs, key=jax.random.key(tid * 997 + i)))
+            except EngineOverloadedError:
+                shed[tid] += 1
+                continue
+            with lock:
+                lats.append(res.latency_s)
+                if res.degraded:
+                    deg_lats.append(res.latency_s)
+
+    threads = [threading.Thread(target=flood, args=(t,))
+               for t in range(n_threads)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+
+    stats = eng.stats()
+    attempted = n_threads * per_thread
+    lat_a = np.sort(np.asarray(lats if lats else [0.0]))
+    deg_a = np.sort(np.asarray(deg_lats)) if deg_lats else None
+    return {
+        "path": "overload", "J": J, "T": T, "sweeps": eng.sweeps,
+        "degraded_sweeps": eng.degraded_sweeps, "threads": n_threads,
+        "attempted": attempted, "answered": len(lats),
+        "shed": int(sum(shed)), "shed_rate": sum(shed) / attempted,
+        "degraded_answers": len(deg_lats),
+        "degraded_fraction": len(deg_lats) / max(len(lats), 1),
+        "p50_ms": float(np.percentile(lat_a, 50) * 1e3),
+        "p99_ms": float(np.percentile(lat_a, 99) * 1e3),
+        "degraded_p99_ms": (float(np.percentile(deg_a, 99) * 1e3)
+                            if deg_a is not None else 0.0),
+        "max_pending": max_pending,
+        "max_pending_seen": stats["max_pending_seen"],
+        "accounted": len(lats) + sum(shed) == attempted,
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -174,6 +258,49 @@ def _check_canary(hist: list[dict]) -> list[str]:
     return []
 
 
+def _check_overload(hist: list[dict]) -> list[str]:
+    """Overload gate on the latest snapshot (DESIGN.md §11): the flood
+    must actually shed (admission control alive), in-flight queries must
+    stay within the configured ``max_pending`` bound, every attempt must
+    be accounted as answered-or-shed, and the degraded-answer p99 must
+    stay within REPRO_SERVE_OVERLOAD_P99_RATIO (default 50) × the
+    entry's own p50 — a degraded path that got *slower* than the median
+    admitted query means shedding stopped protecting latency.  All
+    within-entry ratios from one process: host drift between snapshots
+    can't trip them.  Pre-overload snapshots carry no such row and are
+    skipped."""
+    ratio_cap = float(os.environ.get(
+        "REPRO_SERVE_OVERLOAD_P99_RATIO", "50"))
+    if not hist:
+        return []
+    out = []
+    for e in hist[-1]["entries"]:
+        if e.get("path") != "overload":
+            continue
+        tag = f"serve overload J{e['J']}T{e['T']}/th{e['threads']}"
+        rev = hist[-1]["rev"]
+        if e["shed"] <= 0:
+            out.append(f"{tag}: the flood shed nothing — admission "
+                       f"control is inert ({rev})")
+        if e["max_pending_seen"] > e["max_pending"]:
+            out.append(f"{tag}: max_pending_seen={e['max_pending_seen']} "
+                       f"exceeded the configured bound {e['max_pending']} "
+                       f"— the queue is no longer bounded ({rev})")
+        if not e.get("accounted", True):
+            out.append(f"{tag}: answered ({e['answered']}) + shed "
+                       f"({e['shed']}) != attempted ({e['attempted']}) — "
+                       f"queries vanished ({rev})")
+        if (e["degraded_answers"] > 0
+                and e["degraded_p99_ms"] > ratio_cap
+                * max(e["p50_ms"], 1e-6)):
+            out.append(
+                f"{tag}: degraded p99 {e['degraded_p99_ms']:.1f}ms is "
+                f"{e['degraded_p99_ms'] / max(e['p50_ms'], 1e-6):.0f}x "
+                f"the entry's p50 {e['p50_ms']:.2f}ms (same process), "
+                f"limit {ratio_cap:.0f}x ({rev})")
+    return out
+
+
 def check_regression(threshold: float | None = None) -> list[str]:
     """Compare the last two same-epoch snapshots' serve rows on docs/sec;
     a row fails only when it regresses past the threshold under every
@@ -183,7 +310,7 @@ def check_regression(threshold: float | None = None) -> list[str]:
         threshold = float(os.environ.get(
             "REPRO_SERVE_REGRESSION_PCT", "40")) / 100.0
     hist = _load_history()["history"]
-    regressions = _check_canary(hist)
+    regressions = _check_canary(hist) + _check_overload(hist)
     if len(hist) < 2:
         return regressions
     if hist[-2].get("timing") != hist[-1].get("timing"):
@@ -241,6 +368,21 @@ def run() -> list[str]:
         elif e["path"] == "refclock":
             out.append(row("serve/refclock", e["ref_sec"] * 1e6,
                            f"ref_sec={e['ref_sec']:.6f}"))
+        elif e["path"] == "overload":
+            out.append(row(
+                f"serve/overload/J{e['J']}T{e['T']}/th{e['threads']}",
+                e["p99_ms"] * 1e3,
+                f"shed_rate={e['shed_rate']:.2f};"
+                f"degraded_fraction={e['degraded_fraction']:.2f};"
+                f"degraded_p99_ms={e['degraded_p99_ms']:.2f};"
+                f"p50_ms={e['p50_ms']:.2f};"
+                f"max_pending_seen={e['max_pending_seen']}"))
+            if not e.get("accounted", True):
+                # vanished queries must fail the smoke grep even though
+                # the harness itself exits 0
+                out.append(row(
+                    f"serve/overload/J{e['J']}T{e['T']}/ERROR", -1.0,
+                    "queries_unaccounted"))
         else:
             out.append(row(
                 f"serve/query/batch{e['batch']}/J{e['J']}T{e['T']}"

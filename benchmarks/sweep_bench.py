@@ -24,7 +24,13 @@ Measures tokens/sec of the three sweep paths —
   monolithic in-memory ``build_layout`` vs the chunked
   ``CorpusStore.from_corpus`` + ``build_layout_from_store`` out-of-core
   pipeline (DESIGN.md §9), measured back-to-back in-process so their
-  ratio cancels host speed; ``check_regression`` gates that ratio —
+  ratio cancels host speed; ``check_regression`` gates that ratio;
+* recovery wall-clock (DESIGN.md §11): an uninterrupted run vs the full
+  kill + corrupt-newest-slot + rotation-fallback-resume path
+  (``launch/chaos_check --phase recovery``, both legs back-to-back in
+  one subprocess after a shared warmup, so the overhead ratio is
+  host-speed-immune); ``check_regression`` gates the ratio via
+  ``_check_recovery`` —
 
 and, besides the usual CSV rows, maintains ``BENCH_sweep.json`` at the
 repo root: a **history** of per-PR snapshots (``{"history": [{"rev",
@@ -48,7 +54,9 @@ REPRO_BENCH_REGRESSION_PCT overrides the regression threshold (default
 ``_check_canary`` for why interpret-mode grid-step overhead rules out
 the tighter gate the padding math alone would allow);
 REPRO_BENCH_INGEST_PCT the chunked-vs-monolithic ingestion threshold
-(default 80 — see ``_check_ingest``).
+(default 80 — see ``_check_ingest``); REPRO_BENCH_RECOVERY_PCT the
+kill+fallback-resume overhead threshold (default 300 — see
+``_check_recovery``).
 """
 from __future__ import annotations
 
@@ -193,6 +201,37 @@ def _ingest_entries(fast: bool = False) -> list[dict]:
     ]
 
 
+def _recovery_entry(W: int, fast: bool = False) -> dict:
+    """Run the timed kill + fallback-resume story (``chaos_check --phase
+    recovery``, DESIGN.md §11) and return its bench entry.  The
+    subprocess warms the compile once, then times an uninterrupted run
+    and the full failure path — rotating checkpoints, newest slot
+    corrupted, hard death at ``kill_at``, rebuild, fallback to the
+    previous valid slot, finish — back-to-back, so ``overhead_ratio``
+    cancels host speed the way the padding canary's interleaved
+    measurement does."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    sweeps, kill_at = (4, 2) if fast else (6, 3)
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.launch.chaos_check",
+         "--phase", "recovery", "--n-devices", str(W),
+         "--sweeps", str(sweeps), "--kill-at", str(kill_at)],
+        capture_output=True, text=True, env=env, timeout=900)
+    if res.returncode != 0:
+        raise RuntimeError(f"chaos_check recovery W={W}: "
+                           + res.stderr[-500:])
+    rep = json.loads(res.stdout.strip().splitlines()[-1])
+    return {"path": "recovery", "W": W, "sweeps": rep["sweeps"],
+            "kill_at": rep["kill_at"],
+            "straight_sec": rep["straight_sec"],
+            "recovery_sec": rep["recovery_sec"],
+            "overhead_ratio": rep["overhead_ratio"],
+            "resumed_from_step": rep["resumed_from_step"],
+            "fell_back": rep["fell_back"], "exact": rep["exact"]}
+
+
 def _nomad_entries(W: int, fast: bool = False) -> list[dict]:
     entries = []
     env = dict(os.environ)
@@ -332,7 +371,8 @@ def check_regression(threshold: float | None = None) -> list[str]:
         threshold = float(os.environ.get(
             "REPRO_BENCH_REGRESSION_PCT", "30")) / 100.0
     hist = _load_history()["history"]
-    regressions = _check_canary(hist) + _check_ingest(hist)
+    regressions = (_check_canary(hist) + _check_ingest(hist)
+                   + _check_recovery(hist))
     if len(hist) < 2:
         return regressions
     if hist[-2].get("timing") != hist[-1].get("timing"):
@@ -467,6 +507,44 @@ def _check_ingest(hist: list[dict]) -> list[str]:
     return []
 
 
+def _check_recovery(hist: list[dict]) -> list[str]:
+    """Recovery-overhead gate (DESIGN.md §11): in the latest snapshot,
+    the kill + corrupt-newest-slot + fallback-resume wall-clock must not
+    exceed the uninterrupted run by more than REPRO_BENCH_RECOVERY_PCT
+    percent (default 300).  Both legs come from the same subprocess
+    back-to-back after a shared warmup, so the ratio is immune to host
+    drift; the generous default prices the recovery leg's honest extra
+    work — it re-runs the killed sweeps plus per-sweep checkpoint IO and
+    a second cold build — while still catching structural blowups (a
+    resume that replays the whole chain from sweep 0, rotation-slot IO
+    going quadratic).  A resume that failed to fall back, or an inexact
+    recovered chain (also an ERROR row in the smoke grep), fails
+    outright.  Pre-recovery snapshots carry no such row and skip."""
+    threshold = float(os.environ.get(
+        "REPRO_BENCH_RECOVERY_PCT", "300")) / 100.0
+    if not hist:
+        return []
+    out = []
+    for e in hist[-1]["entries"]:
+        if e.get("path") != "recovery":
+            continue
+        tag = f"recovery W={e['W']}"
+        ratio = e["overhead_ratio"]
+        if ratio > 1.0 + threshold:
+            out.append(
+                f"{tag}: kill+fallback-resume took {e['recovery_sec']:.2f}s"
+                f" vs {e['straight_sec']:.2f}s straight "
+                f"({(ratio - 1) * 100:.0f}% overhead, same process, limit "
+                f"{threshold * 100:.0f}%; {hist[-1]['rev']})")
+        if not e.get("fell_back", True):
+            out.append(f"{tag}: resume did not fall back past the "
+                       f"corrupted newest slot ({hist[-1]['rev']})")
+        if not e.get("exact", True):
+            out.append(f"{tag}: recovered chain digest diverged from the "
+                       f"uninterrupted run ({hist[-1]['rev']})")
+    return out
+
+
 def _pad_fraction_summary(entries: list[dict]) -> str | None:
     """One-line dense-vs-ragged pad_fraction comparison at the largest B
     both layouts ran (the number `tools/ci.sh --bench-smoke` prints)."""
@@ -493,6 +571,7 @@ def run() -> list[str]:
     W = 2 if fast else 4
     entries = (_serial_entries() + _rbucket_entries(fast)
                + _ingest_entries(fast) + _nomad_entries(W, fast=fast))
+    entries.append(_recovery_entry(W, fast=fast))
     if not os.environ.get("REPRO_BENCH_SKIP_CANARY"):
         # skipping the canary skips the measurement too, not just the
         # gate — and leaves no canary entry in the snapshot to be judged
@@ -521,6 +600,23 @@ def run() -> list[str]:
                 f"ratio_4w_over_w={e['ratio_4w_over_w']:.3f};"
                 f"w={e['tokens_per_sec_w']:.0f};"
                 f"4w={e['tokens_per_sec_4w']:.0f}"))
+            continue
+        if e["path"] == "recovery":
+            out.append(row(
+                f"sweep/recovery/W{e['W']}/s{e['sweeps']}k{e['kill_at']}",
+                e["recovery_sec"] * 1e6,
+                f"straight_sec={e['straight_sec']:.3f};"
+                f"recovery_sec={e['recovery_sec']:.3f};"
+                f"overhead_ratio={e['overhead_ratio']:.2f};"
+                f"resumed_from_step={e['resumed_from_step']};"
+                f"fell_back={e['fell_back']}"))
+            if not (e.get("exact", True) and e.get("fell_back", True)):
+                # a recovered chain that forked, or a resume that never
+                # fell back past the corrupted slot, must fail the smoke
+                # grep even though the subprocess exited 0
+                out.append(row(f"sweep/recovery/W{e['W']}/ERROR", -1.0,
+                               "chain_forked" if not e.get("exact", True)
+                               else "no_fallback"))
             continue
         tag = (f"sweep/{e['path']}/{e['backend']}"
                + (f"/{e['r_mode']}/cap{e['r_cap']}"

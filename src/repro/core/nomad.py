@@ -64,6 +64,7 @@ dense and ragged execution all bit-identical over the same layout.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 from dataclasses import dataclass
 from typing import Sequence
@@ -801,8 +802,11 @@ class NomadLDA:
     r_cap: int = 0                 # compaction capacity (0 → T; the layout's
                                    #   T_d_max bound is ``layout.r_cap``)
     checkpoint_every: int | None = None  # sweeps between chain checkpoints
-    checkpoint_path: str | None = None   # where ``run`` writes them
+    checkpoint_path: str | None = None   # ``.npz`` = single file; else a
+                                         #   CheckpointRotation directory
     resume_from: str | None = None       # chain checkpoint ``run`` loads
+                                         #   (same file-vs-directory rule)
+    checkpoint_keep: int = 3             # rotation slots kept (dirs only)
 
     def __post_init__(self):
         lay = self.layout
@@ -1090,19 +1094,35 @@ class NomadLDA:
         return arrays, int(meta["next_seed"])
 
     def save_checkpoint(self, path: str, arrays: dict, *,
-                        next_seed: int) -> None:
+                        next_seed: int) -> str:
+        """Checkpoint the chain to ``path`` → the written file.  A path
+        ending ``.npz`` is the legacy single-file store; anything else is
+        a :class:`repro.train.checkpoint.CheckpointRotation` directory
+        (slot step = ``next_seed``, keeping ``checkpoint_keep`` slots)."""
         from repro.train import checkpoint
         state, meta = self.export_chain_state(arrays, next_seed=next_seed)
-        checkpoint.save_chain(path, state, meta)
+        if path.endswith(".npz"):
+            return checkpoint.save_chain(path, state, meta)
+        rot = checkpoint.CheckpointRotation(path, keep=self.checkpoint_keep)
+        return rot.save(state, meta, step=next_seed)
 
     def load_checkpoint(self, path: str):
+        """Inverse of :meth:`save_checkpoint`: a ``.npz`` path loads that
+        file; a directory loads the newest *valid* rotation slot —
+        damaged slots are skipped (DESIGN.md §11 self-healing fallback),
+        and the resumed chain is bit-exact from the slot's sweep."""
         from repro.train import checkpoint
-        state, meta = checkpoint.load_chain(path)
+        if path.endswith(".npz"):
+            state, meta = checkpoint.load_chain(path)
+        else:
+            rot = checkpoint.CheckpointRotation(
+                path, keep=self.checkpoint_keep)
+            state, meta, _ = rot.load_latest_valid()
         return self.restore_chain_state(state, meta)
 
     def run(self, n_sweeps: int, *, init_seed: int = 0, on_sweep=None,
             publish_every: int | None = None,
-            on_publish=None) -> tuple[dict, int]:
+            on_publish=None, fault_plan=None) -> tuple[dict, int]:
         """Drive the chain to ``n_sweeps`` total sweeps, checkpointing
         every ``checkpoint_every`` sweeps (resuming from ``resume_from``
         if set) → ``(arrays, sweeps_done)``.  Sweep ``s`` always runs with
@@ -1115,7 +1135,17 @@ class NomadLDA:
         ``on_publish`` — typically ``LdaEngine.publish`` — so readers get
         fresh topics while the ring keeps training.  Publishing reads the
         chain but never writes it: a run with and without the hook is
-        bit-identical."""
+        bit-identical.
+
+        ``fault_plan`` (a :class:`repro.fault.FaultPlan`) is installed
+        for the duration of the loop (DESIGN.md §11).  Sites fired per
+        sweep ``s``: ``"trainer.publish"`` (index ``s``, before a
+        scheduled publish — ``drop`` skips it, ``delay`` stalls it),
+        ``"chain.write"`` (inside the checkpoint write, so ``corrupt`` /
+        ``truncate`` land on the slot just written) and
+        ``"trainer.sweep"`` (index ``s``, *after* the checkpoint — the
+        kill-after-checkpoint preemption the chaos harness replays)."""
+        from repro import fault
         if publish_every is not None:
             if publish_every < 1:
                 raise ValueError(
@@ -1123,21 +1153,26 @@ class NomadLDA:
             if on_publish is None:
                 raise ValueError("publish_every needs an on_publish "
                                  "callback to hand snapshots to")
-        if self.resume_from:
-            arrays, start = self.load_checkpoint(self.resume_from)
-        else:
-            arrays = self.init_arrays(seed=init_seed)
-            start = 0
-        for s in range(start, n_sweeps):
-            arrays = self.sweep(arrays, seed=s)
-            if on_sweep is not None:
-                on_sweep(s, arrays)
-            if publish_every and (s + 1) % publish_every == 0:
-                jax.block_until_ready(arrays["n_t"])
-                on_publish(self.export_phi_snapshot(arrays, sweep=s + 1))
-            if (self.checkpoint_every
-                    and (s + 1) % self.checkpoint_every == 0):
-                jax.block_until_ready(arrays["n_t"])
-                self.save_checkpoint(self.checkpoint_path, arrays,
-                                     next_seed=s + 1)
+        with fault.install(fault_plan) if fault_plan is not None \
+                else contextlib.nullcontext():
+            if self.resume_from:
+                arrays, start = self.load_checkpoint(self.resume_from)
+            else:
+                arrays = self.init_arrays(seed=init_seed)
+                start = 0
+            for s in range(start, n_sweeps):
+                arrays = self.sweep(arrays, seed=s)
+                if on_sweep is not None:
+                    on_sweep(s, arrays)
+                if publish_every and (s + 1) % publish_every == 0:
+                    jax.block_until_ready(arrays["n_t"])
+                    if "drop" not in fault.fire("trainer.publish", index=s):
+                        on_publish(
+                            self.export_phi_snapshot(arrays, sweep=s + 1))
+                if (self.checkpoint_every
+                        and (s + 1) % self.checkpoint_every == 0):
+                    jax.block_until_ready(arrays["n_t"])
+                    self.save_checkpoint(self.checkpoint_path, arrays,
+                                         next_seed=s + 1)
+                fault.fire("trainer.sweep", index=s)
         return arrays, n_sweeps

@@ -1,0 +1,11 @@
+"""Deterministic fault injection + the typed failure-path exceptions
+(DESIGN.md §11).  See :mod:`repro.fault.plan` for the fault model and
+the list of runtime injection sites."""
+from repro.fault.errors import (EngineOverloadedError, FormatVersionError,
+                                InjectedKill, SnapshotCorruptError,
+                                StaleGenerationError)
+from repro.fault.plan import FaultPlan, FaultSpec, active, fire, install
+
+__all__ = ["FaultPlan", "FaultSpec", "install", "active", "fire",
+           "SnapshotCorruptError", "FormatVersionError",
+           "StaleGenerationError", "EngineOverloadedError", "InjectedKill"]

@@ -1,0 +1,449 @@
+"""Chaos harness: the failure model of DESIGN.md §11, replayed from a
+seeded :class:`repro.fault.FaultPlan`.
+
+Trainer story (extends ``resume_check``): run the ring with a rotating
+checkpoint directory while the fault injector corrupts the newest slot
+and then kills the process (``os._exit(137)``, the real preemption);
+the resume must fall back to the previous *valid* rotation slot and the
+finished chain's digest must be bit-identical to an uninterrupted run.
+Subprocess phases::
+
+    --phase straight   run ``--sweeps`` uninterrupted, print chain digest
+    --phase train      checkpoint every sweep into ``--ckpt`` (a rotation
+                       directory), corrupt the slot written at sweep
+                       ``--kill-at`` (``--corrupt-newest``), then die hard
+    --phase resume     resume from the newest valid slot, run to
+                       ``--sweeps``, print chain digest + fallback story
+    --phase matrix     the same comparison in-process across damage kinds
+                       {none, corrupt, truncate}, soft kills
+    --phase recovery   timed: wall-clock of the uninterrupted run vs the
+                       full kill + corrupt-newest-slot + fallback-resume
+                       path, back-to-back in one process (the
+                       ``sweep_bench`` ``recovery`` row)
+
+Serving story (``--phase serve``): a publisher thread feeds an
+:class:`LdaEngine` a scripted mix of good, corrupt, stale-generation and
+format-skewed snapshots while reader threads flood it with queries
+behind admission control.  The audit asserts every answer folded against
+an *accepted* ``(generation, digest)`` pair, every bad publish was
+refused with the right typed error, overload shed rather than queueing
+unboundedly (``max_pending_seen`` ≤ the bound, shed > 0, degraded > 0)
+and accepted-query p99 stayed within ``REPRO_CHAOS_P99_RATIO`` × median.
+A fetch-retry sub-check replays transient fetch failures through
+:func:`fetch_snapshot`'s backoff loop.
+
+Sets ``XLA_FLAGS`` *before* importing jax and prints a JSON report as
+the last stdout line, like the other ``launch/*_check`` harnesses; exits
+nonzero unless every check passes.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import threading
+
+
+def _parse(argv):
+    p = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    p.add_argument("--phase", default="matrix",
+                   choices=["straight", "train", "resume", "matrix",
+                            "recovery", "serve"])
+    p.add_argument("--n-devices", type=int, default=4)
+    p.add_argument("--sync-mode", default="stoken")
+    p.add_argument("--inner-mode", default="scan")
+    p.add_argument("--n-blocks", type=int, default=0, help="0 → n_devices")
+    p.add_argument("--ring-mode", default="barrier")
+    p.add_argument("--layout", default="dense", choices=["dense", "ragged"])
+    p.add_argument("--doc-tile", type=int, default=0)
+    p.add_argument("--r-mode", default="dense", choices=["dense", "sparse"])
+    p.add_argument("--sweeps", type=int, default=5)
+    p.add_argument("--kill-at", type=int, default=3,
+                   help="train phase: die after this many sweeps")
+    p.add_argument("--ckpt", default="",
+                   help="rotation directory (train/resume phases)")
+    p.add_argument("--keep", type=int, default=3,
+                   help="rotation slots kept")
+    p.add_argument("--corrupt-newest", action="store_true",
+                   help="train phase: corrupt the newest slot before dying")
+    p.add_argument("--fault-seed", type=int, default=0)
+    p.add_argument("--fast", action="store_true",
+                   help="serve/matrix: smaller schedule")
+    # serve-phase knobs
+    p.add_argument("--flood-threads", type=int, default=8)
+    p.add_argument("--flood-queries", type=int, default=20,
+                   help="queries per flood thread")
+    p.add_argument("--max-pending", type=int, default=2)
+    p.add_argument("--degrade-pending", type=int, default=1)
+    return p.parse_args(argv)
+
+
+def _trainer_plan(args):
+    """The seeded trainer fault schedule: corrupt the slot written at
+    sweep ``kill_at`` (chain.write fires once per checkpoint, so with
+    checkpoint_every=1 write index == sweep index), then a hard kill."""
+    from repro.fault import FaultPlan, FaultSpec
+    specs = [FaultSpec("kill", "trainer.sweep", at=args.kill_at - 1,
+                       hard=True)]
+    if args.corrupt_newest:
+        specs.insert(0, FaultSpec("corrupt", "chain.write",
+                                  at=args.kill_at - 1, nbytes=4))
+    return FaultPlan(specs, seed=args.fault_seed)
+
+
+# ---------------------------------------------------------------------------
+# Trainer phases (kill + corruption → rotation fallback → bit-exact).
+# ---------------------------------------------------------------------------
+def _run_straight(args) -> dict:
+    from repro.launch.resume_check import _build, chain_digest
+    lda = _build(args, layout_kind=args.layout, ring_mode=args.ring_mode,
+                 r_mode=args.r_mode)
+    arrays, done = lda.run(args.sweeps, init_seed=0)
+    return {"phase": "straight", "sweeps": done,
+            "digest": chain_digest(lda, arrays)}
+
+
+def _run_train(args) -> dict:
+    from repro.launch.resume_check import _build
+    lda = _build(args, layout_kind=args.layout, ring_mode=args.ring_mode,
+                 r_mode=args.r_mode, ckpt_every=1, ckpt_path=args.ckpt)
+    lda.checkpoint_keep = args.keep
+    # hard kill: this call never returns past sweep kill_at-1
+    lda.run(args.sweeps, init_seed=0, fault_plan=_trainer_plan(args))
+    return {"phase": "train", "error": "plan did not kill the run"}
+
+
+def _run_resume(args) -> dict:
+    from repro.launch.resume_check import _build, chain_digest
+    from repro.train.checkpoint import CheckpointRotation
+    rot = CheckpointRotation(args.ckpt, keep=args.keep)
+    slots = [s for s, _ in rot.slots()]
+    _, _, chosen = rot.load_latest_valid()
+    lda = _build(args, layout_kind=args.layout, ring_mode=args.ring_mode,
+                 r_mode=args.r_mode, resume_from=args.ckpt)
+    lda.checkpoint_keep = args.keep
+    arrays, done = lda.run(args.sweeps)
+    return {"phase": "resume", "sweeps": done,
+            "digest": chain_digest(lda, arrays),
+            "slots": slots, "last_good": rot.last_good(),
+            "resumed_from_step": chosen,
+            "fell_back": chosen < max(slots)}
+
+
+def _run_matrix(args) -> dict:
+    """In-process kill+damage → fallback-resume → bit-exact, across
+    damage kinds.  Soft kills (InjectedKill) stand in for the subprocess
+    phases' SIGKILL; the checkpoint state on disk is identical."""
+    from repro.fault import FaultPlan, FaultSpec, InjectedKill
+    from repro.launch.resume_check import _build, chain_digest
+    from repro.train.checkpoint import CheckpointRotation
+
+    lda_ref = _build(args, layout_kind=args.layout,
+                     ring_mode=args.ring_mode, r_mode=args.r_mode)
+    arrays, _ = lda_ref.run(args.sweeps, init_seed=0)
+    ref = chain_digest(lda_ref, arrays)
+
+    damages = ("none", "corrupt") if args.fast else ("none", "corrupt",
+                                                     "truncate")
+    combos, ok = [], True
+    for damage in damages:
+        tmpd = tempfile.mkdtemp(prefix=f"chaos-{damage}-")
+        specs = [FaultSpec("kill", "trainer.sweep", at=args.kill_at - 1)]
+        if damage == "corrupt":
+            specs.insert(0, FaultSpec("corrupt", "chain.write",
+                                      at=args.kill_at - 1, nbytes=4))
+        elif damage == "truncate":
+            specs.insert(0, FaultSpec("truncate", "chain.write",
+                                      at=args.kill_at - 1, frac=0.5))
+        plan = FaultPlan(specs, seed=args.fault_seed)
+
+        lda = _build(args, layout_kind=args.layout,
+                     ring_mode=args.ring_mode, r_mode=args.r_mode,
+                     ckpt_every=1, ckpt_path=tmpd)
+        lda.checkpoint_keep = args.keep
+        killed = False
+        try:
+            lda.run(args.sweeps, init_seed=0, fault_plan=plan)
+        except InjectedKill:
+            killed = True
+
+        rot = CheckpointRotation(tmpd, keep=args.keep)
+        slots = [s for s, _ in rot.slots()]
+        _, _, chosen = rot.load_latest_valid()
+        lda2 = _build(args, layout_kind=args.layout,
+                      ring_mode=args.ring_mode, r_mode=args.r_mode,
+                      resume_from=tmpd)
+        arrays2, _ = lda2.run(args.sweeps)
+        got = chain_digest(lda2, arrays2)
+
+        fell_back = chosen < max(slots)
+        combo_ok = (killed and got == ref
+                    and fell_back == (damage != "none"))
+        ok &= combo_ok
+        combos.append({"damage": damage, "killed": killed,
+                       "slots": slots, "resumed_from_step": chosen,
+                       "fell_back": fell_back, "exact": got == ref,
+                       "ok": combo_ok,
+                       "fault_log": [list(e) for e in plan.log]})
+    return {"phase": "matrix", "straight_digest": ref, "combos": combos,
+            "all_ok": ok}
+
+
+def _run_recovery(args) -> dict:
+    """Timed recovery story for the bench harness (``sweep_bench``'s
+    ``recovery`` row): wall-clock of an uninterrupted ``--sweeps`` run vs
+    the whole kill path — train with a rotating checkpoint directory,
+    corrupt the newest slot, die at ``--kill-at``, rebuild, fall back to
+    the previous valid slot and finish.  An untimed straight leg runs
+    first to eat the initial XLA compile, then both timed legs run
+    back-to-back in this process, so their ratio cancels host speed
+    (the interleaved-measurement story of ``lda_canary_check``)."""
+    import shutil
+    import time
+
+    from repro.fault import FaultPlan, FaultSpec, InjectedKill
+    from repro.launch.resume_check import _build, chain_digest
+    from repro.train.checkpoint import CheckpointRotation
+
+    kw = dict(layout_kind=args.layout, ring_mode=args.ring_mode,
+              r_mode=args.r_mode)
+
+    def straight():
+        lda = _build(args, **kw)
+        arrays, _ = lda.run(args.sweeps, init_seed=0)
+        return chain_digest(lda, arrays)
+
+    ref = straight()                      # warmup leg: first compile
+    t0 = time.perf_counter()
+    ref2 = straight()
+    straight_sec = time.perf_counter() - t0
+
+    tmpd = tempfile.mkdtemp(prefix="chaos-recovery-")
+    plan = FaultPlan(
+        [FaultSpec("corrupt", "chain.write", at=args.kill_at - 1,
+                   nbytes=4),
+         FaultSpec("kill", "trainer.sweep", at=args.kill_at - 1)],
+        seed=args.fault_seed)
+    killed = False
+    t0 = time.perf_counter()
+    lda = _build(args, ckpt_every=1, ckpt_path=tmpd, **kw)
+    lda.checkpoint_keep = args.keep
+    try:
+        lda.run(args.sweeps, init_seed=0, fault_plan=plan)
+    except InjectedKill:
+        killed = True
+    rot = CheckpointRotation(tmpd, keep=args.keep)
+    slots = [s for s, _ in rot.slots()]
+    _, _, chosen = rot.load_latest_valid()
+    lda2 = _build(args, resume_from=tmpd, **kw)
+    arrays2, _ = lda2.run(args.sweeps)
+    got = chain_digest(lda2, arrays2)
+    recovery_sec = time.perf_counter() - t0
+    shutil.rmtree(tmpd, ignore_errors=True)
+
+    fell_back = chosen < max(slots)
+    exact = got == ref and ref2 == ref
+    return {"phase": "recovery", "sweeps": args.sweeps,
+            "kill_at": args.kill_at, "straight_sec": straight_sec,
+            "recovery_sec": recovery_sec,
+            "overhead_ratio": recovery_sec / max(straight_sec, 1e-9),
+            "slots": slots, "resumed_from_step": chosen,
+            "fell_back": fell_back, "killed": killed, "exact": exact,
+            "all_ok": killed and exact and fell_back}
+
+
+# ---------------------------------------------------------------------------
+# Serving phase (bad publishes + query flood behind admission control).
+# ---------------------------------------------------------------------------
+def _run_serve(args) -> dict:
+    import time
+
+    import jax
+    import numpy as np
+
+    from repro import fault
+    from repro.fault import FaultPlan, FaultSpec
+    from repro.launch.serve_check import _build_trainer, _doc_pool
+    from repro.serve.lda_engine import (EngineOverloadedError,
+                                        FormatVersionError, LdaEngine,
+                                        PhiSnapshot, SnapshotCorruptError,
+                                        StaleGenerationError, TopicQuery,
+                                        fetch_snapshot)
+
+    lda, corpus = _build_trainer(args)
+
+    # pre-train the publish schedule: one good snapshot per sweep
+    n_good = 3 if args.fast else 5
+    arrays = lda.init_arrays(seed=0)
+    snaps = [lda.export_phi_snapshot(arrays, sweep=0)]
+    for s in range(n_good):
+        arrays = lda.sweep(arrays, seed=s)
+        jax.block_until_ready(arrays["n_t"])
+        snaps.append(lda.export_phi_snapshot(arrays, sweep=s + 1))
+
+    engine = LdaEngine(snapshot=snaps[0], sweeps=8, tile=4, max_batch=8,
+                       max_pending=args.max_pending,
+                       degrade_pending=args.degrade_pending,
+                       degraded_sweeps=2)
+    accepted = {1: snaps[0].digest}     # generation -> digest
+    pub_lock = threading.Lock()
+    rejected = {"corrupt": 0, "stale": 0, "format": 0, "unexpected": 0}
+    rng = np.random.default_rng(args.fault_seed)
+
+    def tampered(snap):
+        """Flip one φ value but keep the original meta digest — the
+        mid-flight corruption publish must refuse."""
+        phi = np.array(snap.phi)
+        j, t = rng.integers(phi.shape[0]), rng.integers(phi.shape[1])
+        phi[j, t] += 0.125
+        return PhiSnapshot(phi=phi, meta=dict(snap.meta))
+
+    def skewed(snap):
+        meta = dict(snap.meta)
+        meta["format_version"] = meta["format_version"] + 1
+        return PhiSnapshot(phi=snap.phi, meta=meta)
+
+    pub_errors = []
+
+    def publisher():
+        try:
+            for i, snap in enumerate(snaps[1:], start=1):
+                # a scripted bad publish before every good one
+                bad_kind = ("corrupt", "stale", "format")[i % 3]
+                try:
+                    if bad_kind == "corrupt":
+                        engine.publish(tampered(snap))
+                    elif bad_kind == "stale":
+                        engine.publish(snaps[i - 1])   # sweep regresses
+                    else:
+                        engine.publish(skewed(snap))
+                    rejected["unexpected"] += 1        # publish succeeded!?
+                except SnapshotCorruptError:
+                    rejected["corrupt"] += 1
+                except StaleGenerationError:
+                    rejected["stale"] += 1
+                except FormatVersionError:
+                    rejected["format"] += 1
+                gen = engine.publish(snap)
+                with pub_lock:
+                    accepted[gen] = snap.digest
+                time.sleep(0.02)
+        except BaseException as e:
+            pub_errors.append(repr(e))
+
+    pool = _doc_pool(corpus, 8)
+    docs = tuple(pool[2:5])
+    # warm both jit variants (full and degraded sweep counts) so the
+    # flood measures serving latency, not compilation
+    engine.query(TopicQuery(docs=docs))
+    engine.query(TopicQuery(docs=docs, sweeps=engine.degraded_sweeps))
+
+    answers, sheds, reader_errors = [], [0] * args.flood_threads, []
+    ans_lock = threading.Lock()
+
+    def reader(tid):
+        try:
+            for i in range(args.flood_queries):
+                try:
+                    res = engine.query(TopicQuery(
+                        docs=docs, key=jax.random.key(tid * 1000 + i)))
+                except EngineOverloadedError:
+                    sheds[tid] += 1
+                    continue
+                with ans_lock:
+                    answers.append({"generation": res.generation,
+                                    "digest": res.digest,
+                                    "latency_s": res.latency_s,
+                                    "degraded": res.degraded,
+                                    "sweeps_used": res.sweeps_used})
+        except BaseException as e:
+            reader_errors.append(repr(e))
+
+    pub = threading.Thread(target=publisher, daemon=True)
+    readers = [threading.Thread(target=reader, args=(t,), daemon=True)
+               for t in range(args.flood_threads)]
+    pub.start()
+    for th in readers:
+        th.start()
+    pub.join()
+    for th in readers:
+        th.join()
+
+    # ---- audit ----------------------------------------------------------
+    invalid_gen = sum(1 for a in answers
+                      if accepted.get(a["generation"]) != a["digest"])
+    stats = engine.stats()
+    lat = sorted(a["latency_s"] for a in answers)
+    p50 = lat[len(lat) // 2] if lat else 0.0
+    p99 = lat[min(len(lat) - 1, int(len(lat) * 0.99))] if lat else 0.0
+    p99_ratio_cap = float(os.environ.get("REPRO_CHAOS_P99_RATIO", "80"))
+    p99_ok = p99 <= p99_ratio_cap * max(p50, 1e-9)
+
+    # fetch retry: the first two fetch attempts fail by plan, the third
+    # succeeds — bounded backoff turns transient damage into a result
+    fetch_dir = tempfile.mkdtemp(prefix="chaos-fetch-")
+    fetch_path = os.path.join(fetch_dir, "phi.npz")
+    snaps[-1].save(fetch_path)
+    plan = FaultPlan([FaultSpec("fail", "serve.fetch", at=0, count=2)],
+                     seed=args.fault_seed)
+    with fault.install(plan):
+        fetched = fetch_snapshot(fetch_path, retries=3, backoff_s=1e-4)
+    fetch_ok = (fetched.digest == snaps[-1].digest
+                and len(plan.log) == 2)
+
+    total_shed = sum(sheds)
+    ok = (invalid_gen == 0
+          and not pub_errors and not reader_errors
+          and rejected["corrupt"] > 0 and rejected["stale"] > 0
+          and rejected["format"] > 0 and rejected["unexpected"] == 0
+          and stats["rejected_publishes"] >= sum(
+              rejected[k] for k in ("corrupt", "stale", "format"))
+          and total_shed > 0 and stats["shed"] == total_shed
+          and stats["degraded"] > 0
+          and stats["max_pending_seen"] <= args.max_pending
+          and stats["pending"] == 0
+          and len(accepted) == n_good + 1
+          and fetch_ok and p99_ok)
+    return {"phase": "serve", "publishes_accepted": len(accepted),
+            "publishes_rejected": rejected, "queries": len(answers),
+            "shed": total_shed, "stats": stats,
+            "generations_seen": sorted({a["generation"] for a in answers}),
+            "invalid_generation_answers": invalid_gen,
+            "degraded_answers": sum(a["degraded"] for a in answers),
+            "latency_p50_s": p50, "latency_p99_s": p99, "p99_ok": p99_ok,
+            "fetch_retry_ok": fetch_ok,
+            "publisher_error": pub_errors[0] if pub_errors else None,
+            "reader_error": reader_errors[0] if reader_errors else None,
+            "all_ok": ok}
+
+
+def main(argv=None) -> None:
+    args = _parse(sys.argv[1:] if argv is None else argv)
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={args.n_devices} "
+        + os.environ.get("XLA_FLAGS", ""))
+
+    if args.phase in ("train", "resume") and not args.ckpt:
+        raise SystemExit("--ckpt is required for train/resume phases")
+
+    if args.phase == "straight":
+        report = _run_straight(args)
+    elif args.phase == "train":
+        report = _run_train(args)       # normally never returns (kill)
+    elif args.phase == "resume":
+        report = _run_resume(args)
+    elif args.phase == "recovery":
+        report = _run_recovery(args)
+    elif args.phase == "serve":
+        report = _run_serve(args)
+    else:
+        report = _run_matrix(args)
+    print(json.dumps(report))
+    if not report.get("all_ok", True):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -22,6 +22,20 @@ owns a *frozen* posterior-mean φ table.  Three pieces:
   ``NomadLDA.run(publish_every=...)`` ring keeps publishing.  Every
   answer carries the generation and digest it folded against, which is
   what ``launch/serve_check.py`` audits for torn reads.
+
+Failure model (DESIGN.md §11): ``publish`` is the integrity gate — a
+corrupt table raises :class:`SnapshotCorruptError`, a version skew
+:class:`FormatVersionError`, and a snapshot whose source generation
+(``meta["sweep"]``/``meta["generation"]``) would move the engine
+*backwards* :class:`StaleGenerationError`; the live buffer keeps serving
+through all three.  ``query`` runs behind admission control: a bounded
+in-flight count sheds excess load (:class:`EngineOverloadedError`)
+instead of queueing unboundedly, and a softer threshold degrades
+answers (capped fold-in sweeps) before shedding starts — p99 stays
+bounded because the engine refuses work it cannot finish in time.
+:func:`fetch_snapshot` is the reader-side loader: bounded retry with
+exponential backoff around transient damage (a publisher mid-write),
+never around version skew.
 """
 from __future__ import annotations
 
@@ -37,11 +51,16 @@ import numpy as np
 from repro.core.heldout import (_phi_hat, doc_fold_key, fold_in_batch,
                                 theta_from_counts)
 from repro.data.sharding import _pow2_ceil
+from repro.fault import fire as _fault_fire
+from repro.fault.errors import (EngineOverloadedError, FormatVersionError,
+                                SnapshotCorruptError, StaleGenerationError)
 from repro.train.checkpoint import (PHI_FORMAT_VERSION, load_phi, phi_digest,
                                     save_phi)
 
 __all__ = ["PhiSnapshot", "snapshot_from_counts", "pack_docs",
-           "TopicQuery", "TopicResult", "LdaEngine"]
+           "TopicQuery", "TopicResult", "LdaEngine", "fetch_snapshot",
+           "SnapshotCorruptError", "FormatVersionError",
+           "StaleGenerationError", "EngineOverloadedError"]
 
 
 # ---------------------------------------------------------------------------
@@ -88,6 +107,39 @@ def snapshot_from_counts(n_wt, n_t, *, alpha: float, beta: float,
                 J=int(phi.shape[0]), T=int(phi.shape[1]),
                 digest=phi_digest(phi))
     return PhiSnapshot(phi=phi, meta=meta)
+
+
+def fetch_snapshot(path: str, *, retries: int = 3, backoff_s: float = 0.05,
+                   max_backoff_s: float = 1.0,
+                   sleep=time.sleep) -> PhiSnapshot:
+    """Load a φ snapshot with bounded retry + exponential backoff
+    (DESIGN.md §11) — the reader-side fetch a serving fleet points at a
+    trainer's publish directory.
+
+    Retried: ``FileNotFoundError`` (not published yet) and
+    :class:`SnapshotCorruptError` (a publisher mid-write, a torn copy —
+    transient by assumption, up to ``retries`` extra attempts, backoff
+    doubling from ``backoff_s`` and capped at ``max_backoff_s``).
+    **Never** retried: :class:`FormatVersionError` — a version skew is a
+    deployment bug, and hammering the file cannot fix it.  Each attempt
+    fires the ``"serve.fetch"`` fault site (counter-indexed across
+    calls), which is how the chaos harness makes the first N fetches
+    fail deterministically."""
+    if retries < 0:
+        raise ValueError(f"retries must be >= 0, got {retries}")
+    delay = backoff_s
+    for attempt in range(retries + 1):
+        try:
+            _fault_fire("serve.fetch", path=path)
+            return PhiSnapshot.load(path)
+        except FormatVersionError:
+            raise
+        except (FileNotFoundError, SnapshotCorruptError):
+            if attempt == retries:
+                raise
+            sleep(delay)
+            delay = min(delay * 2, max_backoff_s)
+    raise AssertionError("unreachable")
 
 
 # ---------------------------------------------------------------------------
@@ -141,13 +193,20 @@ class TopicQuery:
 @dataclasses.dataclass(frozen=True)
 class TopicResult:
     """θ rows for the query's documents plus the provenance needed to
-    audit exactly which snapshot answered: generation + digest."""
+    audit exactly which snapshot answered: generation + digest — and,
+    under admission control, the load story (how many sweeps actually
+    ran, whether this answer was degraded, cumulative shed/degraded
+    counts at answer time)."""
     theta: np.ndarray        # (len(docs), T) f32, rows sum to 1
     n_td: np.ndarray         # (len(docs), T) int32 fold-in counts
     generation: int
     digest: str
     latency_s: float
     batch_shape: tuple       # padded (D_pad, L) actually swept
+    sweeps_used: int = 0     # fold-in sweeps this answer ran
+    degraded: bool = False   # True → sweeps were capped under overload
+    shed_total: int = 0      # engine-lifetime queries shed so far
+    degraded_total: int = 0  # engine-lifetime degraded answers so far
 
 
 @dataclasses.dataclass(frozen=True)
@@ -161,6 +220,8 @@ class _Buffer:
     generation: int
     digest: str
     meta: dict
+    source: int | None = None  # trainer-side generation (meta sweep), the
+                               #   monotonicity guard's comparison key
 
 
 # ---------------------------------------------------------------------------
@@ -181,61 +242,116 @@ class LdaEngine:
     reference read and use only that object, so a concurrent publish can
     reorder *which* snapshot answered but never mix two snapshots inside
     one answer.
+
+    Admission control (DESIGN.md §11): ``max_pending`` bounds concurrent
+    in-flight queries — excess load raises
+    :class:`EngineOverloadedError` (shedding) instead of queueing
+    unboundedly, which is what keeps p99 bounded under a flood.
+    ``degrade_pending`` is the softer threshold: above it, answers still
+    complete but with fold-in sweeps capped at ``degraded_sweeps``
+    (graceful degradation before shedding).  Both default to ``None`` —
+    no admission control, the pre-§11 behavior.
     """
 
     def __init__(self, snapshot: PhiSnapshot | None = None, *,
                  sweeps: int = 20, tile: int = 8, max_batch: int = 64,
-                 default_key=None):
+                 default_key=None, max_pending: int | None = None,
+                 degrade_pending: int | None = None,
+                 degraded_sweeps: int = 4):
         if sweeps < 1:
             raise ValueError(f"sweeps must be >= 1, got {sweeps}")
         if max_batch < 1 or max_batch & (max_batch - 1):
             raise ValueError(
                 f"max_batch must be a power of two (jit-cache bucketing), "
                 f"got {max_batch}")
+        if max_pending is not None and max_pending < 1:
+            raise ValueError(f"max_pending must be >= 1, got {max_pending}")
+        if degrade_pending is not None and degrade_pending < 1:
+            raise ValueError(
+                f"degrade_pending must be >= 1, got {degrade_pending}")
+        if degraded_sweeps < 1:
+            raise ValueError(
+                f"degraded_sweeps must be >= 1, got {degraded_sweeps}")
         self.sweeps = int(sweeps)
         self.tile = int(tile)
         self.max_batch = int(max_batch)
+        self.max_pending = max_pending
+        self.degrade_pending = degrade_pending
+        self.degraded_sweeps = int(degraded_sweeps)
         self._default_key = (jax.random.key(0) if default_key is None
                              else default_key)
         self._publish_lock = threading.Lock()
+        self._stats_lock = threading.Lock()
         self._buf: _Buffer | None = None
         self._queries = 0
+        self._pending = 0
+        self._shed = 0
+        self._degraded = 0
+        self._rejected_publishes = 0
+        self._max_pending_seen = 0
         if snapshot is not None:
             self.publish(snapshot)
 
     # -- publish side ------------------------------------------------------
+    def _reject(self, exc: Exception):
+        with self._stats_lock:
+            self._rejected_publishes += 1
+        raise exc
+
     def publish(self, snapshot: PhiSnapshot) -> int:
         """Install a new φ buffer; returns its generation.
 
-        Refuses format-version mismatches, geometry changes against the
-        live buffer (a serving vocabulary cannot silently resize), and
-        digest-mismatched tables.  The device transfer happens *before*
-        the swap, so readers never wait on it.
+        The integrity gate (DESIGN.md §11) — refuses, leaving the live
+        buffer serving:
+
+        * format-version mismatches (:class:`FormatVersionError`);
+        * digest-mismatched tables (:class:`SnapshotCorruptError` — a
+          corrupt φ must never reach readers);
+        * geometry changes against the live buffer (``ValueError`` — a
+          serving vocabulary cannot silently resize);
+        * source-generation regressions (:class:`StaleGenerationError`):
+          when both the live buffer's and the candidate's meta carry a
+          trainer-side ordinal (``sweep``, else ``generation``), a
+          candidate at or behind the live one is refused — a delayed or
+          replayed publish cannot move readers backwards in time.
+
+        The device transfer happens *before* the swap, so readers never
+        wait on it.
         """
         ver = snapshot.meta.get("format_version")
         if ver != PHI_FORMAT_VERSION:
-            raise ValueError(
+            self._reject(FormatVersionError(
                 f"refusing φ snapshot format v{ver}; this engine serves "
-                f"v{PHI_FORMAT_VERSION}")
+                f"v{PHI_FORMAT_VERSION}"))
         phi = np.asarray(snapshot.phi, np.float32)
         if phi.ndim != 2:
-            raise ValueError(f"φ must be (J, T); got shape {phi.shape}")
+            self._reject(SnapshotCorruptError(
+                f"φ must be (J, T); got shape {phi.shape}"))
         digest = phi_digest(phi)
         if snapshot.meta.get("digest") not in (None, digest):
-            raise ValueError("φ snapshot digest mismatch — refusing to "
-                             "serve a corrupt table")
+            self._reject(SnapshotCorruptError(
+                "φ snapshot digest mismatch — refusing to serve a corrupt "
+                "table"))
+        src = snapshot.meta.get("sweep", snapshot.meta.get("generation"))
+        src = None if src is None else int(src)
         phi_dev = jax.device_put(jnp.asarray(phi))
         jax.block_until_ready(phi_dev)
         with self._publish_lock:
             cur = self._buf
             if cur is not None and cur.phi.shape != phi.shape:
-                raise ValueError(
+                self._reject(ValueError(
                     f"φ geometry change {cur.phi.shape} → {phi.shape}; "
-                    f"drain and restart the engine to resize")
+                    f"drain and restart the engine to resize"))
+            if (cur is not None and cur.source is not None
+                    and src is not None and src <= cur.source):
+                self._reject(StaleGenerationError(
+                    f"φ snapshot source generation {src} would regress the "
+                    f"live buffer's {cur.source}; refusing to move readers "
+                    f"backwards"))
             gen = 1 if cur is None else cur.generation + 1
             self._buf = _Buffer(phi=phi_dev, alpha=snapshot.alpha,
                                 generation=gen, digest=digest,
-                                meta=dict(snapshot.meta))
+                                meta=dict(snapshot.meta), source=src)
         return gen
 
     @property
@@ -244,6 +360,26 @@ class LdaEngine:
         return 0 if buf is None else buf.generation
 
     # -- query side --------------------------------------------------------
+    def _admit(self) -> bool:
+        """Count this query in → whether it must run degraded.  Raises
+        :class:`EngineOverloadedError` (shedding) when ``max_pending``
+        concurrent queries are already in flight."""
+        with self._stats_lock:
+            pending = self._pending + 1
+            if self.max_pending is not None and pending > self.max_pending:
+                self._shed += 1
+                raise EngineOverloadedError(
+                    f"engine overloaded: {self._pending} queries in flight "
+                    f"(max_pending={self.max_pending}); query shed — back "
+                    f"off and retry")
+            self._pending = pending
+            self._max_pending_seen = max(self._max_pending_seen, pending)
+            degraded = (self.degrade_pending is not None
+                        and pending > self.degrade_pending)
+            if degraded:
+                self._degraded += 1
+            return degraded
+
     def query(self, q: TopicQuery) -> TopicResult:
         buf = self._buf          # the one atomic read; pins the snapshot
         if buf is None:
@@ -260,25 +396,48 @@ class LdaEngine:
                     f"[{d.min()}, {d.max()}]")
         key = self._default_key if q.key is None else q.key
         sweeps = self.sweeps if q.sweeps is None else int(q.sweeps)
-
-        thetas, counts, shapes = [], [], []
-        for lo in range(0, len(docs), self.max_batch):
-            chunk = docs[lo:lo + self.max_batch]
-            word_ids, valid, n_real = pack_docs(chunk, tile=self.tile)
-            doc_keys = jax.vmap(doc_fold_key, in_axes=(None, 0))(
-                key, jnp.arange(lo, lo + word_ids.shape[0],
-                                dtype=jnp.int32))
-            n_td, theta = _theta_kernel(jnp.asarray(word_ids),
-                                        jnp.asarray(valid), buf.phi,
-                                        buf.alpha, doc_keys, sweeps)
-            jax.block_until_ready(theta)
-            thetas.append(np.asarray(theta)[:n_real])
-            counts.append(np.asarray(n_td)[:n_real])
-            shapes.append(word_ids.shape)
-        self._queries += 1
+        degraded = self._admit()
+        if degraded:
+            sweeps = min(sweeps, self.degraded_sweeps)
+        try:
+            thetas, counts, shapes = [], [], []
+            for lo in range(0, len(docs), self.max_batch):
+                chunk = docs[lo:lo + self.max_batch]
+                word_ids, valid, n_real = pack_docs(chunk, tile=self.tile)
+                doc_keys = jax.vmap(doc_fold_key, in_axes=(None, 0))(
+                    key, jnp.arange(lo, lo + word_ids.shape[0],
+                                    dtype=jnp.int32))
+                n_td, theta = _theta_kernel(jnp.asarray(word_ids),
+                                            jnp.asarray(valid), buf.phi,
+                                            buf.alpha, doc_keys, sweeps)
+                jax.block_until_ready(theta)
+                thetas.append(np.asarray(theta)[:n_real])
+                counts.append(np.asarray(n_td)[:n_real])
+                shapes.append(word_ids.shape)
+            with self._stats_lock:
+                self._queries += 1
+                shed_total, degraded_total = self._shed, self._degraded
+        finally:
+            with self._stats_lock:
+                self._pending -= 1
         return TopicResult(
             theta=np.concatenate(thetas, 0),
             n_td=np.concatenate(counts, 0),
             generation=buf.generation, digest=buf.digest,
             latency_s=time.perf_counter() - t0,
-            batch_shape=shapes[0] if len(shapes) == 1 else tuple(shapes))
+            batch_shape=shapes[0] if len(shapes) == 1 else tuple(shapes),
+            sweeps_used=sweeps, degraded=degraded,
+            shed_total=shed_total, degraded_total=degraded_total)
+
+    def stats(self) -> dict:
+        """Engine-lifetime load/health counters (one consistent read)."""
+        with self._stats_lock:
+            return {
+                "queries": self._queries,
+                "pending": self._pending,
+                "shed": self._shed,
+                "degraded": self._degraded,
+                "rejected_publishes": self._rejected_publishes,
+                "max_pending_seen": self._max_pending_seen,
+                "generation": self.generation,
+            }

@@ -22,6 +22,19 @@ Two stores live here:
   by ``repro.serve.lda_engine``.  Same atomic-write discipline, its own
   ``PHI_FORMAT_VERSION`` gate (a serving fleet and a trainer upgrade on
   different schedules), and an integrity digest checked on load.
+
+Failure model (DESIGN.md §11): every write is atomic (tmp + ``os.replace``)
+**and durable** (the tmp file and its directory are fsynced, so a host
+crash after the rename cannot lose the entry); every payload array gets a
+per-key sha256 in meta, verified on load.  Damage — truncation, flipped
+bytes, missing meta — surfaces as :class:`repro.fault.SnapshotCorruptError`
+and an unknown format version as :class:`repro.fault.FormatVersionError`
+(both ``ValueError`` subclasses), so recovery code can tell *skip this
+slot* from *this build cannot read the store*.  :class:`CheckpointRotation`
+turns those typed errors into self-healing: it keeps the last ``keep``
+slots plus a last-good pointer, and ``load_latest_valid`` walks slots
+newest-first past any damaged ones — the fallback ``NomadLDA.run``
+resumes from bit-exactly.
 """
 from __future__ import annotations
 
@@ -33,8 +46,13 @@ import tempfile
 import jax
 import numpy as np
 
+from repro.fault import fire as _fault_fire
+from repro.fault.errors import FormatVersionError, SnapshotCorruptError
+
 __all__ = ["save", "restore", "save_chain", "load_chain", "save_phi",
-           "load_phi", "CHAIN_FORMAT_VERSION", "PHI_FORMAT_VERSION"]
+           "load_phi", "CheckpointRotation", "CHAIN_FORMAT_VERSION",
+           "PHI_FORMAT_VERSION", "SnapshotCorruptError",
+           "FormatVersionError"]
 
 CHAIN_FORMAT_VERSION = 1
 PHI_FORMAT_VERSION = 1
@@ -79,18 +97,41 @@ _META_KEY = "__chain_meta__"
 _PHI_META_KEY = "__phi_meta__"
 
 
+def _fsync_dir(d: str) -> None:
+    """fsync a directory so a completed ``os.replace`` survives a host
+    crash (the rename itself lives in the directory's metadata)."""
+    fd = os.open(d, os.O_RDONLY | getattr(os, "O_DIRECTORY", 0))
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _array_digest(arr: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(arr).tobytes()).hexdigest()
+
+
 def _atomic_savez(path: str, payload: dict, meta: dict,
-                  meta_key: str) -> str:
-    """Write ``payload`` + JSON ``meta`` as one npz, atomically: the write
-    goes to a temp file in the destination directory and is
-    ``os.replace``d into place, so readers only ever see a complete
-    file.  Returns the final path (``.npz`` appended if missing)."""
+                  meta_key: str, *, fault_site: str | None = None) -> str:
+    """Write ``payload`` + JSON ``meta`` as one npz, atomically AND
+    durably: the write goes to a temp file in the destination directory,
+    is fsynced, ``os.replace``d into place, and the directory is fsynced
+    — so readers only ever see a complete file and a host crash at any
+    point keeps either the old entry or the new one, never neither.
+    Per-payload sha256 digests are stamped into meta
+    (``payload_sha256``), verified by the loaders.  Returns the final
+    path (``.npz`` appended if missing).  ``fault_site`` names the
+    injection site fired *after* the durable write — the hook the fault
+    layer uses to model bit rot / partial writes surfacing later."""
     if meta_key in payload:
         raise ValueError(f"state may not use the reserved key {meta_key!r}")
     if not path.endswith(".npz"):
         path = path + ".npz"
     d = os.path.dirname(path) or "."
     os.makedirs(d, exist_ok=True)
+    meta = dict(meta)
+    meta["payload_sha256"] = {k: _array_digest(np.asarray(v))
+                              for k, v in payload.items()}
     payload = dict(payload)
     payload[meta_key] = np.frombuffer(
         json.dumps(meta, sort_keys=True).encode(), np.uint8)
@@ -98,41 +139,202 @@ def _atomic_savez(path: str, payload: dict, meta: dict,
     try:
         with os.fdopen(fd, "wb") as f:
             np.savez(f, **payload)
+            f.flush()
+            os.fsync(f.fileno())
         os.replace(tmp, path)
+        _fsync_dir(d)
     except BaseException:
         if os.path.exists(tmp):
             os.unlink(tmp)
         raise
+    if fault_site is not None:
+        _fault_fire(fault_site, path=path)
     return path
 
 
-def save_chain(path: str, state: dict[str, np.ndarray], meta: dict) -> None:
-    """Atomically write a chain checkpoint (``state`` arrays + ``meta``).
+def _verify_payload_digests(path: str, state: dict, meta: dict) -> None:
+    """Check every loaded array against the per-key sha256 stamped at
+    write time (absent in pre-§11 checkpoints: nothing to verify)."""
+    want = meta.get("payload_sha256") or {}
+    for k, arr in state.items():
+        exp = want.get(k)
+        if exp is not None and _array_digest(arr) != exp:
+            raise SnapshotCorruptError(
+                f"{path}: payload {k!r} sha256 digest mismatch — corrupt "
+                f"or truncated entry")
 
-    ``meta`` must be JSON-able; ``format_version`` is stamped here.
+
+def save_chain(path: str, state: dict[str, np.ndarray], meta: dict) -> str:
+    """Atomically + durably write a chain checkpoint (``state`` arrays +
+    ``meta``) → the final path.  ``meta`` must be JSON-able;
+    ``format_version`` and per-payload digests are stamped here.
     """
     meta = dict(meta)
     meta["format_version"] = CHAIN_FORMAT_VERSION
-    _atomic_savez(path, {k: np.asarray(v) for k, v in state.items()},
-                  meta, _META_KEY)
+    return _atomic_savez(path, {k: np.asarray(v) for k, v in state.items()},
+                         meta, _META_KEY, fault_site="chain.write")
 
 
 def load_chain(path: str) -> tuple[dict[str, np.ndarray], dict]:
-    """Read a chain checkpoint; raises on unknown format versions."""
+    """Read a chain checkpoint.  Typed failure surface (DESIGN.md §11):
+    damage of any shape — truncated archive, flipped payload byte,
+    missing ``__chain_meta__``, per-payload digest mismatch — raises
+    :class:`SnapshotCorruptError`; an unknown ``format_version`` raises
+    :class:`FormatVersionError`; a missing file stays
+    ``FileNotFoundError``.  Rotation fallback skips the first kind of
+    slot and hard-stops on the second."""
     if not path.endswith(".npz"):
         path = path + ".npz"
-    with np.load(path) as data:
-        if _META_KEY not in data:
-            raise ValueError(
-                f"{path} is not a chain checkpoint (no {_META_KEY})")
-        meta = json.loads(bytes(data[_META_KEY].tobytes()).decode())
-        ver = meta.get("format_version")
-        if ver != CHAIN_FORMAT_VERSION:
-            raise ValueError(
-                f"chain checkpoint format v{ver} unsupported (this build "
-                f"reads v{CHAIN_FORMAT_VERSION})")
-        state = {k: data[k] for k in data.files if k != _META_KEY}
+    if not os.path.exists(path):
+        raise FileNotFoundError(path)
+    try:
+        with np.load(path) as data:
+            if _META_KEY not in data:
+                raise SnapshotCorruptError(
+                    f"{path} is not a chain checkpoint (no {_META_KEY})")
+            meta = json.loads(bytes(data[_META_KEY].tobytes()).decode())
+            ver = meta.get("format_version")
+            if ver != CHAIN_FORMAT_VERSION:
+                raise FormatVersionError(
+                    f"chain checkpoint format v{ver} unsupported (this "
+                    f"build reads v{CHAIN_FORMAT_VERSION})")
+            # force every member read inside the guard: a truncated zip
+            # member fails here, not at first use
+            state = {k: np.asarray(data[k]) for k in data.files
+                     if k != _META_KEY}
+    except (SnapshotCorruptError, FormatVersionError):
+        raise
+    except Exception as e:      # BadZipFile, zlib/OSError, bad JSON, ...
+        raise SnapshotCorruptError(
+            f"unreadable chain checkpoint {path}: {e!r}") from e
+    _verify_payload_digests(path, state, meta)
     return state, meta
+
+
+# ---------------------------------------------------------------------------
+# Self-healing checkpoint rotation (DESIGN.md §11).
+# ---------------------------------------------------------------------------
+class CheckpointRotation:
+    """A directory of rotating chain-checkpoint slots with a last-good
+    pointer — the multi-day-run store.
+
+    Layout: ``root/slot-{step:08d}.npz`` (``step`` = the chain's
+    ``next_seed`` at the checkpoint, i.e. sweeps completed) plus
+    ``root/LAST_GOOD`` (a JSON pointer ``{"step": ...}``, atomically
+    replaced and fsynced after every successful slot write).  The newest
+    ``keep`` slots are retained; older ones are pruned, except a slot
+    the pointer still names.
+
+    Recovery contract: the pointer is **advisory provenance** — the
+    fault model explicitly includes damage that lands *after* a durable
+    write (bit rot, a torn mirror copy), so :meth:`load_latest_valid`
+    never trusts it.  It walks the slots newest-first, returning the
+    first one ``load_chain`` fully validates (meta present, format
+    version known, every payload digest matching), and reports what it
+    skipped.  Only when every slot is damaged does it raise
+    :class:`SnapshotCorruptError`; a :class:`FormatVersionError` always
+    propagates (no amount of slot-walking fixes a version skew — every
+    slot was written by the same build).
+    """
+
+    POINTER = "LAST_GOOD"
+
+    def __init__(self, root: str, *, keep: int = 3):
+        if keep < 1:
+            raise ValueError(f"keep must be >= 1, got {keep}")
+        self.root = root
+        self.keep = int(keep)
+
+    def slot_path(self, step: int) -> str:
+        return os.path.join(self.root, f"slot-{int(step):08d}.npz")
+
+    def slots(self) -> list[tuple[int, str]]:
+        """All present slots as ``(step, path)``, ascending by step."""
+        if not os.path.isdir(self.root):
+            return []
+        out = []
+        for name in os.listdir(self.root):
+            if name.startswith("slot-") and name.endswith(".npz"):
+                try:
+                    out.append((int(name[5:-4]),
+                                os.path.join(self.root, name)))
+                except ValueError:
+                    continue
+        return sorted(out)
+
+    def last_good(self) -> int | None:
+        """The advisory pointer's step (``None`` if absent/unreadable)."""
+        try:
+            with open(os.path.join(self.root, self.POINTER)) as f:
+                return int(json.load(f)["step"])
+        except (OSError, ValueError, KeyError, json.JSONDecodeError):
+            return None
+
+    def _promote(self, step: int) -> None:
+        """Atomically + durably point ``LAST_GOOD`` at ``step``."""
+        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".ptr.tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump({"step": int(step),
+                           "slot": os.path.basename(self.slot_path(step))},
+                          f)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, os.path.join(self.root, self.POINTER))
+            _fsync_dir(self.root)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+
+    def _prune(self) -> None:
+        slots = self.slots()
+        if len(slots) <= self.keep:
+            return
+        pinned = self.last_good()
+        for step, path in slots[:-self.keep]:
+            if step == pinned:
+                continue
+            try:
+                os.unlink(path)
+            except OSError:
+                pass
+
+    def save(self, state: dict[str, np.ndarray], meta: dict, *,
+             step: int) -> str:
+        """Write slot ``step`` (atomic + durable), promote the pointer,
+        prune old slots → the slot path.  Fault injection at the
+        ``"chain.write"`` site (inside :func:`save_chain`) lands on the
+        slot *after* the durable write — exactly the
+        damage-after-success window rotation exists to survive."""
+        os.makedirs(self.root, exist_ok=True)
+        path = save_chain(self.slot_path(step), state, meta)
+        self._promote(step)
+        self._prune()
+        return path
+
+    def load_latest_valid(self) -> tuple[dict[str, np.ndarray], dict, int]:
+        """→ ``(state, meta, step)`` of the newest slot that validates,
+        skipping corrupt/truncated ones (each skip is the self-healing
+        fallback).  Raises ``FileNotFoundError`` when there are no slots
+        at all, :class:`SnapshotCorruptError` when every slot is damaged
+        and :class:`FormatVersionError` on the first version skew."""
+        slots = self.slots()
+        if not slots:
+            raise FileNotFoundError(
+                f"no checkpoint slots in {self.root!r}")
+        skipped = []
+        for step, path in reversed(slots):
+            try:
+                state, meta = load_chain(path)
+                return state, meta, step
+            except FormatVersionError:
+                raise
+            except (SnapshotCorruptError, FileNotFoundError) as e:
+                skipped.append(f"slot {step}: {e}")
+        raise SnapshotCorruptError(
+            f"every checkpoint slot in {self.root!r} is damaged: "
+            + "; ".join(skipped))
 
 
 # ---------------------------------------------------------------------------
@@ -146,11 +348,10 @@ def phi_digest(phi: np.ndarray) -> str:
     ).hexdigest()
 
 
-def save_phi(path: str, phi: np.ndarray, meta: dict) -> None:
-    """Atomically write a φ snapshot (``(J, T)`` f32 table + ``meta``).
-
-    ``format_version`` and the integrity ``digest`` are stamped here;
-    ``meta`` must be JSON-able.
+def save_phi(path: str, phi: np.ndarray, meta: dict) -> str:
+    """Atomically + durably write a φ snapshot (``(J, T)`` f32 table +
+    ``meta``) → the final path.  ``format_version`` and the integrity
+    ``digest`` are stamped here; ``meta`` must be JSON-able.
     """
     phi = np.asarray(phi, np.float32)
     if phi.ndim != 2:
@@ -159,32 +360,44 @@ def save_phi(path: str, phi: np.ndarray, meta: dict) -> None:
     meta["format_version"] = PHI_FORMAT_VERSION
     meta["J"], meta["T"] = int(phi.shape[0]), int(phi.shape[1])
     meta["digest"] = phi_digest(phi)
-    _atomic_savez(path, {"phi": phi}, meta, _PHI_META_KEY)
+    return _atomic_savez(path, {"phi": phi}, meta, _PHI_META_KEY,
+                         fault_site="phi.write")
 
 
 def load_phi(path: str) -> tuple[np.ndarray, dict]:
-    """Read a φ snapshot; refuses unknown format versions and corrupt
-    (digest-mismatched) tables — a serving fleet must never fold against
-    a φ it cannot prove it understands."""
+    """Read a φ snapshot; refuses unknown format versions
+    (:class:`FormatVersionError`) and damaged tables — truncated archive,
+    digest mismatch, meta/shape skew — as :class:`SnapshotCorruptError`.
+    A serving fleet must never fold against a φ it cannot prove it
+    understands, and retry logic needs to tell transient damage (a
+    publisher mid-write: retry) from version skew (never retry)."""
     if not path.endswith(".npz"):
         path = path + ".npz"
-    with np.load(path) as data:
-        if _PHI_META_KEY not in data:
-            raise ValueError(f"{path} is not a φ snapshot (no "
-                             f"{_PHI_META_KEY})")
-        meta = json.loads(bytes(data[_PHI_META_KEY].tobytes()).decode())
-        ver = meta.get("format_version")
-        if ver != PHI_FORMAT_VERSION:
-            raise ValueError(
-                f"φ snapshot format v{ver} unsupported (this build reads "
-                f"v{PHI_FORMAT_VERSION})")
-        phi = np.asarray(data["phi"], np.float32)
+    if not os.path.exists(path):
+        raise FileNotFoundError(path)
+    try:
+        with np.load(path) as data:
+            if _PHI_META_KEY not in data:
+                raise SnapshotCorruptError(f"{path} is not a φ snapshot "
+                                           f"(no {_PHI_META_KEY})")
+            meta = json.loads(bytes(data[_PHI_META_KEY].tobytes()).decode())
+            ver = meta.get("format_version")
+            if ver != PHI_FORMAT_VERSION:
+                raise FormatVersionError(
+                    f"φ snapshot format v{ver} unsupported (this build "
+                    f"reads v{PHI_FORMAT_VERSION})")
+            phi = np.asarray(data["phi"], np.float32)
+    except (SnapshotCorruptError, FormatVersionError):
+        raise
+    except Exception as e:      # BadZipFile, zlib/OSError, bad JSON, ...
+        raise SnapshotCorruptError(
+            f"unreadable φ snapshot {path}: {e!r}") from e
     if phi.shape != (meta.get("J"), meta.get("T")):
-        raise ValueError(
+        raise SnapshotCorruptError(
             f"φ snapshot shape {phi.shape} does not match its meta "
             f"({meta.get('J')}, {meta.get('T')})")
     got = phi_digest(phi)
     if meta.get("digest") not in (None, got):
-        raise ValueError("φ snapshot digest mismatch — corrupt or "
-                         "hand-edited table")
+        raise SnapshotCorruptError("φ snapshot digest mismatch — corrupt "
+                                   "or hand-edited table")
     return phi, meta

@@ -1,0 +1,524 @@
+"""Fault-tolerance tests (DESIGN.md §11).
+
+Four pillars, mirroring ISSUE 9's acceptance list:
+
+* **Deterministic fault injection** — a seeded :class:`FaultPlan` replays
+  the same damage bit-for-bit; the install/fire hooks are no-ops when no
+  plan is installed and re-entrant when one is.
+* **Durable, self-verifying checkpoints** — ``_atomic_savez`` fsyncs the
+  file and its directory; every payload carries a sha256 verified on
+  load; ``load_chain``/``load_phi`` surface every damage shape (truncated
+  archive, flipped payload byte, missing meta, digest mismatch) as
+  :class:`SnapshotCorruptError` and version skew as
+  :class:`FormatVersionError`.
+* **Self-healing rotation** — :class:`CheckpointRotation` keeps the last
+  K slots + a LAST_GOOD pointer, prunes, and ``load_latest_valid`` walks
+  past damaged slots; end to end, a killed-and-corrupted
+  :class:`NomadLDA` run resumes from the previous valid slot
+  bit-exactly.
+* **Hardened serving** — ``publish`` refuses corrupt / stale-generation /
+  format-skewed snapshots with typed errors while the live buffer keeps
+  serving; admission control sheds past ``max_pending`` and degrades
+  (capped sweeps) past ``degrade_pending``; ``fetch_snapshot`` retries
+  transient damage with bounded backoff and never retries version skew.
+"""
+import json
+import os
+import zipfile
+
+import numpy as np
+import pytest
+
+from repro import fault
+from repro.fault import (EngineOverloadedError, FaultPlan, FaultSpec,
+                         FormatVersionError, InjectedKill,
+                         SnapshotCorruptError, StaleGenerationError)
+from repro.train import checkpoint
+from repro.train.checkpoint import CheckpointRotation
+
+
+def _chain_path(tmp_path, name="chain"):
+    return str(tmp_path / name)
+
+
+def _write_chain(tmp_path, name="chain", n=16, seed=0):
+    rng = np.random.default_rng(seed)
+    state = {"z": rng.integers(0, 7, n).astype(np.int32),
+             "n_t": rng.integers(0, 50, 8).astype(np.int32)}
+    path = checkpoint.save_chain(_chain_path(tmp_path, name), state,
+                                 {"next_seed": 3})
+    return path, state
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan / FaultSpec
+# ---------------------------------------------------------------------------
+class TestFaultPlan:
+    def test_spec_validation(self):
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            FaultSpec("explode", "site", at=0)
+        with pytest.raises(ValueError, match="count"):
+            FaultSpec("kill", "site", at=0, count=0)
+        with pytest.raises(ValueError, match="frac"):
+            FaultSpec("truncate", "site", at=0, frac=1.0)
+
+    def test_corruption_is_deterministic(self, tmp_path):
+        """Same seed → identical damaged bytes; different seed → not."""
+        damaged = {}
+        for run, seed in (("a", 5), ("b", 5), ("c", 6)):
+            p = tmp_path / f"{run}.bin"
+            p.write_bytes(bytes(range(256)) * 8)
+            plan = FaultPlan([FaultSpec("corrupt", "w", at=0, nbytes=6)],
+                             seed=seed)
+            plan.fire("w", path=str(p))
+            damaged[run] = p.read_bytes()
+        assert damaged["a"] == damaged["b"]
+        assert damaged["a"] != damaged["c"]
+        assert damaged["a"] != bytes(range(256)) * 8
+
+    def test_window_and_counters(self, tmp_path):
+        plan = FaultPlan([FaultSpec("fail", "s", at=2, count=2)])
+        assert plan.fire("s") == ()            # index 0
+        assert plan.fire("s") == ()            # index 1
+        with pytest.raises(SnapshotCorruptError, match=r"s\[2\]"):
+            plan.fire("s")
+        with pytest.raises(SnapshotCorruptError, match=r"s\[3\]"):
+            plan.fire("s")
+        assert plan.fire("s") == ()            # index 4: window closed
+        # unmentioned sites still advance their own counter
+        plan.fire("other")
+        assert plan._counters["other"] == 1
+
+    def test_soft_kill_carries_site_and_index(self):
+        plan = FaultPlan([FaultSpec("kill", "trainer.sweep", at=1)])
+        plan.fire("trainer.sweep", index=0)
+        with pytest.raises(InjectedKill) as ei:
+            plan.fire("trainer.sweep", index=1)
+        assert (ei.value.site, ei.value.index) == ("trainer.sweep", 1)
+        assert plan.log == [("trainer.sweep", 1, "kill")]
+
+    def test_install_is_reentrant_and_fire_is_noop_uninstalled(self):
+        assert fault.fire("anything", path="/nope") == ()
+        outer, inner = FaultPlan(), FaultPlan()
+        with fault.install(outer):
+            assert fault.active() is outer
+            with fault.install(inner):
+                assert fault.active() is inner
+            assert fault.active() is outer
+        assert fault.active() is None
+
+
+# ---------------------------------------------------------------------------
+# Durability + typed load errors (satellites a, c)
+# ---------------------------------------------------------------------------
+class TestDurability:
+    def test_atomic_savez_fsyncs_file_and_dir(self, tmp_path, monkeypatch):
+        """The satellite-a durability fix: a host crash after the rename
+        must not lose the entry, so both the temp file and the directory
+        must be fsynced."""
+        synced = []
+        real_fsync = os.fsync
+        monkeypatch.setattr(os, "fsync", lambda fd: (synced.append(fd),
+                                                     real_fsync(fd))[1])
+        _write_chain(tmp_path)
+        assert len(synced) >= 2   # the npz temp file + its directory
+
+    def test_truncated_write_injector_round_trip(self, tmp_path):
+        """The fault layer's truncated-write injector produces a file the
+        loader rejects as corrupt — the torn-write story end to end."""
+        plan = FaultPlan([FaultSpec("truncate", "chain.write", at=0,
+                                    frac=0.5)])
+        with fault.install(plan):
+            path, _ = _write_chain(tmp_path)
+        assert plan.log == [("chain.write", 0, "truncate")]
+        with pytest.raises(SnapshotCorruptError):
+            checkpoint.load_chain(path)
+
+    def test_save_returns_path_and_round_trips(self, tmp_path):
+        path, state = _write_chain(tmp_path)
+        assert path.endswith(".npz") and os.path.exists(path)
+        got, meta = checkpoint.load_chain(path)
+        np.testing.assert_array_equal(got["z"], state["z"])
+        assert meta["next_seed"] == 3
+        assert set(meta["payload_sha256"]) == {"z", "n_t"}
+
+
+class TestLoadChainErrors:
+    def test_missing_file(self, tmp_path):
+        with pytest.raises(FileNotFoundError):
+            checkpoint.load_chain(str(tmp_path / "nope"))
+
+    def test_truncated_npz(self, tmp_path):
+        path, _ = _write_chain(tmp_path)
+        os.truncate(path, os.path.getsize(path) // 3)
+        with pytest.raises(SnapshotCorruptError):
+            checkpoint.load_chain(path)
+
+    def test_flipped_payload_byte(self, tmp_path):
+        """One flipped byte inside a stored array: the zip layer may not
+        notice, the per-payload sha256 must."""
+        path, _ = _write_chain(tmp_path)
+        with zipfile.ZipFile(path) as z:
+            names = z.namelist()
+            blobs = {n: bytearray(z.read(n)) for n in names}
+        victim = "z.npy"
+        assert victim in blobs
+        blobs[victim][-1] ^= 0xFF             # flip a data byte (not header)
+        with zipfile.ZipFile(path, "w") as z:
+            for n in names:
+                z.writestr(n, bytes(blobs[n]))
+        with pytest.raises(SnapshotCorruptError,
+                           match="digest mismatch|unreadable"):
+            checkpoint.load_chain(path)
+
+    def test_missing_chain_meta(self, tmp_path):
+        p = str(tmp_path / "bare.npz")
+        np.savez(p, z=np.arange(4, dtype=np.int32))
+        with pytest.raises(SnapshotCorruptError,
+                           match="is not a chain checkpoint"):
+            checkpoint.load_chain(p)
+
+    def test_digest_mismatch_in_meta(self, tmp_path):
+        state = {"z": np.arange(8, dtype=np.int32)}
+        meta = {"format_version": checkpoint.CHAIN_FORMAT_VERSION,
+                "payload_sha256": {"z": "0" * 64}}
+        p = str(tmp_path / "bad")
+        payload = dict(state)
+        payload[checkpoint._META_KEY] = np.frombuffer(
+            json.dumps(meta).encode(), np.uint8)
+        np.savez(p + ".npz", **payload)
+        with pytest.raises(SnapshotCorruptError, match="digest mismatch"):
+            checkpoint.load_chain(p)
+
+    def test_format_version_is_typed_and_keeps_message(self, tmp_path):
+        path, _ = _write_chain(tmp_path)
+        with np.load(path) as data:
+            payload = {k: data[k] for k in data.files}
+        meta = json.loads(bytes(
+            payload[checkpoint._META_KEY].tobytes()).decode())
+        meta["format_version"] = 999
+        payload[checkpoint._META_KEY] = np.frombuffer(
+            json.dumps(meta).encode(), np.uint8)
+        np.savez(path, **{k: v for k, v in payload.items()})
+        with pytest.raises(FormatVersionError, match="format"):
+            checkpoint.load_chain(path)
+        # and the typed error still satisfies pre-§11 ValueError catchers
+        with pytest.raises(ValueError, match="format"):
+            checkpoint.load_chain(path)
+
+    def test_load_phi_truncated_and_missing_meta(self, tmp_path):
+        p = str(tmp_path / "phi")
+        checkpoint.save_phi(p, np.ones((4, 3), np.float32), {})
+        os.truncate(p + ".npz", os.path.getsize(p + ".npz") // 3)
+        with pytest.raises(SnapshotCorruptError):
+            checkpoint.load_phi(p)
+        p2 = str(tmp_path / "bare.npz")
+        np.savez(p2, phi=np.ones((4, 3), np.float32))
+        with pytest.raises(SnapshotCorruptError, match="not a φ snapshot"):
+            checkpoint.load_phi(p2)
+        with pytest.raises(FileNotFoundError):
+            checkpoint.load_phi(str(tmp_path / "ghost"))
+
+
+# ---------------------------------------------------------------------------
+# CheckpointRotation
+# ---------------------------------------------------------------------------
+class TestCheckpointRotation:
+    def _save_steps(self, rot, steps, seed=0):
+        for step in steps:
+            rng = np.random.default_rng(seed + step)
+            rot.save({"z": rng.integers(0, 5, 12).astype(np.int32)},
+                     {"next_seed": step}, step=step)
+
+    def test_keep_prune_and_pointer(self, tmp_path):
+        rot = CheckpointRotation(str(tmp_path / "rot"), keep=3)
+        self._save_steps(rot, [1, 2, 3, 4, 5])
+        assert [s for s, _ in rot.slots()] == [3, 4, 5]
+        assert rot.last_good() == 5
+        state, meta, step = rot.load_latest_valid()
+        assert step == 5 and meta["next_seed"] == 5
+
+    def test_fallback_skips_damaged_newest(self, tmp_path):
+        rot = CheckpointRotation(str(tmp_path / "rot"), keep=3)
+        self._save_steps(rot, [1, 2, 3])
+        # damage the newest slot *after* its durable write (bit rot);
+        # the LAST_GOOD pointer still names it — and must not be trusted
+        plan = FaultPlan([FaultSpec("corrupt", "x", at=0, nbytes=8)])
+        plan.fire("x", path=rot.slot_path(3))
+        assert rot.last_good() == 3
+        _, meta, step = rot.load_latest_valid()
+        assert step == 2 and meta["next_seed"] == 2
+
+    def test_all_damaged_raises_listing_slots(self, tmp_path):
+        rot = CheckpointRotation(str(tmp_path / "rot"), keep=2)
+        self._save_steps(rot, [1, 2])
+        for step, path in rot.slots():
+            os.truncate(path, 10)
+        with pytest.raises(SnapshotCorruptError, match="every checkpoint"):
+            rot.load_latest_valid()
+
+    def test_format_version_skew_propagates(self, tmp_path):
+        """A version skew is a build problem, not slot damage — fallback
+        must not silently resurrect an older slot."""
+        rot = CheckpointRotation(str(tmp_path / "rot"), keep=2)
+        self._save_steps(rot, [1, 2])
+        path = rot.slot_path(2)
+        with np.load(path) as data:
+            payload = {k: data[k] for k in data.files}
+        meta = json.loads(bytes(
+            payload[checkpoint._META_KEY].tobytes()).decode())
+        meta["format_version"] = 999
+        payload[checkpoint._META_KEY] = np.frombuffer(
+            json.dumps(meta).encode(), np.uint8)
+        np.savez(path, **payload)
+        with pytest.raises(FormatVersionError):
+            rot.load_latest_valid()
+
+    def test_empty_dir_raises_file_not_found(self, tmp_path):
+        rot = CheckpointRotation(str(tmp_path / "rot"))
+        with pytest.raises(FileNotFoundError):
+            rot.load_latest_valid()
+
+    def test_keep_validation(self, tmp_path):
+        with pytest.raises(ValueError, match="keep"):
+            CheckpointRotation(str(tmp_path), keep=0)
+
+
+# ---------------------------------------------------------------------------
+# Hardened serving
+# ---------------------------------------------------------------------------
+J, T = 19, 5
+
+
+@pytest.fixture()
+def snaps():
+    from repro.serve.lda_engine import snapshot_from_counts
+    out = []
+    for sweep in (1, 2, 3):
+        rng = np.random.default_rng(sweep)
+        n_wt = rng.integers(0, 40, (J, T))
+        out.append(snapshot_from_counts(
+            n_wt, n_wt.sum(0), alpha=0.4, beta=0.01,
+            extra_meta={"sweep": sweep}))
+    return out
+
+
+class TestEngineHardening:
+    def test_publish_typed_errors_keep_live_buffer(self, snaps):
+        import dataclasses
+
+        from repro.serve.lda_engine import LdaEngine, PhiSnapshot
+        eng = LdaEngine(snaps[0], sweeps=2, tile=4, max_batch=8)
+        gen = eng.generation
+        bad_phi = np.array(snaps[1].phi)
+        bad_phi[0, 0] += 1.0
+        with pytest.raises(SnapshotCorruptError, match="digest"):
+            eng.publish(PhiSnapshot(phi=bad_phi,
+                                    meta=dict(snaps[1].meta)))
+        skew = dict(snaps[1].meta)
+        skew["format_version"] += 1
+        with pytest.raises(FormatVersionError, match="format"):
+            eng.publish(dataclasses.replace(snaps[1], meta=skew))
+        assert eng.generation == gen           # live buffer untouched
+        assert eng.stats()["rejected_publishes"] == 2
+
+    def test_generation_regression_refused(self, snaps):
+        from repro.serve.lda_engine import LdaEngine
+        eng = LdaEngine(snaps[1], sweeps=2, tile=4, max_batch=8)
+        with pytest.raises(StaleGenerationError, match="regress"):
+            eng.publish(snaps[0])              # sweep 1 after sweep 2
+        with pytest.raises(StaleGenerationError):
+            eng.publish(snaps[1])              # equal sweep also refused
+        assert eng.publish(snaps[2]) == 2      # forward still fine
+        # snapshots without a source ordinal stay unguarded (pre-§11)
+        from repro.serve.lda_engine import snapshot_from_counts
+        rng = np.random.default_rng(9)
+        n_wt = rng.integers(0, 40, (J, T))
+        free = snapshot_from_counts(n_wt, n_wt.sum(0), alpha=0.4,
+                                    beta=0.01)
+        assert eng.publish(free) == 3
+
+    def test_shed_and_degrade(self, snaps):
+        from repro.serve.lda_engine import LdaEngine, TopicQuery
+        eng = LdaEngine(snaps[0], sweeps=6, tile=4, max_batch=8,
+                        max_pending=2, degrade_pending=1,
+                        degraded_sweeps=2)
+        docs = (np.arange(5, dtype=np.int32),)
+        res = eng.query(TopicQuery(docs=docs))
+        assert not res.degraded and res.sweeps_used == 6
+
+        # simulate concurrent load: one query already in flight
+        with eng._stats_lock:
+            eng._pending = 1
+        res = eng.query(TopicQuery(docs=docs))
+        assert res.degraded and res.sweeps_used == 2
+        assert res.degraded_total == 1
+
+        # at the hard bound: shed with the typed error
+        with eng._stats_lock:
+            eng._pending = 2
+        with pytest.raises(EngineOverloadedError, match="shed"):
+            eng.query(TopicQuery(docs=docs))
+        with eng._stats_lock:
+            eng._pending = 0
+        stats = eng.stats()
+        assert stats["shed"] == 1 and stats["degraded"] == 1
+        assert stats["max_pending_seen"] == 2
+        res = eng.query(TopicQuery(docs=docs))   # healthy again
+        assert not res.degraded and res.shed_total == 1
+
+    def test_degraded_answers_match_capped_sweeps(self, snaps):
+        """A degraded answer is exactly the answer a sweeps-capped query
+        would give — degradation changes quality, never correctness."""
+        from repro.serve.lda_engine import LdaEngine, TopicQuery
+        docs = (np.arange(6, dtype=np.int32) % J,
+                np.array([3, 1], np.int32))
+        eng = LdaEngine(snaps[0], sweeps=6, tile=4, max_batch=8,
+                        degrade_pending=1, degraded_sweeps=2)
+        ref = eng.query(TopicQuery(docs=docs, sweeps=2))
+        with eng._stats_lock:
+            eng._pending = 1
+        got = eng.query(TopicQuery(docs=docs))
+        with eng._stats_lock:
+            eng._pending = 0
+        assert got.degraded
+        np.testing.assert_array_equal(ref.n_td, got.n_td)
+
+    def test_admission_param_validation(self, snaps):
+        from repro.serve.lda_engine import LdaEngine
+        with pytest.raises(ValueError, match="max_pending"):
+            LdaEngine(max_pending=0)
+        with pytest.raises(ValueError, match="degrade_pending"):
+            LdaEngine(degrade_pending=0)
+        with pytest.raises(ValueError, match="degraded_sweeps"):
+            LdaEngine(degraded_sweeps=0)
+
+
+class TestFetchSnapshot:
+    def test_retries_transient_then_succeeds(self, tmp_path, snaps):
+        from repro.serve.lda_engine import fetch_snapshot
+        p = str(tmp_path / "phi.npz")
+        snaps[0].save(p)
+        plan = FaultPlan([FaultSpec("fail", "serve.fetch", at=0, count=2)])
+        slept = []
+        with fault.install(plan):
+            snap = fetch_snapshot(p, retries=3, backoff_s=0.01,
+                                  sleep=slept.append)
+        assert snap.digest == snaps[0].digest
+        assert slept == [0.01, 0.02]           # exponential backoff
+        assert len(plan.log) == 2
+
+    def test_exhausted_retries_raise(self, tmp_path, snaps):
+        from repro.serve.lda_engine import fetch_snapshot
+        p = str(tmp_path / "phi.npz")
+        snaps[0].save(p)
+        plan = FaultPlan([FaultSpec("fail", "serve.fetch", at=0, count=5)])
+        with fault.install(plan), \
+                pytest.raises(SnapshotCorruptError, match="injected"):
+            fetch_snapshot(p, retries=2, backoff_s=0.0,
+                           sleep=lambda _: None)
+
+    def test_version_skew_never_retried(self, tmp_path, snaps):
+        from repro.serve.lda_engine import fetch_snapshot
+        p = str(tmp_path / "phi.npz")
+        snaps[0].save(p)
+        with np.load(p) as data:
+            payload = {k: data[k] for k in data.files}
+        meta = json.loads(bytes(
+            payload[checkpoint._PHI_META_KEY].tobytes()).decode())
+        meta["format_version"] = 999
+        payload[checkpoint._PHI_META_KEY] = np.frombuffer(
+            json.dumps(meta).encode(), np.uint8)
+        np.savez(p, **payload)
+        plan = FaultPlan()                     # counts fetch attempts
+        with fault.install(plan), pytest.raises(FormatVersionError):
+            fetch_snapshot(p, retries=5, backoff_s=0.0,
+                           sleep=lambda _: None)
+        assert plan._counters["serve.fetch"] == 1
+
+    def test_missing_file_retried_until_it_appears(self, tmp_path, snaps):
+        from repro.serve.lda_engine import fetch_snapshot
+        p = str(tmp_path / "late.npz")
+        attempts = []
+
+        def sleep_then_publish(delay):
+            attempts.append(delay)
+            if len(attempts) == 2:
+                snaps[0].save(p)
+
+        snap = fetch_snapshot(p, retries=4, backoff_s=0.01,
+                              sleep=sleep_then_publish)
+        assert snap.digest == snaps[0].digest and len(attempts) == 2
+
+
+# ---------------------------------------------------------------------------
+# End to end: kill + corrupt → rotation fallback → bit-exact resume
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+class TestNomadFaultRecovery:
+    def _build(self, tmp_path=None, resume=None):
+        import jax
+
+        from repro.core.nomad import NomadLDA
+        from repro.data import synthetic
+        from repro.data.sharding import build_layout
+        T = 4
+        corpus, _, _ = synthetic.make_corpus(
+            num_docs=24, vocab_size=48, num_topics=T, mean_doc_len=10.0,
+            seed=11)
+        mesh = jax.make_mesh((1,), ("worker",))
+        lay = build_layout(corpus, n_workers=1, T=T, n_blocks=2)
+        kw = {}
+        if tmp_path is not None:
+            kw = dict(checkpoint_every=1, checkpoint_path=str(tmp_path),
+                      checkpoint_keep=3)
+        return NomadLDA(mesh=mesh, ring_axes=("worker",), layout=lay,
+                        alpha=50.0 / T, beta=0.01, resume_from=resume, **kw)
+
+    def _digest(self, lda, arrays):
+        import hashlib
+        h = hashlib.sha256()
+        h.update(np.ascontiguousarray(lda.layout.extract_canonical(
+            np.asarray(arrays["z"]))).tobytes())
+        for part in lda.global_counts(arrays):
+            h.update(np.ascontiguousarray(part).tobytes())
+        return h.hexdigest()
+
+    def test_kill_corrupt_fallback_bitexact(self, tmp_path):
+        sweeps, kill_at = 5, 3
+        ref_lda = self._build()
+        arrays, _ = ref_lda.run(sweeps, init_seed=0)
+        ref = self._digest(ref_lda, arrays)
+
+        rot_dir = tmp_path / "rot"
+        plan = FaultPlan([
+            FaultSpec("corrupt", "chain.write", at=kill_at - 1, nbytes=4),
+            FaultSpec("kill", "trainer.sweep", at=kill_at - 1),
+        ], seed=7)
+        lda = self._build(tmp_path=rot_dir)
+        with pytest.raises(InjectedKill):
+            lda.run(sweeps, init_seed=0, fault_plan=plan)
+        assert plan.log[0][2] == "corrupt"
+
+        rot = CheckpointRotation(str(rot_dir), keep=3)
+        _, _, step = rot.load_latest_valid()
+        assert step == kill_at - 1             # fell back past the damage
+        lda2 = self._build(resume=str(rot_dir))
+        arrays2, done = lda2.run(sweeps)
+        assert done == sweeps
+        assert self._digest(lda2, arrays2) == ref
+
+    def test_dropped_publish_fault(self, tmp_path):
+        """A dropped publish skips the snapshot but never the chain."""
+        published = []
+        plan = FaultPlan([FaultSpec("drop", "trainer.publish", at=1)])
+        lda = self._build()
+        arrays, _ = lda.run(3, init_seed=0, publish_every=1,
+                            on_publish=lambda s: published.append(
+                                s.meta["sweep"]),
+                            fault_plan=plan)
+        assert published == [1, 3]             # sweep 2's publish dropped
+        ref_lda = self._build()
+        ref_arrays, _ = ref_lda.run(3, init_seed=0)
+        assert self._digest(lda, arrays) == self._digest(ref_lda,
+                                                         ref_arrays)

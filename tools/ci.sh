@@ -25,6 +25,14 @@
 #                             # + the fast tests/test_serving.py subset
 #                             # (also part of the default and --fast
 #                             # stage lists)
+#   tools/ci.sh --chaos-smoke # fault-injection smoke only (DESIGN.md §11):
+#                             # chaos_check matrix (kill + corrupted newest
+#                             # rotation slot -> fallback resume bit-equal
+#                             # to the straight run) + serve chaos (corrupt
+#                             # / stale / format-skewed publishes refused,
+#                             # query flood shed not queued, no invalid
+#                             # generation served) — also part of the
+#                             # default and --fast stage lists
 #
 # Property tests (tests/test_sharding_properties.py, ...) use `hypothesis`.
 # CI servers should run with REPRO_CI_INSTALL_HYPOTHESIS=1 so the real
@@ -130,6 +138,46 @@ print(f"resume smoke: straight == kill+resume ({s['sweeps']} sweeps, "
 PY
 }
 
+chaos_smoke() {
+    # The failure model end to end (DESIGN.md §11), replayed from seeded
+    # FaultPlans: (1) an in-process kill + a kill with the newest
+    # rotation slot corrupted — both resumes must be bit-equal to the
+    # straight run, the corrupted one via fallback to the previous valid
+    # slot; (2) the serving engine under corrupt / stale-generation /
+    # format-skewed publishes plus a query flood behind admission
+    # control — every bad publish refused with its typed error, no
+    # answer from an unaccepted generation, overload shed not queued.
+    echo "== chaos smoke: kill + corrupt slot -> rotation fallback =="
+    local out
+    out=$(python -m repro.launch.chaos_check --phase matrix --fast) || {
+        echo "$out"; echo "chaos smoke: matrix phase exited non-zero"
+        return 1; }
+    python - "$out" <<'PY'
+import json, sys
+rep = json.loads(sys.argv[1].strip().splitlines()[-1])
+for c in rep["combos"]:
+    print(f"chaos smoke [{c['damage']}]: killed={c['killed']} "
+          f"slots={c['slots']} resumed_from={c['resumed_from_step']} "
+          f"fell_back={c['fell_back']} exact={c['exact']}")
+sys.exit(0 if rep["all_ok"] else 1)
+PY
+    echo "== chaos smoke: bad publishes + query flood (serve chaos) =="
+    out=$(python -m repro.launch.chaos_check --phase serve --fast) || {
+        echo "$out"; echo "chaos smoke: serve phase exited non-zero"
+        return 1; }
+    python - "$out" <<'PY'
+import json, sys
+rep = json.loads(sys.argv[1].strip().splitlines()[-1])
+print(f"chaos smoke [serve]: {rep['publishes_accepted']} accepted / "
+      f"{rep['publishes_rejected']} rejected publishes, "
+      f"{rep['queries']} answers ({rep['degraded_answers']} degraded), "
+      f"{rep['shed']} shed, "
+      f"{rep['invalid_generation_answers']} invalid-generation answers, "
+      f"max_pending_seen={rep['stats']['max_pending_seen']}")
+sys.exit(0 if rep["all_ok"] else 1)
+PY
+}
+
 if [[ "${1:-}" == "--bench-smoke" ]]; then
     bench_smoke
     echo "CI OK (bench smoke)"
@@ -145,6 +193,12 @@ fi
 if [[ "${1:-}" == "--serve-smoke" ]]; then
     serve_smoke
     echo "CI OK (serve smoke)"
+    exit 0
+fi
+
+if [[ "${1:-}" == "--chaos-smoke" ]]; then
+    chaos_smoke
+    echo "CI OK (chaos smoke)"
     exit 0
 fi
 
@@ -193,6 +247,8 @@ doc_tile_smoke
 resume_smoke
 
 serve_smoke
+
+chaos_smoke
 
 echo "== fast signal: kernels + samplers (-m 'not slow') =="
 python -m pytest -q -m "not slow"
