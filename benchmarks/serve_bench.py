@@ -3,11 +3,13 @@
 Measures the :class:`repro.serve.lda_engine.LdaEngine` θ-query path —
 the millions-of-users workload (DESIGN.md §10) — end to end, per query:
 pack → device transfer → jitted multi-sweep fold-in → θ → host.  For
-each batch size ∈ {1, 8, 64} it reports **p50/p99 latency** (ms) and
-**docs/sec** over a fixed pool of variable-length documents, plus a
-``publish`` row (snapshot build + atomic install) and an in-process
-``refclock`` row (a fixed jitted matmul) that prices the host/XLA speed
-at snapshot time.
+each inner mode ∈ {scan, fused} × batch size ∈ {1, 8, 64} it reports
+**p50/p99 latency** (ms) and **docs/sec** over a fixed pool of
+variable-length documents, plus a ``publish`` row (snapshot build +
+atomic install) and an in-process ``refclock`` row (a fixed jitted
+matmul) that prices the host/XLA speed at snapshot time.  The two inner
+modes answer from the same snapshot/pool/keys, so their counts are also
+cross-checked bit-for-bit (an ``ERROR`` row is emitted on divergence).
 
 Like ``BENCH_sweep.json``, full-size runs maintain a **history** of
 per-PR snapshots at the repo root (``{"history": [{"rev", "timing",
@@ -50,13 +52,14 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BENCH_JSON = os.path.join(REPO, "BENCH_serve.json")
 
 BATCHES = (1, 8, 64)
+INNER_MODES = ("scan", "fused")
 
 # Timing-methodology epoch (see sweep_bench.TIMING_EPOCH): rows are only
 # gated against a previous snapshot from the same epoch.
 TIMING_EPOCH = "perquery-p50p99"
 
 
-def _mk_engine(fast: bool):
+def _mk_engine(fast: bool, inner_mode: str = "scan"):
     import jax
 
     from repro.serve.lda_engine import LdaEngine, snapshot_from_counts
@@ -67,7 +70,8 @@ def _mk_engine(fast: bool):
     snap = snapshot_from_counts(n_wt, n_wt.sum(0), alpha=50.0 / T,
                                 beta=0.01)
     t0 = time.perf_counter()
-    eng = LdaEngine(snap, sweeps=3 if fast else 5, tile=8, max_batch=64)
+    eng = LdaEngine(snap, sweeps=3 if fast else 5, tile=8, max_batch=64,
+                    inner_mode=inner_mode)
     publish_s = time.perf_counter() - t0
     pool = [rng.integers(0, J, int(n)).astype(np.int32)
             for n in rng.geometric(1 / 20.0, size=64).clip(1, 64)]
@@ -95,33 +99,49 @@ def _measure(fast: bool) -> list[dict]:
     from repro.serve.lda_engine import TopicQuery
     import jax
 
-    eng, snap, pool, publish_s, (J, T), jax_mod = _mk_engine(fast)
+    engines = {m: _mk_engine(fast, m) for m in INNER_MODES}
+    _, snap, pool, publish_s, (J, T), jax_mod = engines["scan"]
     n_queries = 8 if fast else 40
     entries = [{"path": "publish", "J": J, "T": T,
                 "publish_ms": publish_s * 1e3},
                {"path": "refclock", "ref_sec": _refclock(jax_mod, snap.phi)}]
-    for b in BATCHES:
-        def q(i):
-            docs = tuple(pool[(i * b + j) % len(pool)] for j in range(b))
-            return eng.query(TopicQuery(docs=docs,
-                                        key=jax.random.key(i % 4)))
-        for i in range(n_queries):              # warm every length bucket
-            q(i)                                # the rotation will hit
-        lats, docs_done = [], 0
-        t0 = time.perf_counter()
-        for i in range(n_queries):
-            res = q(i)
-            lats.append(res.latency_s)
-            docs_done += b
-        wall = time.perf_counter() - t0
-        lats = np.sort(np.asarray(lats))
-        entries.append({
-            "path": "serve", "batch": b, "J": J, "T": T,
-            "sweeps": eng.sweeps, "queries": n_queries,
-            "p50_ms": float(np.percentile(lats, 50) * 1e3),
-            "p99_ms": float(np.percentile(lats, 99) * 1e3),
-            "docs_per_sec": docs_done / wall,
-        })
+    # parity witness: per inner mode, the counts of one probe query per
+    # batch size — the modes share snapshot/pool/keys so these must be
+    # bit-identical
+    probe_ntd = {m: {} for m in INNER_MODES}
+    for inner in INNER_MODES:
+        eng = engines[inner][0]
+        for b in BATCHES:
+            def q(i):
+                docs = tuple(pool[(i * b + j) % len(pool)]
+                             for j in range(b))
+                return eng.query(TopicQuery(docs=docs,
+                                            key=jax.random.key(i % 4)))
+            for i in range(n_queries):          # warm every length bucket
+                q(i)                            # the rotation will hit
+            lats, docs_done = [], 0
+            t0 = time.perf_counter()
+            for i in range(n_queries):
+                res = q(i)
+                lats.append(res.latency_s)
+                docs_done += b
+            wall = time.perf_counter() - t0
+            probe_ntd[inner][b] = np.asarray(q(0).n_td)
+            lats = np.sort(np.asarray(lats))
+            entries.append({
+                "path": "serve", "inner": inner, "batch": b,
+                "J": J, "T": T,
+                "sweeps": eng.sweeps, "queries": n_queries,
+                "p50_ms": float(np.percentile(lats, 50) * 1e3),
+                "p99_ms": float(np.percentile(lats, 99) * 1e3),
+                "docs_per_sec": docs_done / wall,
+            })
+    parity_ok = all(
+        np.array_equal(probe_ntd["scan"][b], probe_ntd["fused"][b])
+        for b in BATCHES)
+    entries.append({"path": "parity", "J": J, "T": T,
+                    "modes": list(INNER_MODES), "batches": list(BATCHES),
+                    "bit_identical": parity_ok})
     entries.append(_overload_entry(fast))
     return entries
 
@@ -235,27 +255,47 @@ def _ref_sec(entries: list[dict]) -> float:
 
 
 def _check_canary(hist: list[dict]) -> list[str]:
-    """Batching canary on the latest snapshot: docs/sec at batch=64 must
-    exceed batch=1 by REPRO_SERVE_CANARY_RATIO (default 1.3).  Both rows
-    come from the same process seconds apart, so the ratio is immune to
-    host-speed drift between snapshots."""
+    """Batching canary on the latest snapshot, per inner mode: docs/sec
+    at batch=64 must exceed batch=1 by REPRO_SERVE_CANARY_RATIO (default
+    1.3).  Both rows come from the same process seconds apart, so the
+    ratio is immune to host-speed drift between snapshots.  Snapshots
+    from before the inner-mode axis carry no ``inner`` field; those rows
+    are the scan path."""
     ratio_min = float(os.environ.get("REPRO_SERVE_CANARY_RATIO", "1.3"))
     if not hist:
         return []
-    rows = {e.get("batch"): e for e in hist[-1]["entries"]
-            if e.get("path") == "serve"}
-    b1, b64 = rows.get(1), rows.get(max(BATCHES))
-    if not b1 or not b64 or b1["docs_per_sec"] <= 0:
+    out = []
+    by_inner = {}
+    for e in hist[-1]["entries"]:
+        if e.get("path") == "serve":
+            by_inner.setdefault(e.get("inner", "scan"), {})[
+                e.get("batch")] = e
+    for inner, rows in sorted(by_inner.items()):
+        b1, b64 = rows.get(1), rows.get(max(BATCHES))
+        if not b1 or not b64 or b1["docs_per_sec"] <= 0:
+            continue
+        ratio = b64["docs_per_sec"] / b1["docs_per_sec"]
+        if ratio < ratio_min:
+            out.append(
+                f"serve canary [{inner}]: batch={max(BATCHES)} "
+                f"({b64['docs_per_sec']:.0f} docs/s) is only {ratio:.2f}x "
+                f"batch=1 ({b1['docs_per_sec']:.0f} docs/s, same process), "
+                f"floor {ratio_min:.2f}x — batching stopped paying "
+                f"({hist[-1]['rev']})")
+    return out
+
+
+def _check_parity(hist: list[dict]) -> list[str]:
+    """The fused×scan parity witness recorded in the latest snapshot
+    must hold — a bench run whose two inner modes diverged is reporting
+    numbers for two different algorithms."""
+    if not hist:
         return []
-    ratio = b64["docs_per_sec"] / b1["docs_per_sec"]
-    if ratio < ratio_min:
-        return [
-            f"serve canary: batch={max(BATCHES)} "
-            f"({b64['docs_per_sec']:.0f} docs/s) is only {ratio:.2f}x "
-            f"batch=1 ({b1['docs_per_sec']:.0f} docs/s, same process), "
-            f"floor {ratio_min:.2f}x — batching stopped paying "
-            f"({hist[-1]['rev']})"]
-    return []
+    return [
+        f"serve parity: inner modes {e.get('modes')} diverged bit-wise "
+        f"on batches {e.get('batches')} ({hist[-1]['rev']})"
+        for e in hist[-1]["entries"]
+        if e.get("path") == "parity" and not e.get("bit_identical", True)]
 
 
 def _check_overload(hist: list[dict]) -> list[str]:
@@ -310,7 +350,8 @@ def check_regression(threshold: float | None = None) -> list[str]:
         threshold = float(os.environ.get(
             "REPRO_SERVE_REGRESSION_PCT", "40")) / 100.0
     hist = _load_history()["history"]
-    regressions = _check_canary(hist) + _check_overload(hist)
+    regressions = (_check_canary(hist) + _check_overload(hist)
+                   + _check_parity(hist))
     if len(hist) < 2:
         return regressions
     if hist[-2].get("timing") != hist[-1].get("timing"):
@@ -320,12 +361,15 @@ def check_regression(threshold: float | None = None) -> list[str]:
         return regressions
     ref_old, ref_new = _ref_sec(hist[-2]["entries"]), \
         _ref_sec(hist[-1]["entries"])
-    prev = {e.get("batch"): e for e in hist[-2]["entries"]
-            if e.get("path") == "serve"}
+    # rows are keyed (batch, inner); pre-axis snapshots had no inner
+    # field — their rows are the scan path
+    prev = {(e.get("batch"), e.get("inner", "scan")): e
+            for e in hist[-2]["entries"] if e.get("path") == "serve"}
     for e in hist[-1]["entries"]:
         if e.get("path") != "serve":
             continue
-        old = prev.get(e.get("batch"))
+        inner = e.get("inner", "scan")
+        old = prev.get((e.get("batch"), inner))
         if old is None or old["docs_per_sec"] <= 0:
             continue
         ratio = e["docs_per_sec"] / old["docs_per_sec"]
@@ -335,7 +379,8 @@ def check_regression(threshold: float | None = None) -> list[str]:
                         / (old["docs_per_sec"] * ref_old))
         if ratio < 1.0 - threshold:
             regressions.append(
-                f"serve/batch{e['batch']}: {old['docs_per_sec']:.0f} -> "
+                f"serve/{inner}/batch{e['batch']}: "
+                f"{old['docs_per_sec']:.0f} -> "
                 f"{e['docs_per_sec']:.0f} docs/s "
                 f"({(1 - ratio) * 100:.0f}% drop under every "
                 f"normalization, limit {threshold * 100:.0f}%; "
@@ -383,9 +428,17 @@ def run() -> list[str]:
                 out.append(row(
                     f"serve/overload/J{e['J']}T{e['T']}/ERROR", -1.0,
                     "queries_unaccounted"))
+        elif e["path"] == "parity":
+            out.append(row("serve/parity/fusedxscan",
+                           1.0 if e["bit_identical"] else -1.0,
+                           f"bit_identical={e['bit_identical']}"))
+            if not e["bit_identical"]:
+                out.append(row("serve/parity/ERROR", -1.0,
+                               "inner_modes_diverged"))
         else:
             out.append(row(
-                f"serve/query/batch{e['batch']}/J{e['J']}T{e['T']}"
+                f"serve/query/{e.get('inner', 'scan')}"
+                f"/batch{e['batch']}/J{e['J']}T{e['T']}"
                 f"/s{e['sweeps']}",
                 e["p50_ms"] * 1e3,
                 f"p50_ms={e['p50_ms']:.2f};p99_ms={e['p99_ms']:.2f};"

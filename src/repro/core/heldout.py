@@ -264,7 +264,14 @@ def document_completion_perplexity(
         heldout: Corpus, n_wt, n_t, *, alpha: float, beta: float,
         key=None, fold_sweeps: int = 20) -> float:
     """Split each held-out doc's tokens in half (alternating positions),
-    fold in on the first half, score the second half."""
+    fold in on the first half, score the second half.
+
+    A corpus of single-token documents puts every token in the
+    estimation half: the score half is empty, the log-likelihood sum is
+    0 over 0 tokens, and the perplexity is exactly 1.0 — *not* a raise
+    through :func:`fold_in`'s empty-token ValueError, which only an
+    entirely token-free corpus can trigger (``tests/test_serving.py``
+    pins this edge)."""
     key = jax.random.key(0) if key is None else key
     phi = _phi_hat(jnp.asarray(n_wt), jnp.asarray(n_t), beta)   # (J,T)
 

@@ -3,9 +3,10 @@
 the list of runtime injection sites."""
 from repro.fault.errors import (EngineOverloadedError, FormatVersionError,
                                 InjectedKill, SnapshotCorruptError,
-                                StaleGenerationError)
+                                SnapshotDigestError, StaleGenerationError)
 from repro.fault.plan import FaultPlan, FaultSpec, active, fire, install
 
 __all__ = ["FaultPlan", "FaultSpec", "install", "active", "fire",
-           "SnapshotCorruptError", "FormatVersionError",
-           "StaleGenerationError", "EngineOverloadedError", "InjectedKill"]
+           "SnapshotCorruptError", "SnapshotDigestError",
+           "FormatVersionError", "StaleGenerationError",
+           "EngineOverloadedError", "InjectedKill"]

@@ -23,14 +23,25 @@ discriminate:
 """
 from __future__ import annotations
 
-__all__ = ["SnapshotCorruptError", "FormatVersionError",
-           "StaleGenerationError", "EngineOverloadedError", "InjectedKill"]
+__all__ = ["SnapshotCorruptError", "SnapshotDigestError",
+           "FormatVersionError", "StaleGenerationError",
+           "EngineOverloadedError", "InjectedKill"]
 
 
 class SnapshotCorruptError(ValueError):
     """A checkpoint / φ snapshot whose bytes cannot be trusted:
     truncated archive, flipped payload byte, missing meta, digest
     mismatch.  ``ValueError`` ancestry keeps pre-typed callers working."""
+
+
+class SnapshotDigestError(SnapshotCorruptError):
+    """*Proven-permanent* corruption: the file parsed end to end but its
+    content contradicts its own metadata (payload digest mismatch,
+    shape-vs-meta skew).  Writers rename atomically (``_atomic_savez``),
+    so a complete parse rules out the mid-write race that makes plain
+    :class:`SnapshotCorruptError` worth retrying — retry logic must fail
+    fast on this subclass (rotation fallback still skips the slot: the
+    ``SnapshotCorruptError`` ancestry is what it catches)."""
 
 
 class FormatVersionError(ValueError):

@@ -14,10 +14,15 @@ joins, every answer is audited:
   with the *serial* ``core/heldout.py:fold_in`` against the φ of the
   generation the answer claims, under the same base key.  Batched padded
   serving must be bit-exact, across every generation, for the whole run.
+* **fused×scan exactness** — every unique ``(composition, key,
+  generation)`` the live engine answered is replayed offline through a
+  second engine built with the *other* ``inner_mode``; the Pallas
+  fold-in kernel and the scan path must agree bit-for-bit.
 
-Queries rotate through a fixed document pool (including an empty and a
-single-token document) and a small key cycle, so serial references are
-cached by ``(composition, key, generation)`` and the audit stays cheap.
+Queries rotate through a fixed document pool (including an empty, a
+single-token, and a long outlier document that forces length-bucket
+splits) and a small key cycle, so serial references are cached by
+``(composition, key, generation)`` and the audit stays cheap.
 
 Sets ``XLA_FLAGS`` *before* importing jax and prints a JSON report as
 the last stdout line, like the other ``launch/*_check`` harnesses; exits
@@ -47,6 +52,10 @@ def _parse(argv):
     p.add_argument("--key-cycle", type=int, default=5)
     p.add_argument("--pool", type=int, default=12,
                    help="fixed document-pool size")
+    p.add_argument("--inner-mode", choices=("scan", "fused"),
+                   default="scan",
+                   help="fold-in path for the live engine; the audit "
+                        "replays answers through the other mode")
     return p.parse_args(argv)
 
 
@@ -72,11 +81,14 @@ def _build_trainer(args):
 
 def _doc_pool(corpus, n_pool: int):
     """Fixed query documents over the trained vocabulary; slots 0 and 1
-    are the degenerate cases (empty, single-token)."""
+    are the degenerate cases (empty, single-token) and slot 2 is a long
+    outlier that lands in its own length bucket."""
     import numpy as np
     rng = np.random.default_rng(7)
     words = np.unique(np.asarray(corpus.word_ids))
-    lens = [0, 1] + [int(rng.integers(2, 24)) for _ in range(n_pool - 2)]
+    # 200 tokens → a pow-2 bucket >4x any median the short docs can
+    # produce, so the engine's outlier rule always splits it off
+    lens = [0, 1, 200] + [int(rng.integers(2, 24)) for _ in range(n_pool - 3)]
     return [rng.choice(words, size=n, replace=True).astype(np.int32)
             for n in lens]
 
@@ -91,7 +103,8 @@ def run_check(args) -> dict:
 
     lda, corpus = _build_trainer(args)
     engine = LdaEngine(sweeps=args.fold_sweeps, tile=4,
-                       max_batch=max(args.batch, 8))
+                       max_batch=max(args.batch, 8),
+                       inner_mode=args.inner_mode)
 
     published = {}            # generation -> {"digest", "phi", "alpha"}
     pub_lock = threading.Lock()
@@ -102,7 +115,8 @@ def run_check(args) -> dict:
             published[gen] = {"digest": snap.digest,
                               "phi": np.asarray(snap.phi),
                               "alpha": snap.alpha,
-                              "sweep": snap.meta.get("sweep")}
+                              "sweep": snap.meta.get("sweep"),
+                              "snap": snap}
         return gen
 
     # generation 1: the init-state counts, published before serving opens
@@ -173,7 +187,35 @@ def run_check(args) -> dict:
         if not np.allclose(a["theta"].sum(1), 1.0, atol=1e-5):
             theta_bad += 1
 
+    # ---- fused×scan exactness ------------------------------------------
+    # Replay every unique (composition, key, generation) through an
+    # offline engine on the OTHER inner mode; the Pallas kernel and the
+    # scan path must be bit-identical through the whole serving stack
+    # (bucketing, padding, publish generations included).
+    other = "fused" if args.inner_mode == "scan" else "scan"
+    cross_eng = LdaEngine(sweeps=args.fold_sweeps, tile=4,
+                          max_batch=max(args.batch, 8), inner_mode=other)
+    triples = sorted({(a["comp"], a["kidx"], a["generation"])
+                      for a in answers if a["generation"] in published})
+    by_triple = {(a["comp"], a["kidx"], a["generation"]): a
+                 for a in answers}
+    cross_mismatch = 0
+    for gen in sorted(published):
+        if not any(t[2] == gen for t in triples):
+            continue
+        cross_eng.publish(published[gen]["snap"])
+        for comp, kidx, g in triples:
+            if g != gen:
+                continue
+            docs = tuple(pool[(comp + j) % P] for j in range(b))
+            res = cross_eng.query(TopicQuery(
+                docs=docs, key=jax.random.key(1000 + kidx)))
+            if not np.array_equal(res.n_td,
+                                  by_triple[(comp, kidx, gen)]["n_td"]):
+                cross_mismatch += 1
+
     ok = (torn == 0 and mismatch == 0 and theta_bad == 0
+          and cross_mismatch == 0
           and not trainer_exc and len(published) >= 3
           and len(answers) >= args.queries
           and len(gens_seen) >= 2)          # actually interleaved
@@ -181,6 +223,9 @@ def run_check(args) -> dict:
             "generations_seen": gens_seen, "torn_reads": torn,
             "fold_in_mismatch": mismatch, "theta_rows_bad": theta_bad,
             "serial_refs_computed": len(ref_cache),
+            "inner_mode": args.inner_mode,
+            "cross_mode_replays": len(triples),
+            "cross_mode_mismatch": cross_mismatch,
             "trainer_error": trainer_exc[0] if trainer_exc else None,
             "all_ok": ok}
 

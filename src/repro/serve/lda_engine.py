@@ -51,9 +51,12 @@ import numpy as np
 from repro.core.heldout import (_phi_hat, doc_fold_key, fold_in_batch,
                                 theta_from_counts)
 from repro.data.sharding import _pow2_ceil
+from repro.kernels.fold_in import fold_in_fused
+from repro.kernels.fused_sweep.ops import default_interpret
 from repro.fault import fire as _fault_fire
 from repro.fault.errors import (EngineOverloadedError, FormatVersionError,
-                                SnapshotCorruptError, StaleGenerationError)
+                                SnapshotCorruptError, SnapshotDigestError,
+                                StaleGenerationError)
 from repro.train.checkpoint import (PHI_FORMAT_VERSION, load_phi, phi_digest,
                                     save_phi)
 
@@ -116,15 +119,19 @@ def fetch_snapshot(path: str, *, retries: int = 3, backoff_s: float = 0.05,
     (DESIGN.md §11) — the reader-side fetch a serving fleet points at a
     trainer's publish directory.
 
-    Retried: ``FileNotFoundError`` (not published yet) and
+    Retried: ``FileNotFoundError`` (not published yet) and plain
     :class:`SnapshotCorruptError` (a publisher mid-write, a torn copy —
     transient by assumption, up to ``retries`` extra attempts, backoff
     doubling from ``backoff_s`` and capped at ``max_backoff_s``).
     **Never** retried: :class:`FormatVersionError` — a version skew is a
-    deployment bug, and hammering the file cannot fix it.  Each attempt
-    fires the ``"serve.fetch"`` fault site (counter-indexed across
-    calls), which is how the chaos harness makes the first N fetches
-    fail deterministically."""
+    deployment bug, and hammering the file cannot fix it — and
+    :class:`SnapshotDigestError` — a digest/shape contradiction on a
+    file that parsed end to end is proven-permanent damage (publishes
+    rename atomically, so a complete parse rules out the mid-write
+    race), and burning the backoff budget on it only delays the alarm.
+    Each attempt fires the ``"serve.fetch"`` fault site (counter-indexed
+    across calls), which is how the chaos harness makes the first N
+    fetches fail deterministically."""
     if retries < 0:
         raise ValueError(f"retries must be >= 0, got {retries}")
     delay = backoff_s
@@ -132,7 +139,7 @@ def fetch_snapshot(path: str, *, retries: int = 3, backoff_s: float = 0.05,
         try:
             _fault_fire("serve.fetch", path=path)
             return PhiSnapshot.load(path)
-        except FormatVersionError:
+        except (FormatVersionError, SnapshotDigestError):
             raise
         except (FileNotFoundError, SnapshotCorruptError):
             if attempt == retries:
@@ -227,10 +234,21 @@ class _Buffer:
 # ---------------------------------------------------------------------------
 # Engine
 # ---------------------------------------------------------------------------
-@partial(jax.jit, static_argnames=("sweeps",))
-def _theta_kernel(word_ids, valid, phi, alpha, doc_keys, sweeps):
-    n_td = fold_in_batch(word_ids, valid, phi, alpha, doc_keys, sweeps)
+@partial(jax.jit, static_argnames=("sweeps", "inner_mode", "interpret"))
+def _theta_kernel(word_ids, valid, phi, alpha, doc_keys, sweeps,
+                  inner_mode="scan", interpret=True):
+    if inner_mode == "fused":
+        n_td = fold_in_fused(word_ids, valid, phi, alpha, doc_keys,
+                             sweeps, interpret=interpret)
+    else:
+        n_td = fold_in_batch(word_ids, valid, phi, alpha, doc_keys, sweeps)
     return n_td, theta_from_counts(n_td, alpha)
+
+
+def _bucket_len(n: int, tile: int) -> int:
+    """The padded row length ``pack_docs`` would give a lone ``n``-token
+    document — the pow-2 length bucket ``query`` groups by."""
+    return _pow2_ceil(max(-(-n // tile), 1)) * tile
 
 
 class LdaEngine:
@@ -251,15 +269,29 @@ class LdaEngine:
     complete but with fold-in sweeps capped at ``degraded_sweeps``
     (graceful degradation before shedding).  Both default to ``None`` —
     no admission control, the pre-§11 behavior.
+
+    ``inner_mode`` picks the fold-in implementation: ``"scan"`` (the
+    vmapped ``lax.scan`` reference) or ``"fused"`` (the Pallas kernel,
+    ``kernels/fold_in`` — bit-identical per document, DESIGN.md §10a).
+    ``interpret=None`` resolves to compiled-on-TPU / interpreted
+    elsewhere.  Queries are length-bucketed: docs whose pow-2 padded
+    length (what ``pack_docs`` would give them alone) exceeds 4x the
+    batch's median bucket dispatch in their own sub-batch, so one long
+    outlier cannot inflate every row's padded sweep work — while
+    ordinary mixed-length batches still run as a single dispatch.
     """
 
     def __init__(self, snapshot: PhiSnapshot | None = None, *,
                  sweeps: int = 20, tile: int = 8, max_batch: int = 64,
                  default_key=None, max_pending: int | None = None,
                  degrade_pending: int | None = None,
-                 degraded_sweeps: int = 4):
+                 degraded_sweeps: int = 4, inner_mode: str = "scan",
+                 interpret: bool | None = None):
         if sweeps < 1:
             raise ValueError(f"sweeps must be >= 1, got {sweeps}")
+        if inner_mode not in ("scan", "fused"):
+            raise ValueError(
+                f"inner_mode must be 'scan' or 'fused', got {inner_mode!r}")
         if max_batch < 1 or max_batch & (max_batch - 1):
             raise ValueError(
                 f"max_batch must be a power of two (jit-cache bucketing), "
@@ -275,6 +307,11 @@ class LdaEngine:
         self.sweeps = int(sweeps)
         self.tile = int(tile)
         self.max_batch = int(max_batch)
+        self.inner_mode = inner_mode
+        # Compiled on TPU, interpreted elsewhere (fused_sweep.ops) —
+        # resolved once so every query hits the same jit bucket.
+        self.interpret = (default_interpret() if interpret is None
+                          else bool(interpret))
         self.max_pending = max_pending
         self.degrade_pending = degrade_pending
         self.degraded_sweeps = int(degraded_sweeps)
@@ -400,20 +437,48 @@ class LdaEngine:
         if degraded:
             sweeps = min(sweeps, self.degraded_sweeps)
         try:
-            thetas, counts, shapes = [], [], []
-            for lo in range(0, len(docs), self.max_batch):
-                chunk = docs[lo:lo + self.max_batch]
-                word_ids, valid, n_real = pack_docs(chunk, tile=self.tile)
-                doc_keys = jax.vmap(doc_fold_key, in_axes=(None, 0))(
-                    key, jnp.arange(lo, lo + word_ids.shape[0],
-                                    dtype=jnp.int32))
-                n_td, theta = _theta_kernel(jnp.asarray(word_ids),
-                                            jnp.asarray(valid), buf.phi,
-                                            buf.alpha, doc_keys, sweeps)
-                jax.block_until_ready(theta)
-                thetas.append(np.asarray(theta)[:n_real])
-                counts.append(np.asarray(n_td)[:n_real])
-                shapes.append(word_ids.shape)
+            T = buf.phi.shape[1]
+            theta_out = np.empty((len(docs), T), np.float32)
+            ntd_out = np.empty((len(docs), T), np.int32)
+            shapes = []
+            # Length-bucketed sub-batches: one outlier document must not
+            # inflate L for every co-batched row (padded work is D_pad·L
+            # per sweep).  Splitting is not free either — every group is
+            # its own kernel dispatch — so only true outliers split off:
+            # docs whose pow-2 length bucket stays within 4x the batch's
+            # median bucket run as one group (padded to that group's
+            # widest doc, the pre-split behaviour), and each bucket past
+            # the cutoff dispatches on its own.  Per-doc bit-exactness
+            # is unchanged: row RNG is keyed by the doc's *query* index
+            # (batch-independent by the counter-mode contract), so the
+            # grouping cannot perturb any row.
+            blens = [_bucket_len(d.size, self.tile) for d in docs]
+            cutoff = 4 * sorted(blens)[len(blens) // 2]
+            main_L = max((b for b in blens if b <= cutoff), default=0)
+            by_bucket: dict[int, list[int]] = {}
+            for i, b in enumerate(blens):
+                by_bucket.setdefault(b if b > cutoff else main_L,
+                                     []).append(i)
+            for _, idxs in sorted(by_bucket.items()):
+                for lo in range(0, len(idxs), self.max_batch):
+                    chunk = idxs[lo:lo + self.max_batch]
+                    word_ids, valid, n_real = pack_docs(
+                        [docs[i] for i in chunk], tile=self.tile)
+                    # pad rows are all-invalid; their key index is inert
+                    idx = np.asarray(
+                        chunk + [chunk[-1]] * (word_ids.shape[0] - n_real),
+                        np.int32)
+                    doc_keys = jax.vmap(doc_fold_key, in_axes=(None, 0))(
+                        key, jnp.asarray(idx))
+                    n_td, theta = _theta_kernel(
+                        jnp.asarray(word_ids), jnp.asarray(valid),
+                        buf.phi, buf.alpha, doc_keys, sweeps,
+                        inner_mode=self.inner_mode,
+                        interpret=self.interpret)
+                    jax.block_until_ready(theta)
+                    theta_out[chunk] = np.asarray(theta)[:n_real]
+                    ntd_out[chunk] = np.asarray(n_td)[:n_real]
+                    shapes.append(word_ids.shape)
             with self._stats_lock:
                 self._queries += 1
                 shed_total, degraded_total = self._shed, self._degraded
@@ -421,8 +486,7 @@ class LdaEngine:
             with self._stats_lock:
                 self._pending -= 1
         return TopicResult(
-            theta=np.concatenate(thetas, 0),
-            n_td=np.concatenate(counts, 0),
+            theta=theta_out, n_td=ntd_out,
             generation=buf.generation, digest=buf.digest,
             latency_s=time.perf_counter() - t0,
             batch_shape=shapes[0] if len(shapes) == 1 else tuple(shapes),

@@ -47,7 +47,8 @@ import jax
 import numpy as np
 
 from repro.fault import fire as _fault_fire
-from repro.fault.errors import FormatVersionError, SnapshotCorruptError
+from repro.fault.errors import (FormatVersionError, SnapshotCorruptError,
+                                SnapshotDigestError)
 
 __all__ = ["save", "restore", "save_chain", "load_chain", "save_phi",
            "load_phi", "CheckpointRotation", "CHAIN_FORMAT_VERSION",
@@ -159,7 +160,7 @@ def _verify_payload_digests(path: str, state: dict, meta: dict) -> None:
     for k, arr in state.items():
         exp = want.get(k)
         if exp is not None and _array_digest(arr) != exp:
-            raise SnapshotCorruptError(
+            raise SnapshotDigestError(
                 f"{path}: payload {k!r} sha256 digest mismatch — corrupt "
                 f"or truncated entry")
 
@@ -392,12 +393,15 @@ def load_phi(path: str) -> tuple[np.ndarray, dict]:
     except Exception as e:      # BadZipFile, zlib/OSError, bad JSON, ...
         raise SnapshotCorruptError(
             f"unreadable φ snapshot {path}: {e!r}") from e
+    # Past this point the archive parsed end to end — writers rename
+    # atomically, so content-vs-meta contradictions are permanent damage
+    # (SnapshotDigestError), not a publisher mid-write worth retrying.
     if phi.shape != (meta.get("J"), meta.get("T")):
-        raise SnapshotCorruptError(
+        raise SnapshotDigestError(
             f"φ snapshot shape {phi.shape} does not match its meta "
             f"({meta.get('J')}, {meta.get('T')})")
     got = phi_digest(phi)
     if meta.get("digest") not in (None, got):
-        raise SnapshotCorruptError("φ snapshot digest mismatch — corrupt "
-                                   "or hand-edited table")
+        raise SnapshotDigestError("φ snapshot digest mismatch — corrupt "
+                                  "or hand-edited table")
     return phi, meta

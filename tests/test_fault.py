@@ -436,6 +436,63 @@ class TestFetchSnapshot:
                            sleep=lambda _: None)
         assert plan._counters["serve.fetch"] == 1
 
+    def test_digest_mismatch_never_retried(self, tmp_path, snaps):
+        # The retry-taxonomy bug (ISSUE 10): a digest mismatch on an
+        # atomically-renamed, fully-parsed file is permanent damage, yet
+        # fetch_snapshot used to burn its whole backoff budget on it.
+        from repro.fault.errors import SnapshotDigestError
+        from repro.serve.lda_engine import fetch_snapshot
+        p = str(tmp_path / "phi.npz")
+        snaps[0].save(p)
+        with np.load(p) as data:
+            payload = {k: data[k] for k in data.files}
+        meta = json.loads(bytes(
+            payload[checkpoint._PHI_META_KEY].tobytes()).decode())
+        meta["digest"] = "0" * 64
+        payload[checkpoint._PHI_META_KEY] = np.frombuffer(
+            json.dumps(meta).encode(), np.uint8)
+        np.savez(p, **payload)
+        plan = FaultPlan()                     # counts fetch attempts
+        slept = []
+        with fault.install(plan), pytest.raises(SnapshotDigestError):
+            fetch_snapshot(p, retries=5, backoff_s=0.01,
+                           sleep=slept.append)
+        assert plan._counters["serve.fetch"] == 1   # failed fast
+        assert slept == []                     # no backoff budget burned
+
+    def test_meta_shape_skew_never_retried(self, tmp_path, snaps):
+        # Same taxonomy for the other proven-permanent damage: a table
+        # whose shape contradicts its own meta after a complete parse.
+        from repro.fault.errors import SnapshotDigestError
+        from repro.serve.lda_engine import fetch_snapshot
+        p = str(tmp_path / "phi.npz")
+        snaps[0].save(p)
+        with np.load(p) as data:
+            payload = {k: data[k] for k in data.files}
+        payload["phi"] = payload["phi"][:-1]   # drop a row; meta J stale
+        np.savez(p, **payload)
+        plan = FaultPlan()
+        with fault.install(plan), pytest.raises(SnapshotDigestError):
+            fetch_snapshot(p, retries=5, backoff_s=0.0,
+                           sleep=lambda _: None)
+        assert plan._counters["serve.fetch"] == 1
+
+    def test_injected_failures_stay_retryable(self, tmp_path, snaps):
+        # The chaos harness's injected "fail" faults model transient
+        # fetch damage (plain SnapshotCorruptError) and must keep
+        # consuming retries — the fail-fast path is only for the
+        # proven-permanent SnapshotDigestError subclass.
+        from repro.fault.errors import SnapshotDigestError
+        from repro.serve.lda_engine import fetch_snapshot
+        p = str(tmp_path / "phi.npz")
+        snaps[0].save(p)
+        plan = FaultPlan([FaultSpec("fail", "serve.fetch", at=0, count=1)])
+        with fault.install(plan):
+            snap = fetch_snapshot(p, retries=1, backoff_s=0.0,
+                                  sleep=lambda _: None)
+        assert snap.digest == snaps[0].digest
+        assert issubclass(SnapshotDigestError, SnapshotCorruptError)
+
     def test_missing_file_retried_until_it_appears(self, tmp_path, snaps):
         from repro.serve.lda_engine import fetch_snapshot
         p = str(tmp_path / "late.npz")

@@ -155,6 +155,171 @@ class TestFoldInParity:
             pack_docs([])
 
 
+class TestFusedInnerMode:
+    """`LdaEngine(inner_mode="fused")` — the Pallas fold-in kernel on
+    the serving path (DESIGN.md §10a) — answers bit-identically to
+    `inner_mode="scan"` and to the serial reference."""
+
+    def _engines(self, snap, **kw):
+        return (LdaEngine(snap, sweeps=SWEEPS, tile=4, max_batch=4,
+                          inner_mode="scan", **kw),
+                LdaEngine(snap, sweeps=SWEEPS, tile=4, max_batch=4,
+                          inner_mode="fused", **kw))
+
+    def test_fused_matches_scan_and_serial(self, snap):
+        e_scan, e_fused = self._engines(snap)
+        docs = _mk_docs(4, [0, 1, 21, 5, 3, 17, 2])
+        key = jax.random.key(77)
+        rs = e_scan.query(TopicQuery(docs=tuple(docs), key=key))
+        rf = e_fused.query(TopicQuery(docs=tuple(docs), key=key))
+        np.testing.assert_array_equal(rs.n_td, rf.n_td)
+        np.testing.assert_array_equal(rs.theta, rf.theta)
+        assert rs.batch_shape == rf.batch_shape
+        ref = _serial(docs, jnp.asarray(snap.phi), key)
+        for i, d in enumerate(docs):
+            if d.size:
+                np.testing.assert_array_equal(rf.n_td[i], ref[i])
+            else:
+                assert rf.n_td[i].sum() == 0
+
+    def test_fused_across_generations(self, snap):
+        e_scan, e_fused = self._engines(snap)
+        rng = np.random.default_rng(23)
+        docs = tuple(_mk_docs(5, [2, 9, 0, 6]))
+        for _ in range(2):
+            n_wt = rng.integers(0, 40, (J, T))
+            s = snapshot_from_counts(n_wt, n_wt.sum(0), alpha=ALPHA,
+                                     beta=0.01)
+            e_scan.publish(s)
+            e_fused.publish(s)
+            rs = e_scan.query(TopicQuery(docs=docs, key=jax.random.key(3)))
+            rf = e_fused.query(TopicQuery(docs=docs, key=jax.random.key(3)))
+            assert rs.generation == rf.generation
+            np.testing.assert_array_equal(rs.n_td, rf.n_td)
+
+    def test_inner_mode_validation(self, snap):
+        with pytest.raises(ValueError, match="inner_mode"):
+            LdaEngine(snap, inner_mode="alias")
+
+
+class TestLengthBucketing:
+    """The pack_docs outlier-padding fix: `query` splits off docs whose
+    pow-2 length bucket exceeds 4x the batch's median bucket, so one
+    long document cannot inflate every co-batched row's padded width —
+    while ordinary mixed-length batches stay a single dispatch; per-doc
+    bit-exactness is preserved (row RNG is batch-independent by
+    contract)."""
+
+    def test_outlier_does_not_inflate_short_docs(self, snap):
+        eng = LdaEngine(snap, sweeps=2, tile=4, max_batch=8)
+        docs = _mk_docs(7, [1, 2, 3, 300])
+        res = eng.query(TopicQuery(docs=tuple(docs), key=jax.random.key(1)))
+        shapes = (res.batch_shape if isinstance(res.batch_shape[0], tuple)
+                  else (res.batch_shape,))
+        assert len(shapes) == 2                       # two buckets
+        short, long = sorted(shapes, key=lambda s: s[1])
+        assert short == (4, 4)                        # 3 short docs, L=4
+        assert long[0] == 1 and long[1] >= 300        # outlier alone
+        padded = sum(D * L for D, L in shapes)
+        naive_D, naive_L = 4, 512                     # one-pack shape
+        assert padded < naive_D * naive_L / 3         # >3x padding saved
+
+    def test_no_outlier_single_dispatch(self, snap):
+        """Mixed lengths within 4x of the median bucket run as ONE
+        sub-batch — every group is its own kernel dispatch, so the rule
+        must not shred ordinary traffic into per-bucket launches."""
+        eng = LdaEngine(snap, sweeps=2, tile=4, max_batch=8)
+        res = eng.query(TopicQuery(docs=tuple(_mk_docs(3, [2, 7, 12, 15])),
+                                   key=jax.random.key(4)))
+        assert isinstance(res.batch_shape[0], int)    # one (D, L) pack
+
+    @pytest.mark.parametrize("inner_mode", ["scan", "fused"])
+    def test_mixed_length_parity(self, snap, inner_mode):
+        """Bucketed (reordered, split) batches answer bit-identically to
+        the serial reference, for both inner modes."""
+        eng = LdaEngine(snap, sweeps=SWEEPS, tile=4, max_batch=2,
+                        inner_mode=inner_mode)
+        docs = _mk_docs(8, [40, 1, 0, 6, 2, 33, 5])
+        key = jax.random.key(19)
+        res = eng.query(TopicQuery(docs=tuple(docs), key=key))
+        ref = _serial(docs, jnp.asarray(snap.phi), key)
+        for i, d in enumerate(docs):
+            if d.size:
+                np.testing.assert_array_equal(res.n_td[i], ref[i], err_msg=f"doc {i}")
+            else:
+                assert res.n_td[i].sum() == 0
+        np.testing.assert_allclose(res.theta.sum(1), 1.0, atol=1e-5)
+
+    def test_bucketing_invariant_to_doc_order(self, snap):
+        """The same doc at the same query index answers identically no
+        matter how its neighbours shuffle it between sub-batches."""
+        eng = LdaEngine(snap, sweeps=2, tile=4, max_batch=4)
+        key = jax.random.key(11)
+        docs = _mk_docs(9, [5, 60, 2])
+        full = eng.query(TopicQuery(docs=tuple(docs), key=key))
+        # doc 1 alone under its original stream: bit-equal counts
+        w = np.zeros((1, 64), np.int32)
+        v = np.zeros((1, 64), bool)
+        w[0, :60], v[0, :60] = docs[1], True
+        alone = np.asarray(fold_in_batch(
+            jnp.asarray(w), jnp.asarray(v), jnp.asarray(snap.phi), ALPHA,
+            doc_fold_key(key, 1)[None], 2))
+        np.testing.assert_array_equal(full.n_td[1], alone[0])
+
+
+class TestThetaKernelCache:
+    def test_same_shape_bucket_no_retrace(self, snap):
+        """Repeat queries with the same (D_pad, L, sweeps) bucket reuse
+        the jit cache — the bucketing exists so serving never compiles
+        per request."""
+        from repro.serve.lda_engine import _theta_kernel
+        eng = LdaEngine(snap, sweeps=2, tile=4, max_batch=8)
+        lengths = [3, 5, 2]
+        for i in range(2):                   # warm the bucket
+            eng.query(TopicQuery(docs=tuple(_mk_docs(i, lengths)),
+                                 key=jax.random.key(i)))
+        warm = _theta_kernel._cache_size()
+        for i in range(3):                   # same bucket, new data/keys
+            eng.query(TopicQuery(docs=tuple(_mk_docs(10 + i, lengths)),
+                                 key=jax.random.key(50 + i)))
+        assert _theta_kernel._cache_size() == warm
+        # a genuinely new length bucket does retrace; the cache is
+        # process-global, so probe with a bucket (L=256) no other test
+        # in this module touches
+        eng.query(TopicQuery(docs=tuple(_mk_docs(0, [133])),
+                             key=jax.random.key(0)))
+        assert _theta_kernel._cache_size() > warm
+
+
+class TestHeldoutEdgeCases:
+    def test_theta_from_counts_all_zero_rows_uniform(self):
+        n_td = jnp.zeros((3, T), jnp.int32)
+        th = np.asarray(theta_from_counts(n_td, ALPHA))
+        np.testing.assert_allclose(th, 1.0 / T, atol=1e-7)
+        np.testing.assert_allclose(th.sum(1), 1.0, atol=1e-6)
+        # mixed: a zero row next to a populated one
+        n_td = n_td.at[1, 2].set(5)
+        th = np.asarray(theta_from_counts(n_td, ALPHA))
+        np.testing.assert_allclose(th[0], 1.0 / T, atol=1e-7)
+        assert th[1, 2] > th[1, 0]
+
+    def test_single_token_docs_perplexity_is_one(self):
+        """Every token lands in the estimation half, the score half is
+        empty: perplexity must be exactly 1.0 (exp(-0/1)), not a raise
+        through fold_in's empty-token ValueError (pinned non-bug,
+        ISSUE 10)."""
+        from repro.core.heldout import document_completion_perplexity
+        from repro.data.corpus import Corpus
+        c = Corpus(doc_ids=np.arange(6, dtype=np.int32),
+                   word_ids=(np.arange(6, dtype=np.int32) % J),
+                   num_docs=6, num_words=J)
+        rng = np.random.default_rng(2)
+        n_wt = rng.integers(0, 40, (J, T))
+        ppl = document_completion_perplexity(
+            c, n_wt, n_wt.sum(0), alpha=ALPHA, beta=0.01, fold_sweeps=2)
+        assert ppl == 1.0
+
+
 class TestSnapshotPublish:
     def test_concurrent_publish_no_torn_reads(self, snap):
         """Interleave publishes with reader queries from two threads;

@@ -21,10 +21,13 @@
 #   tools/ci.sh --serve-smoke # serving smoke only: publish-while-serving
 #                             # harness (launch/serve_check: >=3 publishes
 #                             # interleaved with >=100 batched queries,
-#                             # zero torn reads, batched==serial bit-exact)
-#                             # + the fast tests/test_serving.py subset
-#                             # (also part of the default and --fast
-#                             # stage lists)
+#                             # zero torn reads, batched==serial bit-exact,
+#                             # every answer replayed through the other
+#                             # inner mode) + a fused-inner-mode leg (the
+#                             # Pallas fold-in kernel serves live, audited
+#                             # against the scan path) + the fast
+#                             # tests/test_serving.py subset (also part of
+#                             # the default and --fast stage lists)
 #   tools/ci.sh --chaos-smoke # fault-injection smoke only (DESIGN.md §11):
 #                             # chaos_check matrix (kill + corrupted newest
 #                             # rotation slot -> fallback resume bit-equal
@@ -97,11 +100,44 @@ rep = json.loads(sys.argv[1].strip().splitlines()[-1])
 print(f"serve smoke: {rep['publishes']} publishes, {rep['queries']} "
       f"queries across generations {rep['generations_seen']}, "
       f"{rep['torn_reads']} torn reads, "
-      f"{rep['fold_in_mismatch']} fold-in mismatches")
+      f"{rep['fold_in_mismatch']} fold-in mismatches, "
+      f"{rep['cross_mode_mismatch']}/{rep['cross_mode_replays']} "
+      f"cross-mode mismatches")
+sys.exit(0 if rep["all_ok"] else 1)
+PY
+    # fused parity leg: the Pallas fold-in kernel serves live while the
+    # audit replays every answer through the scan path (reduced query
+    # floor — the kernel math is identical, only the wiring differs)
+    echo "== serve smoke: fused inner mode (launch/serve_check --inner-mode fused) =="
+    out=$(python -m repro.launch.serve_check --inner-mode fused \
+        --queries 40) || {
+        echo "$out"; echo "serve smoke: fused leg exited non-zero"
+        return 1; }
+    python - "$out" <<'PY'
+import json, sys
+rep = json.loads(sys.argv[1].strip().splitlines()[-1])
+print(f"serve smoke [fused]: {rep['queries']} queries, "
+      f"{rep['fold_in_mismatch']} fold-in mismatches, "
+      f"{rep['cross_mode_mismatch']}/{rep['cross_mode_replays']} "
+      f"fused-vs-scan mismatches")
 sys.exit(0 if rep["all_ok"] else 1)
 PY
     echo "== serve tests: tests/test_serving.py (-m 'not slow') =="
     python -m pytest -q -m "not slow" tests/test_serving.py
+}
+
+no_bytecode_tracked() {
+    # Committed bytecode is a merge-conflict and staleness hazard; the
+    # tree must never track __pycache__/ or *.pyc (see .gitignore).
+    local tracked
+    tracked=$(git ls-files | grep -E '(^|/)__pycache__/|\.pyc$' || true)
+    if [[ -n "$tracked" ]]; then
+        echo "CI: compiled bytecode is tracked by git:"
+        echo "$tracked"
+        echo "run: git rm --cached <file> (patterns are in .gitignore)"
+        return 1
+    fi
+    echo "no tracked bytecode (__pycache__/, *.pyc clean)"
 }
 
 resume_smoke() {
@@ -177,6 +213,9 @@ print(f"chaos smoke [serve]: {rep['publishes_accepted']} accepted / "
 sys.exit(0 if rep["all_ok"] else 1)
 PY
 }
+
+echo "== hygiene: no compiled bytecode tracked by git =="
+no_bytecode_tracked
 
 if [[ "${1:-}" == "--bench-smoke" ]]; then
     bench_smoke
